@@ -1,0 +1,68 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    F64, FP16, FP16_FP32, FP32, flash_attention, naive_attention,
+    pasa_attention,
+)
+from repro.core.numerics import overflow_stats, rmse
+
+# the paper's random-benchmark geometry (B, N, S, D) = (1, 16, 1280, 128);
+# we keep N=8 to hold CPU runtime down without changing the statistics.
+SHAPE = (1, 8, 1280, 128)
+BETA = 0.984497
+BLOCK = 128
+
+
+def uniform_qkv(key, x0, am, shape=SHAPE):
+    ks = jax.random.split(key, 3)
+    mk = lambda k: jax.random.uniform(
+        k, shape, jnp.float32, minval=x0 - am, maxval=x0 + am
+    )
+    return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+
+def hybrid_qkv(key, x0, am, p=0.001, shape=SHAPE):
+    """N(x0, 1) + N(0, Am^2) * Bernoulli(p)  (paper Eq. 18)."""
+    ks = jax.random.split(key, 9)
+    def mk(i):
+        base = jax.random.normal(ks[i], shape) + x0
+        spike = jax.random.normal(ks[i + 3], shape) * am
+        mask = jax.random.bernoulli(ks[i + 6], p, shape)
+        return base + spike * mask
+    return mk(0), mk(1), mk(2)
+
+
+def three_way(q, k, v):
+    """(PASA fp16, FA fp16-fp32, FA fp32) outputs + fp64 golden."""
+    gold = naive_attention(
+        q.astype(jnp.float64), k.astype(jnp.float64), v.astype(jnp.float64),
+        dtype=jnp.float64,
+    )
+    o_pasa = pasa_attention(q, k, v, beta=BETA, policy=FP16, block_kv=BLOCK)
+    o_fa16 = flash_attention(q, k, v, policy=FP16_FP32, block_kv=BLOCK)
+    o_fa32 = flash_attention(q, k, v, policy=FP32, block_kv=BLOCK)
+    return gold, o_pasa, o_fa16, o_fa32
+
+
+def fmt_rmse(out, gold):
+    st = overflow_stats(out)
+    if st["overflow"]:
+        return f"NAN({st['nan_pct']:.2f}%)"
+    return f"{rmse(out, gold):.3e}"
+
+
+def timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us

@@ -1,0 +1,54 @@
+"""Aggregate experiments/dryrun/*.json into the roofline table
+(EXPERIMENTS.md section Roofline is generated from this)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = (
+    "arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+    "collective_s", "roofline_fraction", "useful_flops_ratio",
+)
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def report(out_dir="experiments/dryrun", mesh_filter="16x16"):
+    recs = load(out_dir)
+    rows = []
+    print(f"\n== Roofline table (mesh {mesh_filter}; seconds per step) ==")
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9} {'mem(s)':>9} "
+           f"{'coll(s)':>9} {'dominant':>10} {'roof%':>6} {'useful%':>8}")
+    print(hdr)
+    for r in recs:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:22s} {r['shape']:12s} {'skipped':>9} "
+                  f"({r['reason'][:48]}...)")
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0, "skipped"))
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} ERROR")
+            continue
+        t = r["roofline"]
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {t['compute_s']:9.4f} "
+            f"{t['memory_s']:9.4f} {t['collective_s']:9.4f} "
+            f"{t['dominant']:>10} {100*t['roofline_fraction']:6.1f} "
+            f"{100*r['useful_flops_ratio']:8.1f}"
+        )
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            t["collective_s"] * 1e6,
+            f"dom={t['dominant']}|roof={t['roofline_fraction']:.3f}",
+        ))
+    return rows

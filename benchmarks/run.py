@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # fp64 golden references
+
+    from benchmarks import paper_tables as T
+    from benchmarks import roofline_report as R
+
+    rows = []
+    rows += T.fig9a_uniform_mean_sweep()
+    rows += T.fig9b_uniform_amp_sweep()
+    rows += T.fig10_hybrid_sweeps()
+    rows += T.table3_invariance()
+    rows += T.table4_nan_stats()
+    rows += T.real_model_overflow()
+    rows += T.kernel_timing()
+    try:
+        rows += R.report()
+    except Exception as e:  # dry-run artifacts absent on a fresh checkout
+        print(f"[roofline report skipped: {e}]", file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

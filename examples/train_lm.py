@@ -1,0 +1,41 @@
+"""End-to-end driver: train a small LM for a few hundred steps with PASA
+attention, full fault-tolerant runtime, checkpointing, and a mesh.
+
+This is the (b)-deliverable end-to-end example: a ~100M-class model would use
+``--arch qwen3-4b`` without --reduced on a real slice; on CPU we train the
+reduced config for 300 steps and verify the loss drops on the structured
+synthetic corpus.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+
+    from repro.launch import train
+
+    losses = train.main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "64",
+        "--lr", "3e-3", "--warmup", "30",
+        "--mesh", "1x1",
+        "--ckpt-every", "100",
+        "--attention-impl", "pasa",
+        "--log-every", "25",
+    ])
+    drop = losses[0] - losses[-1]
+    print(f"loss drop over {args.steps} steps: {drop:.3f}")
+    if drop < 0.5:
+        sys.exit("training did not converge as expected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ModelConfig, shape_supported
+
+_ARCHS = [
+    "qwen3_14b",
+    "qwen3_32b",
+    "qwen1_5_32b",
+    "qwen3_4b",
+    "olmoe_1b_7b",
+    "kimi_k2_1t_a32b",
+    "llama_3_2_vision_90b",
+    "zamba2_1_2b",
+    "falcon_mamba_7b",
+    "whisper_large_v3",
+    "qwen2_7b",  # the paper's own validation model
+]
+
+# public ids use dashes/dots, module names use underscores
+_ID_TO_MODULE = {
+    "qwen3-14b": "qwen3_14b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "qwen3-4b": "qwen3_4b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-7b": "qwen2_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _ID_TO_MODULE if a != "qwen2-7b"]
+ALL_ARCHS: List[str] = list(_ID_TO_MODULE)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod_name = _ID_TO_MODULE.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG.validate()
+
+
+__all__ = [
+    "ALL_ARCHS", "ASSIGNED_ARCHS", "SHAPES", "ModelConfig", "get_config",
+    "shape_supported",
+]

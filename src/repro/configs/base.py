@@ -1,0 +1,177 @@
+"""Model/config schema shared by every architecture file.
+
+One :class:`ModelConfig` instance fully determines a model: family dispatch,
+tensor shapes, attention implementation (PASA is a first-class switch), and
+the dtype plan.  ``reduced()`` derives the CPU-smoke-test version of the same
+family; the full config is exercised only through the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    impl: str = "pasa"            # "pasa" | "flash" | "naive"
+    beta: float = 0.984497        # paper's adopted optimal-accuracy beta
+    policy: str = "bf16_fp32"     # precision allocation (core/precision.py)
+    pasa_policy: str = "fp16"     # policy when impl == "pasa" (paper: fully fp16)
+    block_kv: int = 128
+    use_gemm_shift: bool = True   # paper's batched-GEMM M path
+    # perf (EXPERIMENTS.md section Perf, iteration 1): expand KV heads to the
+    # full query head count in train/prefill so attention einsum batch dims
+    # are identically sharded -> no contraction-split all-reduces inside the
+    # KV-block scan.  Decode keeps the grouped layout (KV-cache bandwidth).
+    expand_kv: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # "gspmd": sharding-constraint dispatch (baseline; GSPMD replicates the
+    #          (E, C, D) scatter - measured pathological, EXPERIMENTS.md Perf
+    #          iteration 2).  "a2a": explicit shard_map expert parallelism
+    #          with all_to_all token routing (the production path).
+    dispatch: str = "a2a"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    version: int = 1              # 1 = Mamba-1 (falcon-mamba), 2 = Mamba-2 (zamba2)
+    head_p: int = 64              # mamba2 head size
+    chunk: int = 128              # mamba2 SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | vlm | hybrid | ssm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e6
+    norm_eps: float = 1.0e-6
+    tie_embeddings: bool = False
+
+    moe: MoEConfig = MoEConfig()
+    ssm: SSMConfig = SSMConfig()
+    attention: AttentionConfig = AttentionConfig()
+
+    # hybrid (zamba2): a weight-shared attention block every `attn_every`
+    # SSM layers (applied before layers 0, attn_every, 2*attn_every, ...).
+    attn_every: int = 0
+
+    # vlm (llama-3.2-vision): a cross-attention layer every `cross_attn_every`
+    # layers (layer i is cross-attn iff i % cross_attn_every == 0).
+    cross_attn_every: int = 0
+    n_image_tokens: int = 0
+    vision_dim: int = 0
+
+    # audio (whisper): encoder depth + precomputed-frame-embedding count.
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 0
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # adam moment dtype; bf16 for the 1T-param config (DESIGN.md section 6)
+    optimizer_dtype: str = "float32"
+
+    remat: bool = True
+    loss_chunk: int = 1024        # seq chunk for vocab-parallel CE
+
+    # supported dry-run shapes; long_500k only for ssm/hybrid (DESIGN.md sec 4)
+    supports_long_context: bool = False
+
+    def jnp_param_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def jnp_compute_dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def validate(self) -> "ModelConfig":
+        if self.family not in ("dense", "moe", "vlm", "hybrid", "ssm", "audio"):
+            raise ValueError(f"unknown family {self.family}")
+        if self.family != "ssm" and self.n_kv_heads and self.n_heads % self.n_kv_heads:
+            raise ValueError("n_heads must be a multiple of n_kv_heads")
+        if self.family == "moe" and not self.moe.n_experts:
+            raise ValueError("moe family needs moe.n_experts")
+        return self
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests (one fwd/train step)."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2 if self.family != "vlm" else 4),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            moe=dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+            ) if self.moe.n_experts else self.moe,
+            ssm=dataclasses.replace(
+                self.ssm, state=min(self.ssm.state, 8), head_p=8, chunk=16,
+            ),
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            cross_attn_every=min(self.cross_attn_every, 2)
+            if self.cross_attn_every else 0,
+            n_image_tokens=min(self.n_image_tokens, 16) or 0,
+            vision_dim=min(self.vision_dim, 32) or 0,
+            n_encoder_layers=min(self.n_encoder_layers, 2)
+            if self.n_encoder_layers else 0,
+            n_audio_frames=min(self.n_audio_frames, 16) or 0,
+            loss_chunk=32,
+            remat=False,
+        )
+
+
+# Shape cells assigned to every LM arch (the brief's shapes block).
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Is this (arch x shape) cell runnable?  (False, reason) if skipped."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "full-attention arch: 500k decode needs a sub-quadratic path "
+            "(run only for ssm/hybrid; DESIGN.md section 4)"
+        )
+    return True, ""

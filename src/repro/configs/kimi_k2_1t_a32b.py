@@ -1,0 +1,27 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, MoE 384 experts top-8  [arXiv:2501.kimi2; unverified].
+
+Trillion-param (paper-table) config.  Deviations recorded in DESIGN.md
+section 6: bf16 adam moments + bf16 params (1T params cannot carry fp32
+moments on 512 x 16 GiB), and the brief's GQA spec is used as written
+(the real K2 uses MLA).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=163840,
+    qk_norm=False,
+    rope_theta=5.0e4,
+    moe=MoEConfig(n_experts=384, top_k=8, capacity_factor=1.25),
+    param_dtype="bfloat16",
+    optimizer_dtype="bfloat16",
+)

@@ -1,0 +1,48 @@
+"""PASA core: the paper's contribution as a composable JAX feature."""
+
+from repro.core.beta import (
+    DEFAULT_BETA,
+    PAPER_BETAS,
+    invariance_rel_err,
+    optimal_beta,
+    practical_invariance,
+    solve_paper_betas,
+)
+from repro.core.naive import naive_attention
+from repro.core.pasa import (
+    AttnState,
+    blocked_attention,
+    finalize_state,
+    flash_attention,
+    init_state,
+    pasa_attention,
+    update_state,
+)
+from repro.core.precision import (
+    BF16_FP32,
+    F64,
+    FP16,
+    FP16_FP32,
+    FP32,
+    POLICIES,
+    PrecisionPolicy,
+    get_policy,
+)
+from repro.core.ring import make_ring_attention, ring_pasa_attention
+from repro.core.shifting import (
+    effective_invariance,
+    shift_kv_blocks,
+    shifting_matrix,
+    shifting_matrix_inverse,
+)
+
+__all__ = [
+    "AttnState", "BF16_FP32", "DEFAULT_BETA", "F64", "FP16", "FP16_FP32",
+    "FP32", "PAPER_BETAS", "POLICIES", "PrecisionPolicy", "blocked_attention",
+    "effective_invariance", "finalize_state", "flash_attention", "get_policy",
+    "init_state", "invariance_rel_err", "make_ring_attention",
+    "naive_attention", "optimal_beta", "pasa_attention",
+    "practical_invariance", "ring_pasa_attention", "shift_kv_blocks",
+    "shifting_matrix", "shifting_matrix_inverse", "solve_paper_betas",
+    "update_state",
+]

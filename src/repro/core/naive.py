@@ -1,0 +1,44 @@
+"""Materialized softmax(QK^T/sqrt(d))V golden reference (tests/benchmarks only)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def naive_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    kv_len: Optional[jnp.ndarray] = None,
+    q_offset: int = 0,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """O(S1*S2)-memory exact attention at high precision.
+
+    The normalization is the numerically-stable max-subtracted softmax; with
+    ``dtype=jnp.float64`` this is the oracle for all equivalence tests.
+    """
+    d = q.shape[-1]
+    q = q.astype(dtype)
+    k = k.astype(dtype)
+    v = v.astype(dtype)
+    s = jnp.einsum("...sd,...td->...st", q, k) / np.sqrt(d)
+    s1, s2 = s.shape[-2], s.shape[-1]
+    neg = jnp.asarray(-1e30 if dtype != jnp.float16 else -3e4, dtype)
+    if causal:
+        qp = jnp.arange(s1)[:, None] + q_offset
+        cp = jnp.arange(s2)[None, :]
+        s = jnp.where(qp >= cp, s, neg)
+    if kv_len is not None:
+        cp = jnp.arange(s2)
+        ok = cp < jnp.reshape(kv_len, jnp.shape(kv_len) + (1, 1))
+        s = jnp.where(ok, s, neg)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...st,...td->...sd", p, v)

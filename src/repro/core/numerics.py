@@ -1,0 +1,102 @@
+"""Numerical-quality instrumentation: RMSE (Eq. 19), overflow stats, resonance.
+
+These back the paper-table benchmarks (Figures 9-10, Table 4) and the
+real-model overflow probe (Section 3.3.2 / Figures 7, 11-14).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FP16_MAX = 65504.0
+
+
+def rmse(computed: jnp.ndarray, golden: jnp.ndarray) -> float:
+    """Relative RMSE, Eq. 19: ||O_c - O_g||_2 / ||O_g||_2 (fp64 reduction)."""
+    c = np.asarray(computed, np.float64)
+    g = np.asarray(golden, np.float64)
+    return float(np.linalg.norm(c - g) / np.linalg.norm(g))
+
+
+def overflow_stats(x: jnp.ndarray) -> Dict[str, float]:
+    """NaN/Inf census of an output tensor (Table 4 columns)."""
+    a = np.asarray(x, np.float32)
+    n = a.size
+    nan = int(np.isnan(a).sum())
+    inf = int(np.isinf(a).sum())
+    return {
+        "nan_pct": 100.0 * nan / n,
+        "inf_pct": 100.0 * inf / n,
+        "overflow": bool(nan or inf),
+        "max_abs_finite": float(np.nanmax(np.where(np.isfinite(a), np.abs(a), 0.0)))
+        if n
+        else 0.0,
+    }
+
+
+def score_overflow_probe(q: jnp.ndarray, k: jnp.ndarray) -> Dict[str, float]:
+    """The paper's instrumentation: does the RAW QK^T exceed the fp16 range?
+
+    (Section 3.3.2: 'The code checks whether the matmul result of QK^T exceeds
+    the maximum normal value - 65504 in FP16 precision.'  The static scaling
+    happens after the score store - Eqs. 1-2 - so the raw product is what
+    overflows; the paper's measured Qwen2 range is [-226360, 27757].)
+    """
+    s = jnp.einsum(
+        "...sd,...td->...st",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    )
+    s = np.asarray(s)
+    return {
+        "smax": float(s.max()),
+        "smin": float(s.min()),
+        "would_overflow_fp16": bool((np.abs(s) > FP16_MAX).any()),
+        "overflow_pct": float(100.0 * (np.abs(s) > FP16_MAX).mean()),
+    }
+
+
+def resonance_index(q: jnp.ndarray, k: jnp.ndarray) -> float:
+    """Quantify the paper's Q/K 'resonance' along the head dimension.
+
+    The paper defines resonance as phase coincidence (or a 180-degree shift)
+    between the query and key waveforms along the head dim, which amplifies
+    |QK^T|.  We measure it as the mean |cosine similarity| between per-token
+    q rows and the mean key row - 1.0 means perfectly (anti-)aligned.
+    """
+    qf = np.asarray(q, np.float64).reshape(-1, q.shape[-1])
+    kf = np.asarray(k, np.float64).reshape(-1, k.shape[-1])
+    kbar = kf.mean(0)
+    kn = kbar / (np.linalg.norm(kbar) + 1e-30)
+    qn = qf / (np.linalg.norm(qf, axis=1, keepdims=True) + 1e-30)
+    return float(np.abs(qn @ kn).mean())
+
+
+def make_resonant_qk(
+    key: jax.Array,
+    shape: Tuple[int, ...],
+    *,
+    amplitude: float = 50.0,
+    bias: float = 0.0,
+    anti: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Synthesize Q/K pairs exhibiting the paper's resonance mechanism.
+
+    A shared waveform along the head dimension (same 'frequency'), with K
+    either in phase (category 2, large positive scores) or 180 degrees out of
+    phase (category 1, large negative scores), plus noise.  Used by the
+    real-model overflow benchmark to reproduce Figures 7/11/12 structure
+    without downloading Qwen2/SVD checkpoints.
+    """
+    d = shape[-1]
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = jnp.arange(d, dtype=jnp.float32)
+    wave = jnp.sin(2.0 * jnp.pi * t * 4.0 / d)  # 4 periods across the head dim
+    q = amplitude * wave + jax.random.normal(k1, shape) + bias
+    phase = -1.0 if anti else 1.0
+    k_ = phase * amplitude * wave + jax.random.normal(k2, shape) + bias
+    return q.astype(jnp.float32), k_.astype(jnp.float32)

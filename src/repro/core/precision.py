@@ -1,0 +1,117 @@
+"""Precision-allocation policies for blocked attention (paper Figures 1-3).
+
+The paper studies three allocations of compute/storage precision inside
+FlashAttention:
+
+  * ``FP32``      - original FA: matrix-engine inputs are fp16/bf16 but the
+                    score matrix, softmax statistics and output accumulator are
+                    fp32 (Figure 1).  Numerically safe, memory-bound on NPU/TPU.
+  * ``FP16_FP32`` - partially low precision: the score matrix S leaving the
+                    matrix engine is stored fp16; softmax statistics stay fp32
+                    (Figure 2).  This is where overflow first appears.
+  * ``FP16``      - fully low precision: every intermediate (S, m, l, O-acc)
+                    is fp16 (Figure 3).  Highest throughput / lowest data
+                    movement; unusable without PASA.
+
+A policy is a small frozen dataclass threaded through every attention
+implementation (pure-JAX reference, Pallas kernels, models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+DType = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Where each intermediate of blocked attention lives.
+
+    Attributes:
+      name: human-readable policy id.
+      input_dtype: dtype Q/K/V are cast to before the matrix engine.
+      score_dtype: dtype of the score matrix S as it leaves the first GEMM
+        (the matrix engine accumulates wider internally; the *store* is what
+        overflows - matching NPU CUBE / TPU MXU semantics).
+      stat_dtype: dtype of softmax statistics (running max m, sum l, global
+        pseudo-average F).
+      acc_dtype: dtype of the output accumulator O.
+      out_dtype: dtype of the returned attention output.
+    """
+
+    name: str
+    input_dtype: DType
+    score_dtype: DType
+    stat_dtype: DType
+    acc_dtype: DType
+    out_dtype: DType
+
+    @property
+    def overflow_bound(self) -> float:
+        """Largest finite value representable by ``score_dtype``."""
+        return float(jnp.finfo(self.score_dtype).max)
+
+
+FP32 = PrecisionPolicy(
+    name="fp32",
+    input_dtype=jnp.float16,
+    score_dtype=jnp.float32,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    out_dtype=jnp.float16,
+)
+
+FP16_FP32 = PrecisionPolicy(
+    name="fp16_fp32",
+    input_dtype=jnp.float16,
+    score_dtype=jnp.float16,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    out_dtype=jnp.float16,
+)
+
+FP16 = PrecisionPolicy(
+    name="fp16",
+    input_dtype=jnp.float16,
+    score_dtype=jnp.float16,
+    stat_dtype=jnp.float16,
+    acc_dtype=jnp.float16,
+    out_dtype=jnp.float16,
+)
+
+# bf16 variant used by the surrounding training framework (TPU-native).  The
+# paper notes bf16 inputs should be converted to fp16 inside PASA for optimal
+# accuracy; this policy keeps bf16 end-to-end for the *non*-PASA fast path.
+BF16_FP32 = PrecisionPolicy(
+    name="bf16_fp32",
+    input_dtype=jnp.bfloat16,
+    score_dtype=jnp.float32,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    out_dtype=jnp.bfloat16,
+)
+
+# Exactness oracle (tests only).
+F64 = PrecisionPolicy(
+    name="f64",
+    input_dtype=jnp.float64,
+    score_dtype=jnp.float64,
+    stat_dtype=jnp.float64,
+    acc_dtype=jnp.float64,
+    out_dtype=jnp.float64,
+)
+
+POLICIES = {p.name: p for p in (FP32, FP16_FP32, FP16, BF16_FP32, F64)}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown precision policy {name!r}; have {sorted(POLICIES)}"
+        ) from e

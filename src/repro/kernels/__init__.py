@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the PASA hot paths (interpret-validated on CPU)."""
+
+from repro.kernels.ops import (
+    flash_attention,
+    pasa_attention,
+    pasa_decode,
+    shift_kv,
+)
+
+__all__ = ["flash_attention", "pasa_attention", "pasa_decode", "shift_kv"]

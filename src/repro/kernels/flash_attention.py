@@ -1,0 +1,13 @@
+"""FlashAttention-2 baseline Pallas kernel.
+
+The baseline is the *same* kernel as PASA with ``inva = 0`` and the static
+scaling applied post-GEMM at score precision (paper Eqs. 1-2) - this is what
+isolates the cost/benefit of the two PASA additions in benchmarks.  See
+kernels/pasa_attention.py for the kernel body and kernels/ops.py for the
+public wrapper; this module exists so `from repro.kernels.flash_attention
+import flash_attention` reads the way the paper's comparison tables do.
+"""
+
+from repro.kernels.ops import flash_attention
+
+__all__ = ["flash_attention"]

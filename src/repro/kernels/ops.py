@@ -1,0 +1,152 @@
+"""Public, jit'd entry points for the Pallas kernels.
+
+These wrappers own everything the raw kernels don't: precision-policy plumbing
+(the effective invariance of the rounded shifting matrix), the two-pass
+pipeline (shift-KV batched GEMM, then the fused attention sweep - Algorithm 1
+lines 5-7 then 8-23), GQA head-count checks, and the interpret switch used to
+validate on CPU.
+
+On a CPU backend ``interpret=True`` is mandatory (Pallas TPU kernels cannot
+lower to host HLO); models therefore route through repro.core's pure-JAX path
+unless ``attention_impl = "pallas"`` is selected on a TPU runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import beta as beta_lib
+from repro.core import shifting
+from repro.core.precision import FP16, PrecisionPolicy
+
+from repro.kernels import pasa_attention as _attn
+from repro.kernels import pasa_decode as _decode
+from repro.kernels import shift_kv as _shift
+
+
+def _check(q, k, v):
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError("expected (B, H, S, D) tensors")
+    if k.shape != v.shape:
+        raise ValueError(f"k/v shape mismatch: {k.shape} vs {v.shape}")
+    if q.shape[0] != k.shape[0] or q.shape[-1] != k.shape[-1]:
+        raise ValueError(f"q {q.shape} incompatible with kv {k.shape}")
+    if q.shape[1] % k.shape[1]:
+        raise ValueError(f"q heads {q.shape[1]} % kv heads {k.shape[1]} != 0")
+
+
+def pasa_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    block_q: int = 128,
+    block_kv: int = 128,
+    causal: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused PASA attention: shift-KV GEMM pass + online-recovery sweep.
+
+    q: (B, H, S1, D); k, v: (B, KVH, S2, D).  S1 % block_q == 0,
+    S2 % block_kv == 0 (kernels are the aligned fast path; ragged shapes go
+    through repro.core.blocked_attention).
+    """
+    _check(q, k, v)
+    d = q.shape[-1]
+    q = q.astype(policy.input_dtype)
+    k = k.astype(policy.input_dtype)
+    v = v.astype(policy.input_dtype)
+
+    if beta > 0.0:
+        m = shifting.shifting_matrix(block_kv, d, beta, dtype=policy.input_dtype)
+        k_sh = _shift.shift_kv_kernel_call(
+            m, k, block_kv=block_kv, out_dtype=policy.input_dtype,
+            interpret=interpret,
+        )
+        inva = shifting.effective_invariance(block_kv, d, beta, policy.input_dtype)
+        post_scale = 1.0
+    else:
+        k_sh = k
+        inva = 0.0
+        post_scale = 1.0 / float(d) ** 0.5
+
+    return _attn.attention_kernel_call(
+        q, k_sh, v,
+        inva=inva, post_scale=post_scale, causal=causal,
+        block_q=block_q, block_kv=block_kv,
+        stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
+        score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        interpret=interpret,
+    )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    policy: PrecisionPolicy = FP16,
+    block_q: int = 128,
+    block_kv: int = 128,
+    causal: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """FlashAttention-2 baseline kernel (identical tiling, no PASA steps)."""
+    return pasa_attention(
+        q, k, v, beta=0.0, policy=policy, block_q=block_q, block_kv=block_kv,
+        causal=causal, interpret=interpret,
+    )
+
+
+def pasa_decode(
+    q: jnp.ndarray,        # (B, KVH, G, D) grouped query heads, one token
+    k_cache: jnp.ndarray,  # (B, KVH, S2, D) zero-padded raw cache
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,   # (B,)
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """GQA flash-decode with inline algebraic PASA shifting.
+
+    The algebraic (masked-block-mean) shift uses the exact beta, so the ideal
+    invariance beta/(1-beta) is the correct recovery multiplier here (the
+    rounded-matrix correction of Appendix A applies only to the GEMM form).
+    """
+    if q.ndim != 4:
+        raise ValueError("q must be (B, KVH, G, D)")
+    inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
+    return _decode.decode_kernel_call(
+        q.astype(policy.input_dtype),
+        k_cache.astype(policy.input_dtype),
+        v_cache.astype(policy.input_dtype),
+        kv_len,
+        inva=inva, beta=beta, block_kv=block_kv,
+        stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
+        score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        interpret=interpret,
+    )
+
+
+def shift_kv(
+    k: jnp.ndarray,
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    block_kv: int = 128,
+    policy: PrecisionPolicy = FP16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Standalone K pre-processing (Algorithm 1 lines 5-7) as a kernel call."""
+    d = k.shape[-1]
+    m = shifting.shifting_matrix(block_kv, d, beta, dtype=policy.input_dtype)
+    return _shift.shift_kv_kernel_call(
+        m, k.astype(policy.input_dtype), block_kv=block_kv,
+        out_dtype=policy.input_dtype, interpret=interpret,
+    )

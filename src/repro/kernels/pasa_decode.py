@@ -1,0 +1,209 @@
+"""PASA flash-decode Pallas kernel (single new token vs a long KV cache).
+
+TPU adaptations (DESIGN.md section 2):
+
+  * **GQA group-as-rows**: the (tiny) per-step query for one KV head is the
+    (group, d) matrix of its grouped query heads, so the score GEMM is
+    (group x d) @ (d x block_kv) - the group dimension feeds the MXU's rows
+    instead of wasting them on a single query row.
+  * **Algebraic shifting**: decode is HBM-bandwidth-bound on the cache read;
+    recomputing K' = M K per step would re-do the prefill GEMM every token.
+    Instead the kernel subtracts beta * (masked block mean) inline - the same
+    math (Eq. 11 right-hand side), validated equal to the GEMM form.  The
+    block mean uses only the *valid* (pos < kv_len) columns, and the
+    recovery divides the masked row-sum by the same count, so Eq. 14 holds
+    exactly for the ragged tail block.
+  * kv_len arrives via scalar prefetch so the index map / masking see it
+    before the DMA pipeline issues.
+
+Grid: (B, KVH, Nkv) with Nkv innermost/arbitrary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -30000.0
+_LANES = 128
+
+
+def _decode_kernel(
+    kv_len_ref,            # scalar prefetch: (B,) int32
+    q_ref, k_ref, v_ref,   # (1,1,G,D), (1,1,bkv,D), (1,1,bkv,D)
+    o_ref,                 # (1,1,G,D)
+    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+    *,
+    inva: float,
+    beta: float,
+    block_kv: int,
+    n_kv: int,
+    stat_dtype,
+    acc_dtype,
+    score_dtype,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = kv_len_ref[b]
+    d = q_ref.shape[-1]
+    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        f_scr[...] = jnp.zeros_like(f_scr)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_kv < kv_len)
+    def _step():
+        q = q_ref[0, 0]        # (G, d)
+        k = k_ref[0, 0]        # (bkv, d)
+        v = v_ref[0, 0]        # (bkv, d)
+
+        cols = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_kv, 1), 0
+        )
+        valid = cols < kv_len                              # (bkv, 1)
+        count = jnp.sum(valid.astype(stat_dtype))
+
+        if beta > 0.0:
+            # Masked per-block key mean (algebraic shift; see module doc).
+            km = jnp.sum(
+                jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
+                keepdims=True,
+            ) / count                                      # (1, d)
+            k_sh = (
+                (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
+                * scale
+            ).astype(k.dtype)
+        else:
+            k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
+
+        s = jax.lax.dot_general(
+            q, k_sh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(score_dtype)                              # (G, bkv)
+
+        vmask = valid[:, 0][None, :]                       # (1, bkv)
+        # Masked row mean over the *valid* columns only (matches the shift).
+        sbar = (
+            jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
+                    keepdims=True) / count
+        )
+        s = jnp.where(vmask, s, jnp.asarray(NEG_BIG, s.dtype))
+
+        m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
+        p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
+        p = jnp.where(vmask, p, jnp.asarray(0.0, p.dtype))
+        l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        cnt = cnt_scr[0, 0]
+        first = cnt == 0
+
+        if inva != 0.0:
+            f_prev = f_scr[:, :1]
+            cntf = cnt.astype(stat_dtype)
+            f_new = (cntf * f_prev + sbar) / (cntf + 1.0)
+            dm_prev_c = jnp.asarray(inva, stat_dtype) * (f_prev - f_new)
+            dm_cur_c = jnp.asarray(inva, stat_dtype) * (sbar - f_new)
+            f_scr[...] = jnp.broadcast_to(f_new, f_scr.shape)
+        else:
+            dm_prev_c = jnp.zeros_like(m_prev)
+            dm_cur_c = jnp.zeros_like(m_loc)
+
+        cand_prev = jnp.where(
+            first, jnp.asarray(NEG_BIG, stat_dtype), m_prev + dm_prev_c
+        )
+        m_new = jnp.maximum(cand_prev, m_loc + dm_cur_c)
+        e_prev = jnp.exp(cand_prev - m_new)
+        e_cur = jnp.exp(m_loc + dm_cur_c - m_new)
+        l_new = e_prev * l_prev + e_cur * l_loc
+
+        pv = jax.lax.dot_general(
+            p, v.astype(p.dtype), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(acc_dtype)
+        acc_scr[...] = (
+            e_prev.astype(acc_dtype) * acc_scr[...] + e_cur.astype(acc_dtype) * pv
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        cnt_scr[0, 0] = cnt + 1
+
+    @pl.when(j == n_kv - 1)
+    def _fin():
+        l = l_scr[:, :1].astype(acc_dtype)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "inva", "beta", "block_kv", "stat_dtype", "acc_dtype", "score_dtype",
+        "out_dtype", "interpret",
+    ),
+)
+def decode_kernel_call(
+    q: jnp.ndarray,        # (B, KVH, G, D) - one new token, grouped heads
+    k_cache: jnp.ndarray,  # (B, KVH, S2, D) raw (unshifted) cache, zero-padded
+    v_cache: jnp.ndarray,  # (B, KVH, S2, D)
+    kv_len: jnp.ndarray,   # (B,) int32 valid lengths
+    *,
+    inva: float,
+    beta: float,
+    block_kv: int = 256,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    score_dtype=jnp.float16,
+    out_dtype=jnp.float16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, kvh, g, d = q.shape
+    s2 = k_cache.shape[2]
+    if s2 % block_kv:
+        raise ValueError(f"cache len {s2} %% block_kv {block_kv} != 0")
+    n_kv = s2 // block_kv
+
+    kernel = functools.partial(
+        _decode_kernel,
+        inva=inva, beta=beta, block_kv=block_kv, n_kv=n_kv,
+        stat_dtype=stat_dtype, acc_dtype=acc_dtype, score_dtype=score_dtype,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, kvl: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, j, kvl: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, j, kvl: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j, kvl: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.SMEM((1, 1), jnp.int32),
+            pltpu.VMEM((g, d), acc_dtype),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k_cache, v_cache)
+    return out

@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These intentionally re-derive the math independently of the kernels (using
+repro.core, which is itself validated against the materialized fp64 oracle),
+so kernel tests catch tiling/indexing bugs rather than shared-logic bugs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pasa as pasa_core
+from repro.core import shifting
+from repro.core.precision import PrecisionPolicy
+
+
+def _expand_kv(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B, KVH, S, D) -> (B, H, S, D) by repeating each KV head over its group."""
+    b, kvh, s, d = x.shape
+    g = h // kvh
+    return jnp.broadcast_to(x[:, :, None], (b, kvh, g, s, d)).reshape(b, h, s, d)
+
+
+def shift_kv_ref(m: jnp.ndarray, k: jnp.ndarray, block_kv: int,
+                 out_dtype=jnp.float16) -> jnp.ndarray:
+    """Oracle for kernels/shift_kv.py."""
+    return shifting.shift_kv_blocks(k, m, block_kv).astype(out_dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,           # (B, H, S1, D)
+    k: jnp.ndarray,           # (B, KVH, S2, D)  RAW keys
+    v: jnp.ndarray,
+    *,
+    beta: float,
+    policy: PrecisionPolicy,
+    block_kv: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Oracle for kernels/pasa_attention.py (+ flash baseline at beta=0).
+
+    Consumes RAW keys and applies the same GEMM shifting path as the kernel
+    pipeline (ops.pasa_attention shifts via the shift_kv kernel first).
+    """
+    h = q.shape[1]
+    ke = _expand_kv(k, h)
+    ve = _expand_kv(v, h)
+    return pasa_core.blocked_attention(
+        q, ke, ve, beta=beta, policy=policy, block_kv=block_kv, causal=causal,
+        use_gemm_shift=True,
+    )
+
+
+def decode_ref(
+    q: jnp.ndarray,        # (B, KVH, G, D)
+    k_cache: jnp.ndarray,  # (B, KVH, S2, D), zero-padded past kv_len
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,   # (B,)
+    *,
+    beta: float,
+    policy: PrecisionPolicy,
+    block_kv: int,
+) -> jnp.ndarray:
+    """Oracle for kernels/pasa_decode.py.
+
+    Mirrors the decode kernel's *algebraic masked-mean* shifting: within each
+    block, only valid (pos < kv_len) columns contribute to the mean, and the
+    ragged tail block's mean is over its valid count.
+    """
+    b, kvh, g, d = q.shape
+    s2 = k_cache.shape[2]
+    n_blocks = s2 // block_kv
+    st = policy.stat_dtype
+
+    cols = jnp.arange(s2)
+    valid = cols[None, :] < kv_len[:, None]                    # (B, S2)
+    vb = valid.reshape(b, n_blocks, block_kv)
+    kb = k_cache.reshape(b, kvh, n_blocks, block_kv, d).astype(st)
+    cnt = jnp.maximum(vb.sum(-1).astype(st), 1.0)              # (B, nb)
+    km = (
+        jnp.where(vb[:, None, :, :, None], kb, 0.0).sum(-2)
+        / cnt[:, None, :, None]
+    )                                                           # (B,KVH,nb,D)
+    if beta > 0.0:
+        k_sh = (kb - beta * km[..., None, :]) / np.sqrt(d)
+    else:
+        k_sh = kb / np.sqrt(d)
+    k_sh = k_sh.reshape(b, kvh, s2, d).astype(policy.input_dtype)
+
+    # Blocked PASA with per-block masked means.  The per-batch processed-block
+    # count (the kernel's SMEM counter) is derived analytically: active blocks
+    # form a prefix, so after step j the count is min(j+1, ceil(kv_len/bkv)).
+    import jax
+
+    inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
+    nb_active = jnp.ceil(kv_len.astype(st) / block_kv)        # (B,)
+    nb_active4 = nb_active[:, None, None, None]               # (B,1,1,1)
+    vc = v_cache.reshape(b, kvh, n_blocks, block_kv, d)
+    ks5 = k_sh.reshape(b, kvh, n_blocks, block_kv, d)
+    qp = q.astype(policy.input_dtype)
+    gemm_t = jnp.float64 if policy.score_dtype == jnp.float64 else jnp.float32
+
+    state = pasa_core.init_state((b, kvh, g), d, policy)
+
+    def body(st_, j):
+        kj = jax.lax.dynamic_index_in_dim(ks5, j, 2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 2, keepdims=False)
+        mask = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        mask_b = jnp.broadcast_to(
+            mask[:, None, None, :], (b, kvh, g, block_kv)
+        )
+        jf = j.astype(st)
+        cnt_prev = jnp.minimum(jf, nb_active4)                 # (B,1,1,1)
+        active = (jf < nb_active4)                             # this block live?
+
+        s = jnp.einsum(
+            "...gd,...td->...gt", qp, kj, preferred_element_type=gemm_t
+        ).astype(policy.score_dtype)
+        ccols = jnp.maximum(
+            jnp.sum(mask_b.astype(st), axis=-1, keepdims=True), 1.0
+        )
+        sbar = (
+            jnp.sum(jnp.where(mask_b, s.astype(st), 0.0), axis=-1,
+                    keepdims=True) / ccols
+        )
+        s = jnp.where(mask_b, s, jnp.asarray(pasa_core.NEG_BIG, s.dtype))
+        m_loc = jnp.max(s.astype(st), axis=-1, keepdims=True)
+        p = jnp.exp(s.astype(st) - m_loc).astype(policy.score_dtype)
+        p = jnp.where(mask_b, p, jnp.asarray(0.0, p.dtype))
+        l_loc = jnp.sum(p.astype(st), axis=-1, keepdims=True)
+
+        first = cnt_prev == 0.0
+        if inva != 0.0:
+            f_new = (cnt_prev * st_.f + sbar) / (cnt_prev + 1.0)
+            f_new = jnp.where(active, f_new, st_.f)
+            dm_prev_c = jnp.asarray(inva, st) * (st_.f - f_new)
+            dm_cur_c = jnp.asarray(inva, st) * (sbar - f_new)
+        else:
+            f_new = st_.f
+            dm_prev_c = jnp.zeros_like(st_.m)
+            dm_cur_c = jnp.zeros_like(m_loc)
+
+        cand_prev = jnp.where(
+            first, jnp.asarray(pasa_core.NEG_BIG, st), st_.m + dm_prev_c
+        )
+        m_new = jnp.maximum(cand_prev, m_loc + dm_cur_c)
+        m_new = jnp.where(active, m_new, st_.m)
+        e_prev = jnp.where(active, jnp.exp(cand_prev - m_new), 1.0)
+        e_cur = jnp.where(active, jnp.exp(m_loc + dm_cur_c - m_new), 0.0)
+        l_new = e_prev * st_.l + e_cur * l_loc
+        pv = jnp.einsum(
+            "...gt,...td->...gd", p, vj.astype(p.dtype),
+            preferred_element_type=gemm_t,
+        ).astype(policy.acc_dtype)
+        acc_new = (
+            e_prev.astype(policy.acc_dtype) * st_.acc
+            + e_cur.astype(policy.acc_dtype) * pv
+        )
+        return pasa_core.AttnState(
+            m=m_new, l=l_new, acc=acc_new, f=f_new, cnt=st_.cnt + 1
+        ), None
+
+    state, _ = jax.lax.scan(body, state, jnp.arange(n_blocks))
+    return pasa_core.finalize_state(state, policy)

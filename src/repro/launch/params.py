@@ -1,0 +1,139 @@
+"""Parameter / optimizer / batch / cache sharding rules.
+
+Rules are name-based over tree paths and *right-aligned* over trailing dims
+(stacked-layer leading dims are replicated), then filtered through
+``shard_if_divisible`` so jit-boundary shardings always divide evenly for
+every architecture on both production meshes.
+
+Placement summary (DESIGN.md):
+  * column-parallel weights (wq/wk/wv/w1/w3/in_proj/...):  (..., FSDP, "model")
+  * row-parallel weights (wo/w2/out_proj):                 (..., "model", FSDP)
+  * embedding (V, D): ("model", FSDP); lm_head (D, V): (FSDP, "model")
+  * MoE expert weights (..., E, D, F): E over "model" (expert parallelism),
+    D over FSDP (the kimi-k2 1T-param memory requirement)
+  * SSM channel dims over "model"; KV caches (..., B, S, kv_dim):
+    (DP, None, "model") right-aligned.
+
+FSDP = ("pod", "data"): ZeRO-style parameter sharding over the data axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import shard_if_divisible
+
+FSDP = ("pod", "data")
+DP = ("pod", "data")
+
+# name -> right-aligned trailing spec (leading dims replicated)
+_TRAILING_RULES = {
+    # attention / mlp projections (column-parallel)
+    "wq": (FSDP, "model"),
+    "wk": (FSDP, "model"),
+    "wv": (FSDP, "model"),
+    "w1": (FSDP, "model"),
+    "w3": (FSDP, "model"),
+    "in_proj": (FSDP, "model"),
+    "dt_proj": (None, "model"),
+    "x_proj": ("model", None),
+    "lm_head": (FSDP, "model"),
+    "vision_proj": (FSDP, "model"),
+    "router": (FSDP, "model"),
+    # row-parallel
+    "wo": ("model", FSDP),
+    "w2": ("model", FSDP),
+    "out_proj": ("model", FSDP),
+    # ssm channel tensors
+    "conv_w": ("model", None),
+    # vectors sharded on model (column-parallel biases / per-channel)
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    "conv_b": ("model",),
+    "dt_bias": ("model",),
+    "d_skip": ("model",),
+    "norm_w": ("model",),
+    # embeddings
+    "embed": ("model", FSDP),
+    "pos_embed": (None, FSDP),
+}
+
+# MoE expert tensors: (..., E, D, F) / (..., E, F, D) - E over "model"
+_MOE_RULES = {
+    "w1": ("model", FSDP, None),
+    "w3": ("model", FSDP, None),
+    "w2": ("model", None, FSDP),
+}
+
+# serve-cache leaves, right-aligned
+_CACHE_RULES = {
+    "k": (DP, None, "model"),      # (..., B, S, kv_dim)
+    "v": (DP, None, "model"),
+    "conv": (DP, None, "model"),   # (..., B, K-1, Di)
+    "enc_out": (DP, None, None),   # (B, S_audio, D)
+}
+
+
+def _path_names(path):
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _right_align(rank: int, trailing):
+    trailing = tuple(trailing)[-rank:]
+    return (None,) * (rank - len(trailing)) + trailing
+
+
+def _leaf_spec(path, leaf) -> tuple:
+    names = _path_names(path)
+    name = names[-1]
+    rank = len(leaf.shape)
+    if "moe" in names and name in _MOE_RULES:
+        return _right_align(rank, _MOE_RULES[name])
+    if name == "a_log":
+        # mamba1: (L, Di, N) -> model on Di; mamba2: (L, NH) -> model on NH
+        return _right_align(rank, ("model", None) if rank >= 3 else ("model",))
+    rule = _TRAILING_RULES.get(name)
+    if rule is None:
+        return (None,) * rank  # norms, gates, scalars -> replicated
+    return _right_align(rank, rule)
+
+
+def param_shardings(mesh: Mesh, abstract_params: Any):
+    """NamedShardings for a parameter tree (and, mapped again, optimizer
+    moments, which share layout with their parameters)."""
+    def one(path, leaf):
+        spec = _leaf_spec(path, leaf)
+        return shard_if_divisible(mesh, leaf.shape, *spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def cache_shardings(mesh: Mesh, abstract_cache: Any):
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        rank = len(leaf.shape)
+        if name == "ssm":
+            # mamba1 (L,B,Di,N): B at -3; mamba2 (L,B,NH,N,P): B at -4
+            spec = (DP, "model", None) if rank == 4 else (DP, "model", None, None)
+            return shard_if_divisible(mesh, leaf.shape, *_right_align(rank, spec))
+        rule = _CACHE_RULES.get(name, (DP,) + (None,) * (rank - 1))
+        return shard_if_divisible(mesh, leaf.shape, *_right_align(rank, rule))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def batch_shardings(mesh: Mesh, abstract_batch: Any):
+    def one(path, leaf):
+        return shard_if_divisible(
+            mesh, leaf.shape, DP, *([None] * (len(leaf.shape) - 1))
+        )
+
+    return jax.tree_util.tree_map_with_path(one, abstract_batch)
+
+
+def replicated(mesh: Mesh, tree: Any):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,87 @@
+"""Batched serving driver: prefill + greedy decode with continuous batching.
+
+Example (CPU-friendly):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --batch 4 --prompt-len 16 --gen 16 --mesh 1x1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.launch.sharding import set_mesh
+    from repro.launch.steps import make_serve_step
+    from repro.models.model_zoo import build
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "prod":
+        mesh = make_production_mesh()
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+    set_mesh(mesh)
+    max_len = args.max_len or (args.prompt_len + args.gen + 8)
+
+    bundle = build(cfg)
+    with mesh:
+        params = bundle.init(jax.random.PRNGKey(args.seed))
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32
+        )
+        cache = bundle.init_cache(args.batch, max_len)
+        step = jax.jit(make_serve_step(bundle))
+
+        extras = {}
+        if cfg.family == "vlm":
+            extras["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_image_tokens, cfg.vision_dim), jnp.bfloat16
+            )
+
+        # prompt consumption token-by-token (teacher forcing into the cache);
+        # a fused prefill kernel path exists for the dense family
+        # (transformer.prefill) - this loop is the family-generic route.
+        tok = jnp.asarray(prompts[:, 0])
+        t0 = time.time()
+        generated = []
+        for i in range(args.prompt_len + args.gen - 1):
+            pos = jnp.full((args.batch,), i, jnp.int32)
+            nxt, logits, cache = step(params, tok, pos, cache, **extras)
+            if i + 1 < args.prompt_len:
+                tok = jnp.asarray(prompts[:, i + 1])
+            else:
+                tok = nxt
+                generated.append(np.asarray(nxt))
+        dt = time.time() - t0
+        gen = np.stack(generated, axis=1)
+        n_steps = args.prompt_len + args.gen - 1
+        print(f"generated {gen.shape} tokens in {dt:.2f}s "
+              f"({1000*dt/max(n_steps,1):.1f} ms/step)")
+        print("sample:", gen[0][:16])
+        return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: every assigned architecture family, built on the PASA core."""

@@ -1,0 +1,207 @@
+"""GQA/MHA attention module with PASA as a first-class implementation switch.
+
+Supports: qk-norm (qwen3), QKV bias (qwen1.5), RoPE, cross-attention
+(S1 != S2; llama-vision / whisper), KV-cached decode, and three attention
+implementations:
+
+  * "pasa"  - the paper's algorithm at its fully-fp16 allocation (default
+              paper-faithful path; bf16 inputs are converted to fp16 inside,
+              as the paper prescribes),
+  * "flash" - blocked FA2 at the configured (safe) precision policy,
+  * "naive" - materialized softmax (tiny smoke tests only).
+
+Head-parallel sharding: activations are constrained on the KV-head axis over
+"model" (uneven shardings are legal on intermediates; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import blocked_attention, naive_attention
+from repro.core.precision import get_policy
+from repro.launch.sharding import dp_axes, shard
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    rms_norm,
+    rope_tables,
+    row_parallel_matmul as L_row_parallel,
+)
+
+
+def init_attention(key, cfg: ModelConfig, dtype, n_stack=None, kv_in_dim=None):
+    keys = jax.random.split(key, 5)
+    d = cfg.d_model
+    kv_in = kv_in_dim or d
+    p = {
+        "wq": dense_init(keys[0], d, cfg.q_dim, dtype, n_stack),
+        "wk": dense_init(keys[1], kv_in, cfg.kv_dim, dtype, n_stack),
+        "wv": dense_init(keys[2], kv_in, cfg.kv_dim, dtype, n_stack),
+        "wo": dense_init(keys[3], cfg.q_dim, d, dtype, n_stack),
+    }
+    if cfg.qkv_bias:
+        shape = lambda n: (n,) if n_stack is None else (n_stack, n)
+        p["bq"] = jnp.zeros(shape(cfg.q_dim), dtype)
+        p["bk"] = jnp.zeros(shape(cfg.kv_dim), dtype)
+        p["bv"] = jnp.zeros(shape(cfg.kv_dim), dtype)
+    if cfg.qk_norm:
+        shape = lambda n: (n,) if n_stack is None else (n_stack, n)
+        p["q_norm"] = jnp.ones(shape(cfg.head_dim), dtype)
+        p["k_norm"] = jnp.ones(shape(cfg.head_dim), dtype)
+    return p
+
+
+def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset):
+    """q5: (B, KVH, G, S1, hd); k5/v5: (B, KVH, 1, S2, hd)."""
+    ac = cfg.attention
+    if ac.impl == "naive":
+        out = naive_attention(
+            q5, k5, v5, causal=causal, kv_len=kv_len,
+            q_offset=0,
+        ).astype(q5.dtype)
+        return out
+    policy = get_policy(ac.pasa_policy if ac.impl == "pasa" else ac.policy)
+    beta = ac.beta if ac.impl == "pasa" else 0.0
+    return blocked_attention(
+        q5, k5, v5,
+        beta=beta, policy=policy, block_kv=ac.block_kv, causal=causal,
+        kv_len=kv_len, q_offset=q_offset,
+        use_gemm_shift=ac.use_gemm_shift,
+    )
+
+
+def attention(
+    x: jnp.ndarray,                 # (B, S, D)
+    p,                              # params (single layer slice)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    cross_x: Optional[jnp.ndarray] = None,   # (B, S_kv, D_src) for cross-attn
+    cache: Optional[dict] = None,   # {"k","v": (B, S2max, KV_dim)}
+    pos: Optional[jnp.ndarray] = None,       # (B,) write positions (decode)
+    prefill_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    cd = cfg.jnp_compute_dtype()
+    b, s, _ = x.shape
+    h, kvh, hd, g = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.group
+    x = x.astype(cd)
+
+    q = x @ p["wq"].astype(cd)
+    src = x if cross_x is None else cross_x.astype(cd)
+    s_kv = src.shape[1]
+    k = src @ p["wk"].astype(cd)
+    v = src @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = shard(q, dp_axes(), None, "model")
+    k = shard(k, dp_axes(), None, "model")
+
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s_kv, kvh, hd)
+    v = v.reshape(b, s_kv, kvh, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    q_offset = None
+    kv_len = None
+    if use_rope and cross_x is None:
+        if pos is not None and not prefill_cache:
+            # decode: rotate by per-batch absolute position
+            half = hd // 2
+            freqs = 1.0 / (
+                cfg.rope_theta
+                ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+            )
+            ang = pos.astype(jnp.float32)[:, None, None, None] * freqs
+            cos, sin = jnp.cos(ang), jnp.sin(ang)  # (B,1,1,half)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        else:
+            cos, sin = rope_tables(s, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]
+        if prefill_cache:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.reshape(b, s_kv, kvh * hd).astype(ck.dtype), 0, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.reshape(b, s_kv, kvh * hd).astype(cv.dtype), 0, axis=1
+            )
+            kv_len = None  # attend within the fresh k/v below, not the cache
+            new_cache = {"k": ck, "v": cv}
+        else:
+            idx = jnp.arange(b)
+            ck = ck.at[idx, pos].set(k.reshape(b, kvh * hd).astype(ck.dtype))
+            cv = cv.at[idx, pos].set(v.reshape(b, kvh * hd).astype(cv.dtype))
+            new_cache = {"k": ck, "v": cv}
+            s2 = ck.shape[1]
+            k = ck.reshape(b, s2, kvh, hd).astype(cd)
+            v = cv.reshape(b, s2, kvh, hd).astype(cd)
+            kv_len = (pos + 1).astype(jnp.int32)
+            causal = False  # kv_len mask subsumes causality for 1-token steps
+
+    # Layout choice (EXPERIMENTS.md section Perf, iteration 1):
+    #  * train/prefill: expand KV to the full H heads so q/k/v share the
+    #    (B, H, S, hd) layout - all attention einsum dims are batch or
+    #    contraction-local, so GSPMD keeps the whole KV-block scan
+    #    collective-free.  KV expansion costs (g-1)x KV activation bytes,
+    #    negligible next to the removed per-block all-reduces.
+    #  * decode: grouped (B, KVH, G, 1, hd) layout - the KV cache stays at
+    #    kvh heads (bandwidth = the decode bottleneck), and the tiny q makes
+    #    the contraction split cheap.
+    # No explicit per-head sharding constraints in either path: uneven
+    # kvh-over-model constraints cause involuntary full rematerialization
+    # copies (verified in the dry-run; see EXPERIMENTS.md).
+    decode_path = cache is not None and not prefill_cache
+    if cfg.attention.expand_kv and not decode_path and g > 1:
+        k = jnp.broadcast_to(
+            k[:, :, :, None], (b, k.shape[1], kvh, g, hd)
+        ).reshape(b, k.shape[1], h, hd)
+        v = jnp.broadcast_to(
+            v[:, :, :, None], (b, v.shape[1], kvh, g, hd)
+        ).reshape(b, v.shape[1], h, hd)
+        q5 = jnp.moveaxis(q, 2, 1)              # (B, H, S, hd)
+        k5 = jnp.moveaxis(k, 2, 1)
+        v5 = jnp.moveaxis(v, 2, 1)
+        # Matching (possibly uneven) H-over-model constraints on all three
+        # operands: keeps GSPMD from splitting the head_dim contraction,
+        # which otherwise inserts one (B,H,S,hd) all-reduce per KV block
+        # per layer (the dominant baseline collective; EXPERIMENTS.md
+        # section Perf iteration 1).
+        q5 = shard(q5, dp_axes(), "model", None, None)
+        k5 = shard(k5, dp_axes(), "model", None, None)
+        v5 = shard(v5, dp_axes(), "model", None, None)
+        out_heads_axis = 1
+    else:
+        q5 = jnp.moveaxis(q, 2, 1).reshape(b, kvh, g, s, hd)
+        k5 = jnp.moveaxis(k, 2, 1)[:, :, None]
+        v5 = jnp.moveaxis(v, 2, 1)[:, :, None]
+        out_heads_axis = None
+
+    kv_len_b = None
+    if kv_len is not None:
+        shape = (b, 1) if out_heads_axis == 1 else (b, 1, 1)
+        kv_len_b = kv_len.reshape(shape)
+    out = _attend(
+        q5, k5, v5, cfg, causal=causal, kv_len=kv_len_b,
+        q_offset=pos if (pos is not None and not prefill_cache) else None,
+    )
+
+    out = jnp.moveaxis(out.reshape(b, kvh * g, s, hd), 1, 2).reshape(b, s, h * hd)
+    out = shard(out, dp_axes(), None, "model")
+    out = L_row_parallel(out.astype(cd), p["wo"], cd)
+    return out, new_cache

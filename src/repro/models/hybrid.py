@@ -1,0 +1,167 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one weight-shared attention block.
+
+A single (weight-tied) transformer block (attention + MLP) is applied before
+layers 0, attn_every, 2*attn_every, ... of the Mamba-2 stack - Zamba2's
+shared-block design (the per-occurrence LoRA deltas of the real model are
+omitted; recorded in DESIGN.md).  PASA applies to the shared attention block;
+the mamba blocks are attention-free.
+
+Each shared-block *application* has its own KV cache (same weights, different
+activations), so the serve cache carries (n_apps, B, S, kv_dim).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import dp_axes, shard
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import ssm
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def init_hybrid(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "mamba": ssm.init_mamba2(ks[1], cfg, dt, n_stack=cfg.n_layers),
+        "mamba_ln": jnp.ones((cfg.n_layers, cfg.d_model), dt),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": attn_mod.init_attention(ks[2], cfg, dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _shared_block(x, p, cfg, *, cache=None, pos=None, prefill_cache=False):
+    cd = cfg.jnp_compute_dtype()
+    h, new_cache = attn_mod.attention(
+        L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
+        causal=True, cache=cache, pos=pos, prefill_cache=prefill_cache,
+    )
+    x = x + h.astype(x.dtype)
+    x = x + L.mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cd).astype(
+        x.dtype
+    )
+    return x, new_cache
+
+
+def _segments(cfg: ModelConfig):
+    """Mamba-layer runs separated by shared-block applications."""
+    bounds = list(range(0, cfg.n_layers, cfg.attn_every)) + [cfg.n_layers]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def _walk(params, cfg: ModelConfig, x, *, cache=None, pos=None,
+          prefill_cache=False):
+    """Shared layer walk for train fwd, prefill, and cached decode."""
+    new_attn_k, new_attn_v, new_conv, new_ssm = [], [], [], []
+
+    for app_idx, (lo, hi) in enumerate(_segments(cfg)):
+        ac = None
+        if cache is not None:
+            ac = {
+                "k": cache["attn"]["k"][app_idx],
+                "v": cache["attn"]["v"][app_idx],
+            }
+        x, nac = _shared_block(
+            x, params["shared"], cfg, cache=ac, pos=pos,
+            prefill_cache=prefill_cache,
+        )
+        if nac is not None:
+            new_attn_k.append(nac["k"])
+            new_attn_v.append(nac["v"])
+
+        sl = dict(jax.tree.map(lambda a: a[lo:hi], params["mamba"]))
+        sl["_ln"] = params["mamba_ln"][lo:hi]
+
+        def layer(carry, lp, lc):
+            xin = L.rms_norm(carry, lp["_ln"], cfg.norm_eps)
+            y, nc = ssm.mamba2_block(xin, lp, cfg, cache=lc)
+            return carry + y.astype(carry.dtype), nc
+
+        if cache is None or prefill_cache:
+            def body(carry, lp):
+                fn = jax.checkpoint(layer, static_argnums=(2,)) \
+                    if cfg.remat else layer
+                y, _ = fn(carry, lp, None)
+                return y, None
+            x, _ = jax.lax.scan(body, x, sl)
+            if cache is not None:  # prefill: mamba state rebuilt from scratch
+                mc = jax.tree.map(lambda a: a[lo:hi], cache["mamba"])
+                new_conv.append(mc["conv"])
+                new_ssm.append(mc["ssm"])
+        else:
+            mc = jax.tree.map(lambda a: a[lo:hi], cache["mamba"])
+
+            def body(carry, xs):
+                lp, lc = xs
+                y, nc = layer(carry, lp, lc)
+                return y, nc
+
+            x, ncs = jax.lax.scan(body, x, (sl, mc))
+            new_conv.append(ncs["conv"])
+            new_ssm.append(ncs["ssm"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "attn": {"k": jnp.stack(new_attn_k), "v": jnp.stack(new_attn_v)},
+            "mamba": {
+                "conv": jnp.concatenate(new_conv, axis=0),
+                "ssm": jnp.concatenate(new_ssm, axis=0),
+            },
+        }
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens, *, cache=None, pos=None,
+            prefill_cache=False) -> Tuple[jnp.ndarray, Optional[dict]]:
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)
+    x, new_cache = _walk(
+        params, cfg, x, cache=cache, pos=pos, prefill_cache=prefill_cache
+    )
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    h, _ = forward(params, cfg, tokens[:, :-1])
+    return L.lm_loss_chunked(
+        h, params["lm_head"], batch.get("labels", tokens[:, 1:]),
+        chunk=cfg.loss_chunk,
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    a = n_shared_apps(cfg)
+    return {
+        "attn": {
+            "k": jnp.zeros((a, batch, max_len, cfg.kv_dim), dtype),
+            "v": jnp.zeros((a, batch, max_len, cfg.kv_dim), dtype),
+        },
+        "mamba": ssm.mamba2_cache(cfg, cfg.n_layers, batch, dtype),
+    }
+
+
+def serve_step(params, cfg: ModelConfig, token, pos, cache):
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(token[:, None], params["embed"], cd)
+    x, new_cache = _walk(params, cfg, x, cache=cache, pos=pos)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return shard(logits, dp_axes(), "model"), new_cache

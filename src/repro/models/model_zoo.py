@@ -1,0 +1,188 @@
+"""build(cfg) -> ModelBundle: one uniform surface over every architecture.
+
+The bundle carries everything the launcher needs: init, train loss, serve
+cache construction + step, and ShapeDtypeStruct input specs for the dry-run
+(``input_specs`` never allocates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import dp_axes, shard
+from repro.models import hybrid, multimodal, ssm, transformer
+from repro.models import layers as L
+
+
+# =============================================================================
+# Pure-SSM LM (falcon-mamba)
+# =============================================================================
+
+def _ssm_init(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "mamba": ssm.init_mamba1(ks[1], cfg, dt, n_stack=cfg.n_layers),
+        "ln": jnp.ones((cfg.n_layers, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _ssm_walk(params, cfg, x, cache=None, pos=None):
+    stacked = dict(params["mamba"])
+    stacked["_ln"] = params["ln"]
+
+    def layer(carry, lp, lc):
+        xin = L.rms_norm(carry, lp["_ln"], cfg.norm_eps)
+        y, nc = ssm.mamba1_block(xin, lp, cfg, cache=lc)
+        return carry + y.astype(carry.dtype), nc
+
+    if cache is None:
+        def body(carry, lp):
+            fn = jax.checkpoint(layer, static_argnums=(2,)) if cfg.remat else layer
+            y, _ = fn(carry, lp, None)
+            return y, None
+        x, new_cache = jax.lax.scan(body, x, stacked)
+        new_cache = None
+    else:
+        def body(carry, xs):
+            lp, lc = xs
+            return layer(carry, lp, lc)
+        x, new_cache = jax.lax.scan(body, x, (stacked, cache))
+    return x, new_cache
+
+
+def _ssm_forward(params, cfg, tokens, *, cache=None, pos=None,
+                 prefill_cache=False):
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)
+    x, nc = _ssm_walk(params, cfg, x, cache=cache, pos=pos)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), nc
+
+
+def _ssm_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    h, _ = _ssm_forward(params, cfg, tokens[:, :-1])
+    return L.lm_loss_chunked(
+        h, params["lm_head"], batch.get("labels", tokens[:, 1:]),
+        chunk=cfg.loss_chunk,
+    )
+
+
+def _ssm_serve_step(params, cfg, token, pos, cache):
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(token[:, None], params["embed"], cd)
+    x, nc = _ssm_walk(params, cfg, x, cache=cache, pos=pos)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return shard(logits, dp_axes(), "model"), nc
+
+
+# =============================================================================
+# Bundle
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], dict]
+    loss_fn: Callable[[dict, dict], jnp.ndarray]
+    init_cache: Callable[..., Any]
+    serve_step: Callable[..., Any]          # (params, token, pos, cache, **ex)
+    extra_train_inputs: Dict[str, tuple]    # name -> (shape_fn, dtype)
+    extra_serve_inputs: Dict[str, tuple]
+
+    def train_inputs(self, batch: int, seq: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one training batch."""
+        out = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32),
+        }
+        for name, (shape_fn, dt) in self.extra_train_inputs.items():
+            out[name] = jax.ShapeDtypeStruct(shape_fn(batch, seq), dt)
+        return out
+
+    def serve_inputs(self, batch: int, seq: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one decode step (cache at seq)."""
+        sd = jax.ShapeDtypeStruct
+        cache = jax.eval_shape(lambda: self.init_cache(batch, seq))
+        out = {
+            "token": sd((batch,), jnp.int32),
+            "pos": sd((batch,), jnp.int32),
+            "cache": cache,
+        }
+        for name, (shape_fn, dt) in self.extra_serve_inputs.items():
+            out[name] = sd(shape_fn(batch, seq), dt)
+        return out
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    cfg.validate()
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: transformer.init_lm(cfg, key),
+            loss_fn=lambda p, b: transformer.loss_fn(p, cfg, b),
+            init_cache=lambda batch, s: transformer.init_cache(cfg, batch, s),
+            serve_step=lambda p, t, pos, c: transformer.serve_step(
+                p, cfg, t, pos, c
+            ),
+            extra_train_inputs={},
+            extra_serve_inputs={},
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: _ssm_init(cfg, key),
+            loss_fn=lambda p, b: _ssm_loss(p, cfg, b),
+            init_cache=lambda batch, s: ssm.mamba1_cache(cfg, batch),
+            serve_step=lambda p, t, pos, c: _ssm_serve_step(p, cfg, t, pos, c),
+            extra_train_inputs={},
+            extra_serve_inputs={},
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(cfg, key),
+            loss_fn=lambda p, b: hybrid.loss_fn(p, cfg, b),
+            init_cache=lambda batch, s: hybrid.init_cache(cfg, batch, s),
+            serve_step=lambda p, t, pos, c: hybrid.serve_step(p, cfg, t, pos, c),
+            extra_train_inputs={},
+            extra_serve_inputs={},
+        )
+    if fam == "vlm":
+        vshape = lambda b, s: (b, cfg.n_image_tokens, cfg.vision_dim)
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: multimodal.init_vlm(cfg, key),
+            loss_fn=lambda p, b: multimodal.vlm_loss_fn(p, cfg, b),
+            init_cache=lambda batch, s: multimodal.vlm_init_cache(cfg, batch, s),
+            serve_step=lambda p, t, pos, c, vision_embeds: (
+                multimodal.vlm_serve_step(p, cfg, t, pos, c, vision_embeds)
+            ),
+            extra_train_inputs={"vision_embeds": (vshape, jnp.bfloat16)},
+            extra_serve_inputs={"vision_embeds": (vshape, jnp.bfloat16)},
+        )
+    if fam == "audio":
+        fshape = lambda b, s: (b, cfg.n_audio_frames, cfg.d_model)
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: multimodal.init_whisper(cfg, key),
+            loss_fn=lambda p, b: multimodal.whisper_loss_fn(p, cfg, b),
+            init_cache=lambda batch, s: multimodal.whisper_init_cache(
+                cfg, batch, s
+            ),
+            serve_step=lambda p, t, pos, c: multimodal.whisper_serve_step(
+                p, cfg, t, pos, c
+            ),
+            extra_train_inputs={"frame_embeds": (fshape, jnp.bfloat16)},
+            extra_serve_inputs={},
+        )
+    raise ValueError(f"unknown family {fam}")

@@ -1,0 +1,298 @@
+"""Multi-modal backbones: Llama-3.2-Vision (VLM) and Whisper (audio enc-dec).
+
+Per the brief, modality frontends are STUBS: ``input_specs()`` supplies
+precomputed patch/frame embeddings; this module implements only the
+transformer backbones.  Cross-attention (S1 != S2) is exactly the paper's
+Stable-Video-Diffusion overflow case, so the PASA switch covers it.
+
+Llama-3.2-Vision: 100 decoder layers, layer i is an image cross-attention
+layer iff i % cross_attn_every == 0 (20 cross + 80 self).  Layers are scanned
+in groups of (1 cross + (cross_attn_every-1) self) to keep HLO size O(1).
+
+Whisper: n_encoder_layers bidirectional self-attention over frame embeddings;
+n_layers causal decoder layers each with self- (cached) and cross-attention.
+Cross K/V are computed once at encode time and carried in the serve cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import dp_axes, shard
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+
+
+# =============================================================================
+# Llama-3.2-Vision
+# =============================================================================
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.cross_attn_every
+
+
+def init_vlm(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(key, 8)
+    g = _n_groups(cfg)
+    per = cfg.cross_attn_every - 1  # self layers per group
+    mk_block = lambda k, n: {
+        "ln1": jnp.ones((n, cfg.d_model), dt),
+        "attn": attn_mod.init_attention(k, cfg, dt, n_stack=n),
+        "ln2": jnp.ones((n, cfg.d_model), dt),
+        "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg.d_model, cfg.d_ff, dt,
+                          n_stack=n),
+    }
+    self_p = mk_block(ks[0], g * per)
+    self_p = jax.tree.map(
+        lambda a: a.reshape((g, per) + a.shape[1:]), self_p
+    )
+    cross = mk_block(ks[1], g)
+    # cross-attention gates (tanh-gated residual, llama-vision style)
+    cross["gate_attn"] = jnp.zeros((g,), dt)
+    cross["gate_mlp"] = jnp.zeros((g,), dt)
+    return {
+        "embed": L.init_embed(ks[2], cfg.vocab_size, cfg.d_model, dt),
+        "vision_proj": L.dense_init(ks[3], cfg.vision_dim, cfg.d_model, dt),
+        "self": self_p,          # (G, per, ...)
+        "cross": cross,          # (G, ...)
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _self_block(x, p, cfg, *, cache=None, pos=None, prefill_cache=False):
+    cd = cfg.jnp_compute_dtype()
+    h, nc = attn_mod.attention(
+        L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
+        causal=True, cache=cache, pos=pos, prefill_cache=prefill_cache,
+    )
+    x = x + h.astype(x.dtype)
+    x = x + L.mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cd).astype(
+        x.dtype
+    )
+    return x, nc
+
+
+def _cross_block(x, p, cfg, vis):
+    cd = cfg.jnp_compute_dtype()
+    h, _ = attn_mod.attention(
+        L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
+        causal=False, cross_x=vis, use_rope=False,
+    )
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h.astype(x.dtype)
+    ff = L.mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cd)
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * ff.astype(x.dtype)
+
+
+def vlm_forward(params, cfg: ModelConfig, tokens, vision_embeds, *,
+                cache=None, pos=None, prefill_cache=False):
+    """vision_embeds: (B, n_image_tokens, vision_dim) stub frontend output."""
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)
+    vis = (vision_embeds.astype(cd) @ params["vision_proj"].astype(cd))
+    vis = shard(vis, dp_axes(), None, None)
+    g = _n_groups(cfg)
+
+    def group_body(carry, xs):
+        x = carry
+        if cache is None:
+            cp, sp = xs
+            sc = None
+        else:
+            cp, sp, sc = xs
+        x = _cross_block(x, cp, cfg, vis)
+
+        def self_body(c2, xs2):
+            if sc is None:
+                lp = xs2
+                lc = None
+            else:
+                lp, lc = xs2
+            fn = _self_block
+            if cfg.remat and lc is None and not prefill_cache:
+                fn = jax.checkpoint(
+                    lambda a, b: _self_block(a, b, cfg, cache=None)
+                )
+                y, _ = fn(c2, lp)
+                return y, None
+            y, nc = _self_block(
+                c2, lp, cfg, cache=lc, pos=pos, prefill_cache=prefill_cache
+            )
+            return y, nc
+
+        xs2 = sp if sc is None else (sp, sc)
+        x, ncs = jax.lax.scan(self_body, x, xs2)
+        return x, ncs
+
+    if cache is None:
+        xs = (params["cross"], params["self"])
+    else:
+        xs = (params["cross"], params["self"], cache)
+    x, new_cache = jax.lax.scan(group_body, x, xs)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def vlm_loss_fn(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    h, _ = vlm_forward(params, cfg, tokens[:, :-1], batch["vision_embeds"])
+    return L.lm_loss_chunked(
+        h, params["lm_head"], batch.get("labels", tokens[:, 1:]),
+        chunk=cfg.loss_chunk,
+    )
+
+
+def vlm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    g, per = _n_groups(cfg), cfg.cross_attn_every - 1
+    shape = (g, per, batch, max_len, cfg.kv_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def vlm_serve_step(params, cfg: ModelConfig, token, pos, cache, vision_embeds):
+    cd = cfg.jnp_compute_dtype()
+    h, new_cache = vlm_forward(
+        params, cfg, token[:, None], vision_embeds, cache=cache, pos=pos
+    )
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return shard(logits, dp_axes(), "model"), new_cache
+
+
+# =============================================================================
+# Whisper (enc-dec)
+# =============================================================================
+
+def init_whisper(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(key, 8)
+    ne, nd = cfg.n_encoder_layers, cfg.n_layers
+    enc = {
+        "ln1": jnp.ones((ne, cfg.d_model), dt),
+        "attn": attn_mod.init_attention(ks[0], cfg, dt, n_stack=ne),
+        "ln2": jnp.ones((ne, cfg.d_model), dt),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, n_stack=ne),
+    }
+    dec = {
+        "ln1": jnp.ones((nd, cfg.d_model), dt),
+        "self_attn": attn_mod.init_attention(ks[2], cfg, dt, n_stack=nd),
+        "ln_x": jnp.ones((nd, cfg.d_model), dt),
+        "cross_attn": attn_mod.init_attention(ks[3], cfg, dt, n_stack=nd),
+        "ln2": jnp.ones((nd, cfg.d_model), dt),
+        "mlp": L.init_mlp(ks[4], cfg.d_model, cfg.d_ff, dt, n_stack=nd),
+    }
+    return {
+        "enc": enc,
+        "dec": dec,
+        "embed": L.init_embed(ks[5], cfg.vocab_size, cfg.d_model, dt),
+        "pos_embed": (jax.random.normal(
+            ks[6], (cfg.n_audio_frames, cfg.d_model), jnp.float32
+        ) * 0.01).astype(dt),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[7], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def whisper_encode(params, cfg: ModelConfig, frames):
+    """frames: (B, n_audio_frames, d_model) - stub conv-frontend output."""
+    cd = cfg.jnp_compute_dtype()
+    x = frames.astype(cd) + params["pos_embed"].astype(cd)[None]
+    x = shard(x, dp_axes(), None, None)
+
+    def body(carry, lp):
+        def fn(x, lp):
+            h, _ = attn_mod.attention(
+                L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+                causal=False, use_rope=False,
+            )
+            x = x + h.astype(x.dtype)
+            ff = L.mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"], cd)
+            return x + ff.astype(x.dtype)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(carry, lp), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(x, lp, cfg, enc_out, *, cache=None, pos=None,
+               prefill_cache=False):
+    cd = cfg.jnp_compute_dtype()
+    h, nc = attn_mod.attention(
+        L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["self_attn"], cfg,
+        causal=True, cache=cache, pos=pos, prefill_cache=prefill_cache,
+    )
+    x = x + h.astype(x.dtype)
+    h, _ = attn_mod.attention(
+        L.rms_norm(x, lp["ln_x"], cfg.norm_eps), lp["cross_attn"], cfg,
+        causal=False, cross_x=enc_out, use_rope=False,
+    )
+    x = x + h.astype(x.dtype)
+    ff = L.mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"], cd)
+    return x + ff.astype(x.dtype), nc
+
+
+def whisper_decode_fwd(params, cfg: ModelConfig, tokens, enc_out, *,
+                       cache=None, pos=None, prefill_cache=False):
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)
+
+    def body(carry, xs):
+        if cache is None:
+            lp = xs
+            lc = None
+        else:
+            lp, lc = xs
+        fn = _dec_block
+        if cfg.remat and lc is None and not prefill_cache:
+            fn = jax.checkpoint(
+                lambda a, b: _dec_block(a, b, cfg, enc_out)
+            )
+            y, _ = fn(carry, lp)
+            return y, None
+        y, nc = _dec_block(
+            carry, lp, cfg, enc_out, cache=lc, pos=pos,
+            prefill_cache=prefill_cache,
+        )
+        return y, nc
+
+    xs = params["dec"] if cache is None else (params["dec"], cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def whisper_loss_fn(params, cfg: ModelConfig, batch):
+    enc_out = whisper_encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    h, _ = whisper_decode_fwd(params, cfg, tokens[:, :-1], enc_out)
+    return L.lm_loss_chunked(
+        h, params["lm_head"], batch.get("labels", tokens[:, 1:]),
+        chunk=cfg.loss_chunk,
+    )
+
+
+def whisper_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_dim)
+    return {
+        "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+        # encoder output, computed once at encode time
+        "enc_out": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dtype),
+    }
+
+
+def whisper_serve_step(params, cfg: ModelConfig, token, pos, cache):
+    cd = cfg.jnp_compute_dtype()
+    enc_out = cache["enc_out"].astype(cd)
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    h, nc = whisper_decode_fwd(
+        params, cfg, token[:, None], enc_out, cache=self_cache, pos=pos
+    )
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    new_cache = {"k": nc["k"], "v": nc["v"], "enc_out": cache["enc_out"]}
+    return shard(logits, dp_axes(), "model"), new_cache

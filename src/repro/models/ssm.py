@@ -1,0 +1,310 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Both are attention-free: PASA does not apply here (DESIGN.md section 4), so
+these blocks carry no attention-precision machinery.  Decode is O(1) per
+token via (conv window, SSM state) caches - this is what makes the
+``long_500k`` cells runnable.
+
+Mamba-2 uses the chunked SSD form: within-chunk work is an attention-like
+masked GEMM (MXU friendly) and chunk boundaries are crossed with a short
+lax.scan over (S / chunk) states.  Correctness of the chunked form is
+property-tested against the sequential recurrence in tests/test_models_ssm.py.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import dp_axes, shard
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# =============================================================================
+# Mamba-1 (falcon-mamba-7b)
+# =============================================================================
+
+def init_mamba1(key, cfg: ModelConfig, dtype, n_stack=None):
+    di, n, dc, dr = d_inner(cfg), cfg.ssm.state, cfg.ssm.d_conv, _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    stack = lambda s: s if n_stack is None else (n_stack,) + s
+    a_init = jnp.broadcast_to(
+        jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), (di, n)
+    )
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * di, dtype, n_stack),
+        "conv_w": (jax.random.normal(ks[1], stack((di, dc)), jnp.float32)
+                   / np.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros(stack((di,)), dtype),
+        "x_proj": dense_init(ks[2], di, dr + 2 * n, dtype, n_stack),
+        "dt_proj": dense_init(ks[3], dr, di, dtype, n_stack),
+        "dt_bias": jnp.full(stack((di,)), -4.0, dtype),  # softplus ~= 0.018
+        "a_log": jnp.broadcast_to(a_init, stack((di, n))).astype(jnp.float32),
+        "d_skip": jnp.ones(stack((di,)), jnp.float32),
+        "out_proj": dense_init(ks[4], di, cfg.d_model, dtype, n_stack),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv; x (B, S, C), w (C, K) -> (B, S, C)."""
+    bsz, s, c = x.shape
+    k = w.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :],   # (B, C, 1, S)
+        w.astype(jnp.float32).T[None, :, None, :],                 # (1, K, 1, C)
+        window_strides=(1, 1),
+        padding=((0, 0), (k - 1, 0)),
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+        feature_group_count=c,
+    )
+    return (out[:, :, 0, :].transpose(0, 2, 1) + b.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def _mamba1_inner(x, dt, bmat, cmat, a, d_skip, h0=None):
+    """Sequential selective scan.
+
+    x, dt: (B, S, Di); bmat, cmat: (B, S, N); a: (Di, N).
+    Returns y (B, S, Di) and final state (B, Di, N).
+    """
+    bb, s, di = x.shape
+    n = bmat.shape[-1]
+    h = jnp.zeros((bb, di, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a)                     # (B, Di, N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1) + d_skip * x_t
+        return h, y_t
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (x, dt, bmat, cmat)
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba1_block(x, p, cfg: ModelConfig, *, cache=None, pos=None):
+    """x: (B, S, D).  cache = {"conv": (B, K-1, Di), "ssm": (B, Di, N)}."""
+    cd = cfg.jnp_compute_dtype()
+    di, n, dr = d_inner(cfg), cfg.ssm.state, _dt_rank(cfg)
+    x = x.astype(cd)
+    xz = x @ p["in_proj"].astype(cd)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, dp_axes(), None, "model")
+
+    new_cache = None
+    if cache is None:
+        xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    else:
+        # decode: roll the (K-1)-sample window
+        window = jnp.concatenate([cache["conv"], xs], axis=1)  # (B, K, Di)
+        conv = jnp.einsum(
+            "bkc,ck->bc", window.astype(jnp.float32),
+            p["conv_w"].astype(jnp.float32),
+        ) + p["conv_b"].astype(jnp.float32)
+        xs = conv[:, None, :].astype(cd)
+        new_conv = window[:, 1:]
+    xs = jax.nn.silu(xs)
+
+    dbc = xs @ p["x_proj"].astype(cd)
+    dt, bmat, cmat = jnp.split(dbc, [dr, dr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"])
+
+    if cache is None:
+        y, h = _mamba1_inner(
+            xs, dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            a, p["d_skip"],
+        )
+    else:
+        h0 = cache["ssm"]
+        y, h = _mamba1_inner(
+            xs, dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            a, p["d_skip"], h0=h0,
+        )
+        new_cache = {"conv": new_conv, "ssm": h}
+
+    y = (y.astype(cd) * jax.nn.silu(z)) @ p["out_proj"].astype(cd)
+    return shard(y, dp_axes(), None, None), new_cache
+
+
+def mamba1_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, dc = d_inner(cfg), cfg.ssm.state, cfg.ssm.d_conv
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, di, n), jnp.float32),
+    }
+
+
+# =============================================================================
+# Mamba-2 (zamba2) - chunked SSD
+# =============================================================================
+
+def mamba2_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm.head_p
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype, n_stack=None):
+    di, n = d_inner(cfg), cfg.ssm.state
+    nh = mamba2_heads(cfg)
+    ks = jax.random.split(key, 4)
+    stack = lambda s: s if n_stack is None else (n_stack,) + s
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (nh)]
+    return {
+        "in_proj": dense_init(
+            ks[0], cfg.d_model, 2 * di + 2 * n + nh, dtype, n_stack
+        ),
+        "conv_w": (jax.random.normal(
+            ks[1], stack((di, cfg.ssm.d_conv)), jnp.float32
+        ) / np.sqrt(cfg.ssm.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros(stack((di,)), dtype),
+        "a_log": jnp.zeros(stack((nh,)), jnp.float32),
+        "dt_bias": jnp.full(stack((nh,)), -4.0, jnp.float32),
+        "d_skip": jnp.ones(stack((nh,)), jnp.float32),
+        "norm_w": jnp.ones(stack((di,)), dtype),
+        "out_proj": dense_init(ks[2], di, cfg.d_model, dtype, n_stack),
+    }
+
+
+def _ssd_chunked(x, dt, bmat, cmat, a, h0=None):
+    """Chunked SSD (Mamba-2 dual form).
+
+    x: (B, S, NH, P); dt: (B, S, NH); bmat/cmat: (B, S, N); a: (NH,) < 0.
+    Returns y (B, S, NH, P), final state (B, NH, N, P).
+    """
+    bb, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    c = min(s, 128)
+    while s % c:
+        c //= 2
+    nc = s // c
+
+    da = dt * a[None, None, :]                                  # (B, S, NH) <= 0
+    xc = x.reshape(bb, nc, c, nh, p)
+    dtc = dt.reshape(bb, nc, c, nh)
+    dac = da.reshape(bb, nc, c, nh)
+    bc = bmat.reshape(bb, nc, c, n)
+    cc = cmat.reshape(bb, nc, c, n)
+
+    cum = jnp.cumsum(dac, axis=2)                               # (B, NC, c, NH)
+    # within-chunk decay L[i, j] = exp(cum_i - cum_j), i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,NC,c,c,NH)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    lmask = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    # scores (C_i . B_j) * L * dt_j
+    att = jnp.einsum("bzin,bzjn->bzij", cc, bc)[..., None] * lmask
+    att = att * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", att, xc)
+
+    # chunk-final states: S_z = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,NC,c,NH)
+    sstate = jnp.einsum(
+        "bzjh,bzjn,bzjhp->bznhp", decay_end * dtc, bc, xc
+    )                                                            # (B,NC,N,NH,P)
+
+    # inter-chunk recurrence over NC states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B, NC, NH)
+    hinit = (
+        jnp.zeros((bb, n, nh, p), x.dtype) if h0 is None
+        else jnp.moveaxis(h0, 1, 2).astype(x.dtype)              # (B,N,NH,P)
+    )
+
+    def step(h, inp):
+        s_z, dec = inp                                           # (B,N,NH,P), (B,NH)
+        h_out = h                                                # state BEFORE chunk
+        h = h * dec[:, None, :, None] + s_z
+        return h, h_out
+
+    hfin, hprev = jax.lax.scan(
+        step,
+        hinit,
+        (jnp.moveaxis(sstate, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    hprev = jnp.moveaxis(hprev, 0, 1)                            # (B,NC,N,NH,P)
+    y_off = jnp.einsum(
+        "bzin,bzih,bznhp->bzihp", cc, jnp.exp(cum), hprev
+    )
+    y = (y_diag + y_off).reshape(bb, s, nh, p)
+    return y, jnp.moveaxis(hfin, 1, 2)                           # (B,NH,N,P)
+
+
+def mamba2_block(x, p, cfg: ModelConfig, *, cache=None, pos=None):
+    """x: (B, S, D). cache = {"conv": (B,K-1,Di), "ssm": (B,NH,N,P)}."""
+    cd = cfg.jnp_compute_dtype()
+    di, n = d_inner(cfg), cfg.ssm.state
+    nh, hp = mamba2_heads(cfg), cfg.ssm.head_p
+    bsz, s, _ = x.shape
+    x = x.astype(cd)
+    proj = x @ p["in_proj"].astype(cd)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    xs = shard(xs, dp_axes(), None, "model")
+
+    new_cache = None
+    if cache is None:
+        xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    else:
+        window = jnp.concatenate([cache["conv"], xs], axis=1)
+        conv = jnp.einsum(
+            "bkc,ck->bc", window.astype(jnp.float32),
+            p["conv_w"].astype(jnp.float32),
+        ) + p["conv_b"].astype(jnp.float32)
+        xs = conv[:, None, :].astype(cd)
+        new_conv = window[:, 1:]
+    xs = jax.nn.silu(xs)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,NH)
+    a = -jnp.exp(p["a_log"])                                     # (NH,)
+    xh = xs.reshape(bsz, s, nh, hp).astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    if cache is None:
+        y, h = _ssd_chunked(xh, dt, bf, cf, a)
+    else:
+        # O(1) decode step: h <- exp(dt*a) h + dt * (B outer x); y = C.h
+        h0 = cache["ssm"].astype(jnp.float32)                    # (B,NH,N,P)
+        da = jnp.exp(dt[:, 0, :, None, None] * a[None, :, None, None])
+        upd = (
+            dt[:, 0, :, None, None]
+            * bf[:, 0, None, :, None]
+            * xh[:, 0, :, None, :]
+        )
+        h = da * h0 + upd
+        y = jnp.einsum("bn,bhnp->bhp", cf[:, 0], h)[:, None]     # (B,1,NH,P)
+        y = y.reshape(bsz, 1, nh, hp)
+        new_cache = {"conv": new_conv, "ssm": h}
+
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, di).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    y = y @ p["out_proj"].astype(cd)
+    return shard(y, dp_axes(), None, None), new_cache
+
+
+def mamba2_cache(cfg: ModelConfig, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    di, n = d_inner(cfg), cfg.ssm.state
+    nh, hp = mamba2_heads(cfg), cfg.ssm.head_p
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((n_layers, batch, nh, n, hp), jnp.float32),
+    }

@@ -1,0 +1,137 @@
+"""Dense decoder-only transformer (qwen3 / qwen1.5 families).
+
+Layers are *stacked* ((L, ...) leading dim) and iterated with lax.scan so the
+HLO is O(1) in depth - required to keep the 61-100-layer dry-run compiles
+tractable.  Per-layer remat (jax.checkpoint) bounds training activation
+memory.  The same machinery (stacked init + scanned blocks) is reused by the
+MoE/VLM/hybrid families.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import dp_axes, shard
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+
+def init_block(key, cfg: ModelConfig, dtype, n_stack: int):
+    """One stacked residual block: ln1 -> attn -> ln2 -> mlp/moe."""
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((n_stack, cfg.d_model), dtype),
+        "ln2": jnp.ones((n_stack, cfg.d_model), dtype),
+        "attn": attn_mod.init_attention(k1, cfg, dtype, n_stack),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype, n_stack)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, n_stack)
+    return p
+
+
+def block_apply(
+    x, p, cfg: ModelConfig, *, causal=True, cache=None, pos=None,
+    prefill_cache=False,
+):
+    cd = cfg.jnp_compute_dtype()
+    h, new_cache = attn_mod.attention(
+        L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
+        causal=causal, cache=cache, pos=pos, prefill_cache=prefill_cache,
+    )
+    x = x + h.astype(x.dtype)
+    ff_in = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff = moe_mod.moe_ffn(ff_in, p["moe"], cfg)
+    else:
+        ff = L.mlp(ff_in, p["mlp"], cd)
+    x = x + ff.astype(x.dtype)
+    x = shard(x, dp_axes(), None, None)
+    return x, new_cache
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jnp_param_dtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": L.init_embed(k1, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": init_block(k2, cfg, dt, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(k3, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _scan_blocks(x, stacked, cfg, *, cache=None, pos=None, prefill_cache=False,
+                 causal=True):
+    """lax.scan over stacked layer params (+ optional stacked caches)."""
+
+    def body(carry, xs):
+        if cache is None:
+            lp = xs
+            c = None
+        else:
+            lp, c = xs
+        fn = functools.partial(
+            block_apply, cfg=cfg, causal=causal, pos=pos,
+            prefill_cache=prefill_cache,
+        )
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        y, nc = fn(carry, lp, cache=c)
+        return y, nc
+
+    xs = stacked if cache is None else (stacked, cache)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def forward(
+    params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+    cache=None, pos=None, prefill_cache=False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """tokens (B, S) -> final hidden states (B, S, D) (+ updated caches)."""
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)
+    x, new_caches = _scan_blocks(
+        x, params["blocks"], cfg, cache=cache, pos=pos,
+        prefill_cache=prefill_cache,
+    )
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    h, _ = forward(params, cfg, tokens[:, :-1])
+    return L.lm_loss_chunked(
+        h, params["lm_head"], batch.get("labels", tokens[:, 1:]),
+        chunk=cfg.loss_chunk,
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def serve_step(params, cfg: ModelConfig, token: jnp.ndarray, pos: jnp.ndarray,
+               cache: dict):
+    """One decode step: token (B,), pos (B,) -> (logits (B, V), new cache)."""
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(token[:, None], params["embed"], cd)  # (B, 1, D)
+    x, new_cache = _scan_blocks(x, params["blocks"], cfg, cache=cache, pos=pos)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    logits = shard(logits, dp_axes(), "model")
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, cache: dict):
+    """Prefill a zero-initialized cache; returns (hidden, filled cache)."""
+    return forward(params, cfg, tokens, cache=cache, prefill_cache=True)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compression import (
+    CompressionState,
+    compressed_psum,
+    compression_init,
+)
+from repro.optim.schedule import cosine_warmup
+
+__all__ = [
+    "AdamWState", "CompressionState", "adamw_init", "adamw_update",
+    "compressed_psum", "compression_init", "cosine_warmup",
+]

@@ -1,0 +1,91 @@
+"""AdamW with global-norm clipping, built tree-native (no optax dependency).
+
+Moment dtype is configurable (``ModelConfig.optimizer_dtype``): fp32 default,
+bf16 for the 1T-param kimi-k2 config where fp32 moments cannot fit the pods
+(DESIGN.md section 6).  Moments inherit the parameters' sharding (the
+launcher maps the same PartitionSpecs over the state tree), which is what
+makes the optimizer ZeRO-like under FSDP param sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1.0e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: Optional[float] = 1.0,
+):
+    """One AdamW step.  ``lr`` may be a scalar or a traced schedule value.
+
+    Returns (new_params, new_state, metrics).
+    """
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu_f = mu.astype(jnp.float32) * b1 + (1 - b1) * gf
+        nu_f = nu.astype(jnp.float32) * b2 + (1 - b2) * gf * gf
+        update = (mu_f / c1) / (jnp.sqrt(nu_f / c2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (
+        new_params,
+        AdamWState(step=step, mu=new_mu, nu=new_nu),
+        {"grad_norm": gnorm},
+    )

@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    FaultTolerantLoop,
+    StragglerMonitor,
+    elastic_mesh_shape,
+)
+
+__all__ = ["FaultTolerantLoop", "StragglerMonitor", "elastic_mesh_shape"]

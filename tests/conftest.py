@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests import through src/ without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+# fp64 needed by the exactness oracles; harmless elsewhere.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

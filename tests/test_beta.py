@@ -1,0 +1,63 @@
+"""Optimal-accuracy-condition solver (paper Section 2.3, Appendix A-C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import beta as B
+
+
+def test_paper_betas_reproduced():
+    """Section 2.3: inits 1-2^-4, 1-2^-5, 1-2^-6 at n=128 converge to
+    0.937500, 0.968994, 0.984497."""
+    got = B.solve_paper_betas(128)
+    np.testing.assert_allclose(got, B.PAPER_BETAS, atol=5e-7)
+
+
+def test_table3_initial_betas_have_nonzero_error():
+    """Table 3 left half: initial beta in {1-2^-5, 1-2^-6, 0.99, 0.999}
+    realize ~0.8-3.2% invariance error."""
+    expect = {
+        1 - 2**-5: 0.0081,
+        1 - 2**-6: 0.0079,
+        0.99: 0.0323,
+        0.999: 0.0320,
+    }
+    for b0, err in expect.items():
+        got = B.invariance_rel_err(b0, 128)
+        assert got == pytest.approx(err, rel=0.05), (b0, got)
+
+
+def test_table3_exact_beta_is_error_free():
+    """1-2^-4 = 0.9375 is exactly representable: zero invariance error."""
+    assert B.invariance_rel_err(0.9375, 128) < 1e-12
+
+
+def test_optimized_betas_are_error_free():
+    """Table 3 right half: optimized betas -> Rel. Err. = 0 (to fp64 eps)."""
+    for b0 in (0.9, 1 - 2**-5, 1 - 2**-6, 0.99, 0.999):
+        opt = B.optimal_beta(b0, 128)
+        assert B.invariance_rel_err(opt, 128) < 1e-6, (b0, opt)
+
+
+def test_table3_invariance_values():
+    """Table 3: Inva_1 for initial 1-2^-5 is 31.25, for 1-2^-6 is 63.50
+    (table shows 4 significant figures; Eq. 20 adds a small (1-a)/a term)."""
+    assert B.practical_invariance(1 - 2**-5, 128) == pytest.approx(31.25, abs=5e-3)
+    assert B.practical_invariance(1 - 2**-6, 128) == pytest.approx(63.50, abs=5e-3)
+
+
+def test_fixed_point_is_stationary():
+    opt = B.optimal_beta(1 - 2**-6, 128)
+    inv = B.practical_invariance(opt, 128)
+    assert opt == pytest.approx(inv / (1 + inv), abs=1e-10)
+
+
+def test_bfloat16_solver_runs():
+    opt = B.optimal_beta(0.9375, 128, tp="bfloat16")
+    assert 0.5 < opt < 1.0
+
+
+def test_other_block_sizes():
+    for n in (64, 256, 512):
+        opt = B.optimal_beta(1 - 2**-6, n)
+        assert B.invariance_rel_err(opt, n) < 1e-6

@@ -1,0 +1,149 @@
+"""Pallas kernel validation: interpret-mode allclose vs the pure-jnp oracles,
+swept over shapes / dtypes / block sizes / causality (per the brief)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro.core import F64, FP16, FP16_FP32, FP32, naive_attention, shifting
+from repro.core.numerics import rmse
+from repro.kernels import ref
+
+I = dict(interpret=True)
+
+
+def _mk(key, b, h, kvh, s, d, mean=0.0):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32) + mean
+    k = jax.random.normal(ks[1], (b, kvh, s, d), jnp.float32) + mean
+    v = jax.random.normal(ks[2], (b, kvh, s, d), jnp.float32)
+    return q, k, v
+
+
+SWEEP = [
+    # (B, H, KVH, S, D, block_q, block_kv)
+    (1, 2, 2, 128, 64, 64, 64),
+    (2, 8, 4, 256, 64, 128, 128),
+    (1, 4, 1, 256, 128, 128, 64),   # MQA-style
+    (1, 5, 5, 384, 32, 128, 128),   # odd heads, ragged-ish
+]
+
+
+@pytest.mark.parametrize("b,h,kvh,s,d,bq,bkv", SWEEP)
+def test_pasa_kernel_matches_ref(b, h, kvh, s, d, bq, bkv, rng):
+    q, k, v = _mk(rng, b, h, kvh, s, d, mean=2.0)
+    got = K.pasa_attention(
+        q, k, v, beta=0.984497, policy=FP16, block_q=bq, block_kv=bkv, **I
+    )
+    want = ref.attention_ref(q, k, v, beta=0.984497, policy=FP16, block_kv=bkv)
+    # fp16 tail: tiny absolute tolerance absorbs op-order rounding on
+    # near-zero outputs (relative error there is meaningless)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=8e-3, rtol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("b,h,kvh,s,d,bq,bkv", SWEEP[:2])
+def test_pasa_kernel_causal(b, h, kvh, s, d, bq, bkv, rng):
+    q, k, v = _mk(rng, b, h, kvh, s, d, mean=1.0)
+    got = K.pasa_attention(
+        q, k, v, beta=0.984497, policy=FP16, block_q=bq, block_kv=bkv,
+        causal=True, **I
+    )
+    want = ref.attention_ref(
+        q, k, v, beta=0.984497, policy=FP16, block_kv=bkv, causal=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=2e-3, rtol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("policy", [FP16, FP16_FP32, FP32])
+def test_flash_kernel_policies(policy, rng):
+    q, k, v = _mk(rng, 1, 4, 2, 256, 64)
+    got = K.flash_attention(q, k, v, policy=policy, **I)
+    want = ref.attention_ref(q, k, v, beta=0.0, policy=policy, block_kv=128)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=2e-3, rtol=2e-2,
+    )
+
+
+def test_kernel_against_fp64_gold(rng):
+    """End-to-end: kernel output within fp16 tolerance of exact attention."""
+    q, k, v = _mk(rng, 1, 4, 4, 256, 64, mean=3.0)
+    gold = naive_attention(
+        q.astype(jnp.float64), k.astype(jnp.float64), v.astype(jnp.float64),
+        dtype=jnp.float64,
+    )
+    got = K.pasa_attention(q, k, v, beta=0.984497, policy=FP16, **I)
+    assert rmse(got, gold[:, :, ...]) < 0.02
+
+
+def test_kernel_overflow_robustness(rng):
+    """The paper's headline: fully-fp16 kernel survives x0=30 inputs where
+    the fp16 flash baseline NaNs."""
+    ks = jax.random.split(rng, 3)
+    shape = (1, 2, 256, 128)
+    mk = lambda k: jax.random.uniform(k, shape, minval=29.5, maxval=30.5)
+    q, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    bad = K.flash_attention(q, k, v, policy=FP16_FP32, **I)
+    good = K.pasa_attention(q, k, v, beta=0.984497, policy=FP16, **I)
+    assert bool(jnp.isnan(bad).any())
+    assert bool(jnp.isfinite(good.astype(jnp.float32)).all())
+
+
+def test_shift_kv_kernel(rng):
+    k = jax.random.normal(rng, (2, 4, 512, 64), jnp.float32) + 5.0
+    got = K.shift_kv(k, beta=0.984497, block_kv=128, policy=FP16, **I)
+    m = shifting.shifting_matrix(128, 64, 0.984497, jnp.float16)
+    want = ref.shift_kv_ref(m, k.astype(jnp.float16), 128)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=1e-2
+    )
+
+
+@pytest.mark.parametrize("kv_lens", [[128, 512], [300, 77], [512, 512]])
+@pytest.mark.parametrize("beta", [0.0, 0.9375])
+def test_decode_kernel(kv_lens, beta, rng):
+    b, kvh, g, d, s2 = 2, 2, 4, 64, 512
+    ks = jax.random.split(rng, 3)
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
+    q = jax.random.normal(ks[0], (b, kvh, g, d), jnp.float32) + 1.0
+    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d)) + 2.0, 0.0)
+    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d)), 0.0)
+    got = K.pasa_decode(
+        q, kc, vc, kv_len, beta=beta, policy=FP16, block_kv=128, **I
+    )
+    want = ref.decode_ref(
+        q.astype(jnp.float16), kc.astype(jnp.float16), vc.astype(jnp.float16),
+        kv_len, beta=beta, policy=FP16, block_kv=128,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-3, rtol=3e-2,
+    )
+    # against exact attention over the valid prefix
+    for bi in range(b):
+        L = int(kv_len[bi])
+        gold = naive_attention(
+            q[bi : bi + 1].astype(jnp.float64),
+            kc[bi : bi + 1, :, :L].astype(jnp.float64),
+            vc[bi : bi + 1, :, :L].astype(jnp.float64),
+            dtype=jnp.float64,
+        )
+        assert rmse(got[bi : bi + 1], gold) < 0.03
+
+
+def test_kernel_shape_guards():
+    q = jnp.zeros((1, 4, 100, 64), jnp.float16)  # 100 % 128 != 0
+    k = jnp.zeros((1, 2, 128, 64), jnp.float16)
+    with pytest.raises(ValueError):
+        K.pasa_attention(q, k, k, **I)
+    with pytest.raises(ValueError):
+        K.pasa_attention(jnp.zeros((1, 3, 128, 64), jnp.float16), k, k, **I)

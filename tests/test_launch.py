@@ -1,0 +1,339 @@
+"""Launch layer: sharding rules, HLO analysis, mini dry-run, ring attention.
+
+Multi-device tests need placeholder host devices, and XLA_FLAGS must be set
+before jax initializes - which must NOT happen globally (smoke tests see one
+device, per the brief).  tests/test_multidevice.py re-runs this module in a
+subprocess with REPRO_MULTIDEV=1 and 8 host devices; under a plain
+``pytest tests/`` the device-bound tests here are skipped in-process and
+exercised through that launcher instead.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+if os.environ.get("REPRO_MULTIDEV") != "1":
+    pytestmark = pytest.mark.skip(
+        reason="multi-device suite; exercised via tests/test_multidevice.py"
+    )
+
+from repro.launch import params as LP
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_mesh
+from repro.launch.roofline import (
+    analytic_memory_bytes, model_flops, roofline_terms,
+)
+from repro.launch.sharding import set_mesh, shard_if_divisible
+
+
+@pytest.fixture(scope="module")
+def mesh4():
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices (set XLA_FLAGS in CI runner)")
+    return make_mesh((2, 2), ("data", "model"))
+
+
+def test_cost_analysis_undercounts_scans():
+    """Documents WHY hlo_analysis exists: XLA visits while bodies once."""
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    comp = jax.jit(f).lower(sds, sds).compile()
+    raw = comp.cost_analysis()["flops"]
+    fixed = analyze(comp.as_text())["dot_flops"]
+    expected = 10 * 2 * 128**3
+    assert raw == pytest.approx(expected / 10, rel=0.01)
+    assert fixed == pytest.approx(expected, rel=0.01)
+
+
+def test_hlo_analysis_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = jax.jit(f).lower(sds, sds).compile()
+    got = analyze(comp.as_text())["dot_flops"]
+    assert got == pytest.approx(20 * 2 * 64**3, rel=0.01)
+
+
+def test_hlo_analysis_collectives_in_loops(mesh4):
+    def f(x):
+        def body(c, _):
+            return jax.lax.psum(c, "model"), None
+        g = jax.shard_map(
+            lambda c: jax.lax.scan(body, c, None, length=7)[0],
+            mesh=mesh4, in_specs=P("model"), out_specs=P("model"),
+            check_vma=False,
+        )
+        return g(x)
+
+    sds = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    comp = jax.jit(f).lower(sds).compile()
+    res = analyze(comp.as_text())
+    assert res["collective_counts"]["all-reduce"] == 7
+    assert res["collective_bytes"] == pytest.approx(7 * 4 * 64 * 4, rel=0.01)
+
+
+def test_shard_if_divisible_drops_bad_axes(mesh4):
+    s = shard_if_divisible(mesh4, (10, 7), "data", "model")
+    # 10 % 2 == 0 -> kept; 7 % 2 != 0 -> dropped
+    assert s.spec == P("data", None)
+    s2 = shard_if_divisible(mesh4, (8, 6), ("data", "model"), None)
+    assert s2.spec == P(("data", "model"), None)
+
+
+def test_param_shardings_cover_all_archs(mesh4):
+    """Every leaf of every arch gets a *legal* jit-input sharding."""
+    from repro.configs import ALL_ARCHS, get_config
+    from repro.models.model_zoo import build
+
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch).reduced()
+        bundle = build(cfg)
+        abs_p = jax.eval_shape(lambda b=bundle: b.init(jax.random.PRNGKey(0)))
+        sh = LP.param_shardings(mesh4, abs_p)
+        flat_p = jax.tree.leaves(abs_p)
+        flat_s = jax.tree.leaves(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding)
+        )
+        assert len(flat_p) == len(flat_s), arch
+        for leaf, s in zip(flat_p, flat_s):
+            for dim, spec in zip(leaf.shape, s.spec):
+                if spec is None:
+                    continue
+                axes = spec if isinstance(spec, tuple) else (spec,)
+                size = int(np.prod([mesh4.shape[a] for a in axes]))
+                assert dim % size == 0, (arch, leaf.shape, s.spec)
+
+
+def test_mini_dryrun_train_and_serve(mesh4):
+    """End-to-end lower+compile of the real train/serve steps on a 2x2 mesh
+    with reduced configs - the same machinery the production dry-run uses."""
+    from repro.configs import get_config
+    from repro.launch.steps import TrainHyper, init_train_state, make_train_step
+    from repro.models.model_zoo import build
+    from repro.optim.adamw import AdamWState
+
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    set_mesh(mesh4)
+    try:
+        with mesh4:
+            abs_state = jax.eval_shape(
+                lambda: init_train_state(bundle, jax.random.PRNGKey(0))
+            )
+            pshard = LP.param_shardings(mesh4, abs_state["params"])
+            repl = NamedSharding(mesh4, P())
+            st_shard = {
+                "params": pshard,
+                "opt": AdamWState(step=repl, mu=pshard, nu=pshard),
+            }
+            batch = bundle.train_inputs(4, 32)
+            bshard = LP.batch_shardings(mesh4, batch)
+            step = make_train_step(bundle, TrainHyper())
+            compiled = jax.jit(
+                step, in_shardings=(st_shard, bshard),
+                out_shardings=(st_shard, repl),
+            ).lower(abs_state, batch).compile()
+            assert compiled.memory_analysis() is not None
+
+            sv = bundle.serve_inputs(4, 64)
+            cshard = LP.cache_shardings(mesh4, sv["cache"])
+            tshard = LP.batch_shardings(
+                mesh4, {"token": sv["token"], "pos": sv["pos"]}
+            )
+
+            def serve(params, token, pos, cache):
+                return bundle.serve_step(params, token, pos, cache)
+
+            compiled2 = jax.jit(
+                serve,
+                in_shardings=(pshard, tshard["token"], tshard["pos"], cshard),
+            ).lower(
+                abs_state["params"], sv["token"], sv["pos"], sv["cache"]
+            ).compile()
+            assert compiled2.memory_analysis() is not None
+    finally:
+        set_mesh(None)
+
+
+def test_ring_pasa_on_mesh(mesh4):
+    """Sequence-parallel PASA == exact attention across a real mesh axis."""
+    from repro.core import F64, make_ring_attention, naive_attention
+    from repro.core.numerics import rmse
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 32)) + 1.0
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 32)) + 2.0
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 32))
+    gold = naive_attention(q, k, v, dtype=jnp.float64)
+    fn = make_ring_attention(
+        mesh4, "model", beta=0.984497, policy=F64, block_kv=32
+    )
+    got = jax.jit(fn)(q, k, v)
+    assert rmse(got, gold) < 1e-12
+
+
+def test_moe_a2a_equals_gspmd_dispatch(mesh4):
+    """The a2a expert-parallel path (Perf iteration 2/3) is numerically
+    identical to the dense-dispatch reference, forward and gradients."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe
+
+    cfg = ModelConfig(
+        arch_id="t", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, head_dim=8, d_ff=64, vocab_size=128,
+        moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=4.0),
+        compute_dtype="float32",
+    )
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    ref = moe.moe_ffn_gspmd(x, p, cfg)
+    g_ref = jax.grad(lambda p_: jnp.sum(moe.moe_ffn_gspmd(x, p_, cfg) ** 2))(p)
+    set_mesh(mesh4)
+    try:
+        with mesh4:
+            got = jax.jit(lambda x_, p_: moe.moe_ffn_a2a(x_, p_, cfg, mesh4))(
+                x, p
+            )
+            g_got = jax.jit(jax.grad(
+                lambda p_: jnp.sum(moe.moe_ffn_a2a(x, p_, cfg, mesh4) ** 2)
+            ))(p)
+    finally:
+        set_mesh(None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    for k in ("w1", "w2", "w3", "router"):
+        np.testing.assert_allclose(
+            np.asarray(g_got[k]), np.asarray(g_ref[k]), atol=1e-4
+        )
+
+
+def test_row_parallel_matmul(mesh4):
+    """Manual bf16-wire row-parallel matmul (Perf iteration 4) == plain
+    matmul, forward and weight gradient."""
+    from repro.models.layers import row_parallel_matmul
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16), jnp.float32)
+    ref = x @ w
+    g_ref = jax.grad(lambda w_: jnp.sum((x @ w_) ** 2))(w)
+    set_mesh(mesh4)
+    try:
+        with mesh4:
+            got = jax.jit(
+                lambda x_, w_: row_parallel_matmul(x_, w_, jnp.float32)
+            )(x, w)
+            g_got = jax.jit(jax.grad(
+                lambda w_: jnp.sum(row_parallel_matmul(x, w_, jnp.float32) ** 2)
+            ))(w)
+    finally:
+        set_mesh(None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_got), np.asarray(g_ref), atol=5e-4)
+
+
+def test_expand_kv_attention_matches_grouped(mesh4):
+    """expand_kv=True (Perf iteration 1) changes sharding, not math."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import attention as attn_mod
+
+    cfg = get_config("qwen3-4b").reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    p = attn_mod.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    cfg_on = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, expand_kv=True)
+    )
+    cfg_off = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, expand_kv=False)
+    )
+    a, _ = attn_mod.attention(x, p, cfg_on, causal=True)
+    b, _ = attn_mod.attention(x, p, cfg_off, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_compressed_train_step_cross_pod():
+    """int8-EF gradient sync across 'pod': loss/params track the plain step
+    within quantization error, and the wire is int16 in the HLO."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices")
+    from repro.configs import get_config
+    from repro.launch.steps import (
+        TrainHyper, init_train_state, make_compressed_train_step,
+        make_train_step,
+    )
+    from repro.models.model_zoo import build
+
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    hyper = TrainHyper(peak_lr=1e-3)
+    step_c = make_compressed_train_step(bundle, hyper, mesh)
+    step_p = jax.jit(make_train_step(bundle, hyper))
+    state0 = init_train_state(bundle, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (8, 33)),
+        jnp.int32,
+    )}
+    set_mesh(mesh)
+    try:
+        with mesh:
+            sc = dict(state0)
+            sc["comp"] = step_c.init_comp(state0["params"])
+            jc = jax.jit(step_c)
+            compiled = jc.lower(sc, batch).compile()
+            for _ in range(3):
+                sc, mc = jc(sc, batch)
+    finally:
+        set_mesh(None)
+    sp = state0
+    for _ in range(3):
+        sp, mp = step_p(sp, batch)
+    assert abs(float(mc["loss"]) - float(mp["loss"])) < 0.05
+    d = max(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree.leaves(sc["params"]),
+                        jax.tree.leaves(sp["params"]))
+    )
+    assert d < 1e-3  # int8 quantization error with error feedback
+    n_s16 = sum(
+        1 for ln in compiled.as_text().splitlines()
+        if "all-reduce" in ln and "s16[" in ln
+    )
+    assert n_s16 >= len(jax.tree.leaves(state0["params"]))
+
+
+def test_roofline_terms_and_memory_model():
+    t = roofline_terms(197e12, 819e9, 50e9)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-4b")
+    m = analytic_memory_bytes(cfg, "train", 256, 4096, 256, 16)
+    assert m["bytes"] > 0 and m["activations"] > 0 and m["optimizer"] > 0
+    d = analytic_memory_bytes(cfg, "decode", 128, 32768, 256, 16)
+    assert d["cache"] > 0
+    # decode_32k KV cache per device: L * b_loc(128/16) * S * 2(k,v) *
+    # kv_dim * 2B / model-parallel(16) - sanity: within 10x of hand math
+    hand = 36 * (128 // 16) * 32768 * 2 * cfg.kv_dim * 2 / 16
+    assert 0.1 < d["cache"] / hand < 10
+
+    assert model_flops(1e9, 0, 0, 0, 100, kind="train") == 6e11
+    # MoE: only active params count
+    mf = model_flops(1e9, 9e8, 2, 8, 100, kind="decode")
+    assert mf == pytest.approx(2 * (1e9 - 9e8 * 0.75) * 100)

@@ -1,0 +1,37 @@
+"""Launcher for the multi-device test suite.
+
+XLA locks the host device count at first backend initialization, so the
+8-device tests (sharding rules over a real mesh, mini dry-run, ring PASA)
+must run in a fresh interpreter with XLA_FLAGS set before jax import.  This
+test spawns that interpreter; see tests/test_launch.py for the suite body.
+"""
+
+import os
+import subprocess
+import sys
+
+
+def test_multidevice_suite():
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        REPRO_MULTIDEV="1",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)
+        ),
+    )
+    target = os.path.join(os.path.dirname(__file__), "test_launch.py")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", target, "-q", "--no-header", "-p",
+         "no:cacheprovider"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            "multi-device suite failed:\n" + proc.stdout[-4000:] +
+            "\n" + proc.stderr[-2000:]
+        )

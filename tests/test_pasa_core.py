@@ -1,0 +1,169 @@
+"""PASA <-> FA <-> naive equivalence, overflow behavior, decode/causal paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    F64, FP16, FP16_FP32, FP32,
+    blocked_attention, flash_attention, naive_attention, pasa_attention,
+)
+from repro.core.numerics import overflow_stats, rmse
+
+
+def _qkv(key, shape, mean=0.0, scale=1.0):
+    ks = jax.random.split(key, 3)
+    mk = lambda k: jax.random.normal(k, shape, jnp.float64) * scale + mean
+    return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+
+class TestExactEquivalence:
+    """Mathematical equivalence (paper Section 2: PASA == FA == softmax)."""
+
+    def test_fa_equals_naive_fp64(self, rng):
+        q, k, v = _qkv(rng, (2, 3, 384, 64), mean=1.0, scale=2.0)
+        gold = naive_attention(q, k, v, dtype=jnp.float64)
+        got = flash_attention(q, k, v, policy=F64, block_kv=128)
+        assert rmse(got, gold) < 1e-13
+
+    def test_pasa_equals_naive_fp64(self, rng):
+        q, k, v = _qkv(rng, (2, 3, 384, 64), mean=3.0, scale=2.0)
+        gold = naive_attention(q, k, v, dtype=jnp.float64)
+        got = pasa_attention(q, k, v, beta=0.984497, policy=F64, block_kv=128)
+        assert rmse(got, gold) < 1e-12
+
+    def test_pasa_causal_fp64(self, rng):
+        q, k, v = _qkv(rng, (1, 2, 256, 64), mean=2.0)
+        gold = naive_attention(q, k, v, causal=True, dtype=jnp.float64)
+        got = pasa_attention(
+            q, k, v, beta=0.9375, policy=F64, block_kv=64, causal=True
+        )
+        assert rmse(got, gold) < 1e-12
+
+    def test_beta_zero_degenerates_to_fa(self, rng):
+        """Paper: 'PASA completely degrades into the FA2.0 algorithm when
+        beta is set to zero.'"""
+        q, k, v = _qkv(rng, (1, 2, 256, 32))
+        a = blocked_attention(q, k, v, beta=0.0, policy=F64, block_kv=64)
+        b = flash_attention(q, k, v, policy=F64, block_kv=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_gemm_and_algebraic_shift_agree(self, rng):
+        q, k, v = _qkv(rng, (1, 2, 256, 64), mean=4.0)
+        a = pasa_attention(q, k, v, beta=0.9375, policy=F64, block_kv=64,
+                           use_gemm_shift=True)
+        b = pasa_attention(q, k, v, beta=0.9375, policy=F64, block_kv=64,
+                           use_gemm_shift=False)
+        assert rmse(a, b) < 1e-12
+
+    def test_ragged_kv_padding(self, rng):
+        q, k, v = _qkv(rng, (1, 2, 100, 32), mean=1.0)
+        gold = naive_attention(q, k, v, dtype=jnp.float64)
+        got = pasa_attention(q, k, v, beta=0.9375, policy=F64, block_kv=64)
+        assert rmse(got, gold) < 1e-12
+
+    def test_decode_kv_len_mask(self, rng):
+        q, k, v = _qkv(rng, (2, 2, 512, 32), mean=1.0)
+        qd = q[:, :, 200:201]
+        gold = naive_attention(qd, k[:, :, :300], v[:, :, :300],
+                               dtype=jnp.float64)
+        got = pasa_attention(
+            qd, k, v, beta=0.9375, policy=F64, block_kv=128,
+            kv_len=jnp.asarray(300),
+        )
+        assert rmse(got, gold) < 1e-12
+
+
+class TestOverflowBehavior:
+    """Reproduces the paper's Table 4 / Figures 9-10 overflow findings."""
+
+    SHAPE = (1, 4, 1280, 128)  # paper's random-benchmark shape (B,N,S,D)
+
+    def _uniform(self, key, x0, am):
+        ks = jax.random.split(key, 3)
+        mk = lambda k: jax.random.uniform(
+            k, self.SHAPE, jnp.float32, minval=x0 - am, maxval=x0 + am
+        )
+        return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+    def test_fp16_fa_overflows_at_large_mean(self, rng):
+        """Table 4 row 1: uniform x0=30, Am=0.5 -> 100% NaN for FP16-FP32 FA."""
+        q, k, v = self._uniform(rng, 30.0, 0.5)
+        out = flash_attention(q, k, v, policy=FP16_FP32, block_kv=128)
+        st_ = overflow_stats(out)
+        assert st_["nan_pct"] > 99.0
+
+    def test_pasa_fp16_survives_large_mean(self, rng):
+        q, k, v = self._uniform(rng, 30.0, 0.5)
+        out = pasa_attention(q, k, v, beta=0.984497, policy=FP16, block_kv=128)
+        st_ = overflow_stats(out)
+        assert not st_["overflow"]
+        gold = naive_attention(q, k, v, dtype=jnp.float64)
+        assert rmse(out, gold) < 0.05
+
+    def test_fp32_fa_survives_large_mean(self, rng):
+        """Original FA precision allocation never overflows (Figure 9a)."""
+        q, k, v = self._uniform(rng, 30.0, 0.5)
+        out = flash_attention(q, k, v, policy=FP32, block_kv=128)
+        assert not overflow_stats(out)["overflow"]
+
+    def test_partial_overflow_at_moderate_amplitude(self, rng):
+        """Table 4 row 2-3: x0=20, Am=15 -> small NaN percentage."""
+        q, k, v = self._uniform(rng, 20.0, 15.0)
+        out = flash_attention(q, k, v, policy=FP16_FP32, block_kv=128)
+        st_ = overflow_stats(out)
+        assert st_["overflow"] and st_["nan_pct"] < 50.0
+
+    def test_pasa_beats_partial_fa_accuracy_at_bias(self, rng):
+        """Figures 9-10 ordering: PASA RMSE < FP16_FP32 FA RMSE for biased
+        inputs (both overflow-free regime)."""
+        q, k, v = self._uniform(rng, 10.0, 0.5)
+        gold = naive_attention(q, k, v, dtype=jnp.float64)
+        r_pasa = rmse(
+            pasa_attention(q, k, v, beta=0.984497, policy=FP16, block_kv=128),
+            gold,
+        )
+        r_fa = rmse(flash_attention(q, k, v, policy=FP16_FP32, block_kv=128),
+                    gold)
+        r_fa32 = rmse(flash_attention(q, k, v, policy=FP32, block_kv=128),
+                      gold)
+        assert r_pasa < r_fa
+        assert r_fa32 < r_pasa
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seq=st.sampled_from([64, 128, 192, 320]),
+    d=st.sampled_from([32, 64, 128]),
+    beta=st.sampled_from([0.9375, 0.984497]),
+    mean=st.floats(-8.0, 8.0),
+    causal=st.booleans(),
+)
+def test_property_pasa_exact_any_geometry(seq, d, beta, mean, causal):
+    """PASA(fp64) == naive(fp64) over random geometry/bias/causality."""
+    key = jax.random.PRNGKey(int(seq * d + mean * 10) % 2**31)
+    q, k, v = _qkv(key, (1, 2, seq, d), mean=mean)
+    gold = naive_attention(q, k, v, causal=causal, dtype=jnp.float64)
+    got = pasa_attention(
+        q, k, v, beta=beta, policy=F64, block_kv=64, causal=causal
+    )
+    assert rmse(got, gold) < 1e-11
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mean=st.floats(-25.0, 25.0),
+    amp=st.floats(0.1, 10.0),
+)
+def test_property_pasa_fp16_never_overflows(mean, amp):
+    """System invariant: PASA at the fully-fp16 allocation produces finite
+    output wherever |QK^T| stays within fp32 (the paper's robustness claim)."""
+    key = jax.random.PRNGKey(int(abs(mean) * 100 + amp * 10))
+    ks = jax.random.split(key, 3)
+    shape = (1, 2, 512, 128)
+    mk = lambda k: jax.random.normal(k, shape, jnp.float32) * amp + mean
+    q, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    out = pasa_attention(q, k, v, beta=0.984497, policy=FP16, block_kv=128)
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())

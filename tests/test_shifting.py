@@ -1,0 +1,91 @@
+"""Shifting matrix M, Theorem 2.1, and the GEMM pre-processing identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shifting
+
+
+def test_theorem_2_1_inverse():
+    """M = I - lam J  =>  M^-1 = I + lam/(1-lam s) J."""
+    s, lam = 32, 0.984497 / 32
+    m = jnp.eye(s, dtype=jnp.float64) - lam * jnp.ones((s, s), jnp.float64)
+    minv = jnp.eye(s, dtype=jnp.float64) + (
+        lam / (1 - lam * s)
+    ) * jnp.ones((s, s), jnp.float64)
+    np.testing.assert_allclose(np.asarray(m @ minv), np.eye(s), atol=1e-12)
+
+
+def test_shifting_matrix_inverse_closed_form():
+    s2, d, beta = 64, 128, 0.9375
+    m = shifting.shifting_matrix(s2, d, beta, dtype=jnp.float64)
+    minv = shifting.shifting_matrix_inverse(s2, d, beta)
+    np.testing.assert_allclose(np.asarray(m @ minv), np.eye(s2), atol=1e-10)
+
+
+def test_singular_at_beta_one():
+    with pytest.raises(ValueError):
+        shifting.shifting_matrix_inverse(64, 128, 1.0)
+    with pytest.raises(ValueError):
+        shifting.shifting_matrix(64, 128, 1.5)
+
+
+def test_gemm_shift_equals_algebraic_shift():
+    """K^T M == (K - beta*blockmean(K)) / sqrt(d) per block (Eq. 11)."""
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (2, 3, 256, 64), jnp.float64) + 5.0
+    beta, block = 0.984497, 64
+    m = shifting.shifting_matrix(block, 64, beta, dtype=jnp.float64)
+    got = shifting.shift_kv_blocks(k, m, block)
+    want = shifting.shift_kv_reference(k, 64, beta, block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-10)
+
+
+def test_shift_reduces_bias_and_amplitude():
+    """Figure 5: shifted K has near-zero mean and smaller range."""
+    key = jax.random.PRNGKey(1)
+    k = jax.random.normal(key, (1, 1, 512, 128)) * 2.0 + 30.0
+    m = shifting.shifting_matrix(128, 128, 0.984497, dtype=jnp.float32)
+    ks = shifting.shift_kv_blocks(k, m, 128)
+    assert abs(float(ks.mean())) < 0.1
+    assert float(jnp.abs(ks).max()) < float(jnp.abs(k).max()) / 5
+
+
+def test_effective_invariance_exact_at_fp64():
+    assert shifting.effective_invariance(128, 128, 0.9375, jnp.float64) == (
+        pytest.approx(15.0, abs=1e-12)
+    )
+
+
+def test_effective_invariance_fp16_close_to_ideal_for_optimized_beta():
+    beta = 0.984497
+    eff = shifting.effective_invariance(128, 128, beta, jnp.float16)
+    ideal = beta / (1 - beta)
+    assert eff == pytest.approx(ideal, rel=0.02)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s2=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([32, 64, 128]),
+    beta=st.sampled_from([0.0, 0.5, 0.9375, 0.968994, 0.984497]),
+)
+def test_property_row_mean_relation(s2, d, beta):
+    """Eq. 14: mean(S') = (1-beta) * mean(S) per row, any block/beta."""
+    if beta == 0.0:
+        return
+    key = jax.random.PRNGKey(s2 * d)
+    q = jax.random.normal(key, (4, s2 if False else 16, d), jnp.float64)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (4, s2, d), jnp.float64)
+    m = shifting.shifting_matrix(s2, d, beta, dtype=jnp.float64)
+    ks = shifting.shift_kv_blocks(k, m, s2)
+    s_orig = jnp.einsum("bsd,btd->bst", q, k) / np.sqrt(d)
+    s_shift = jnp.einsum("bsd,btd->bst", q, ks)
+    np.testing.assert_allclose(
+        np.asarray(s_shift.mean(-1)),
+        (1 - beta) * np.asarray(s_orig.mean(-1)),
+        atol=1e-9,
+    )
