@@ -19,6 +19,12 @@ def main() -> None:
     rows += T.real_model_overflow()
     rows += T.kernel_timing()
     try:
+        from benchmarks import paged_vs_dense as PD
+
+        rows += PD.report()
+    except Exception as e:  # keep run.py total if the serve workload fails
+        print(f"[paged-vs-dense report skipped: {e}]", file=sys.stderr)
+    try:
         rows += R.report()
     except Exception as e:  # dry-run artifacts absent on a fresh checkout
         print(f"[roofline report skipped: {e}]", file=sys.stderr)

@@ -4,6 +4,11 @@ Covers the inference side of the paper: prompt consumption + generation with
 the decode attention path (kv_len-masked blocked PASA; the Pallas decode
 kernel is the TPU fast path for the same computation).
 
+This is the DENSE-cache route (one (L, B, max_len, kv_dim) cache per batch).
+For the production-shaped path - paged KV cache, free-list page allocator,
+continuous batching with mid-stream admission - see examples/serve_paged.py,
+or pass ``--paged`` to ``python -m repro.launch.serve``.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
 

@@ -1,0 +1,99 @@
+"""Continuous-batching demo: paged-KV engine with staggered request arrivals.
+
+Six requests with different prompt lengths and generation budgets arrive
+over time (two up front, two mid-stream while the first pair is still
+generating, two more after capacity frees up).  The engine admits each as
+soon as a batch slot AND enough KV pages are free, runs every live request
+in one fully-batched decode step per token, and recycles pages the moment a
+request finishes - watch `live_pages` fall and admissions follow.
+
+Correctness gate (the whole point of rearranging the memory layout under a
+fixed numeric contract): every completed output is compared token-for-token
+against the dense-cache serve path on the same prompt - the paged engine
+must be BIT-IDENTICAL, because both decode paths use the same masked
+valid-column PASA shift at the same block granularity (page_size ==
+attention.block_kv; see repro/runtime/engine.py).
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+(CPU-friendly: reduced config, XLA gather fallback for the paged read.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine, dense_greedy_reference
+
+
+def main():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # (arrival_step, prompt_len, max_new_tokens) - deliberately ragged.
+    workload = [
+        (0, 7, 8),
+        (0, 12, 6),
+        (4, 5, 9),    # arrives while the first two are mid-generation
+        (6, 9, 5),
+        (12, 14, 7),  # arrives after early finishers returned their pages
+        (12, 4, 6),
+    ]
+    prompts = [
+        list(rng.integers(0, cfg.vocab_size, n)) for _, n, _ in workload
+    ]
+
+    eng = ServeEngine(
+        bundle, params, max_batch=3, num_pages=12, page_size=16,
+        max_seq_len=max(n + g for _, n, g in workload),
+    )
+    pending = sorted(
+        zip(workload, prompts), key=lambda wp: wp[0][0]
+    )
+    reqs = {}
+    mid_stream_admits = 0
+    while pending or not eng.idle:
+        while pending and pending[0][0][0] <= eng.steps:
+            (arr, _, max_new), prompt = pending.pop(0)
+            r = eng.submit(prompt, max_new)
+            reqs[r.req_id] = r
+            print(f"step {eng.steps:3d}: submit req{r.req_id} "
+                  f"(prompt {len(prompt)}, gen {max_new})")
+        n_live = eng.step()
+        for r in reqs.values():
+            if r.admit_step == eng.steps - 1 and r.admit_step > 0:
+                mid_stream_admits += 1
+                st = eng.stats()
+                print(f"step {eng.steps - 1:3d}: admit  req{r.req_id} "
+                      f"mid-stream ({n_live} live, "
+                      f"{st['free_pages']} pages free)")
+
+    assert mid_stream_admits >= 2, (
+        f"expected >=2 mid-stream admissions, saw {mid_stream_admits}"
+    )
+
+    print("\nrequest timelines (engine steps):")
+    for rid, r in sorted(reqs.items()):
+        print(f"  req{rid}: submit {r.submit_step:3d}  admit {r.admit_step:3d}"
+              f"  finish {r.finish_step:3d}  tokens {r.generated}")
+
+    print("\nverifying against the dense-cache serve path...")
+    for rid, r in sorted(reqs.items()):
+        want = dense_greedy_reference(bundle, params, r.prompt, r.max_new_tokens)
+        assert r.generated == want, (
+            f"req{rid}: paged {r.generated} != dense {want}"
+        )
+        print(f"  req{rid}: bit-identical to dense ({len(want)} tokens)")
+
+    st = eng.stats()
+    print(f"\nall {len(reqs)} requests served in {st['steps']} engine steps; "
+          f"pool {st['cache_bytes'] / 1e3:.0f} kB, "
+          f"all pages returned: {st['live_pages'] == 0}")
+    print("serve_paged example OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Version portability shims for the jax API surface this repo targets.
+
+The codebase is written against the modern jax API (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.make_mesh(axis_types=...)``,
+``jax.sharding.AxisType``).  The pinned runtime may ship an older jax
+(0.4.x) where those spellings live in ``jax.experimental.shard_map`` /
+don't exist yet.  Everything version-dependent funnels through this module
+so the rest of the tree stays written against one API:
+
+  * :func:`shard_map` - accepts the modern keyword surface
+    (``axis_names`` = the *manual* axes, ``check_vma``) and translates to
+    the legacy ``auto``/``check_rep`` spelling when needed.
+  * :func:`make_mesh` - drops ``axis_types`` when the installed
+    ``jax.make_mesh`` does not accept it.
+  * :func:`manual_axes` - the set of mesh axes that are manual at the
+    current trace point.  On new jax this reads the abstract mesh; on old
+    jax it falls back to a thread-local maintained by :func:`shard_map`
+    (every shard_map in this repo goes through here, so the fallback is
+    exact for our own nesting checks).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+_tls = threading.local()
+
+
+def _tracked_manual_axes() -> frozenset:
+    return getattr(_tls, "manual_axes", frozenset())
+
+
+def manual_axes() -> frozenset:
+    """Mesh axes that are manual (shard_map-bound) at this trace point."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            out = set()
+            for n, t in zip(am.axis_names, am.axis_types):
+                if "anual" in str(t):
+                    out.add(n)
+            return frozenset(out) | _tracked_manual_axes()
+    except Exception:
+        pass
+    return _tracked_manual_axes()
+
+
+def shard_map(
+    f: Optional[Callable] = None,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[frozenset] = None,
+    check_vma: bool = False,
+) -> Callable:
+    """``jax.shard_map`` across jax versions.
+
+    Args:
+      f: the per-shard body.  May be omitted for decorator use
+        (``@functools.partial(shard_map, mesh=..., ...)``).
+      axis_names: the MANUAL axes (modern convention).  None = all mesh
+        axes manual.
+      check_vma: modern replication-tracking switch; maps to the legacy
+        ``check_rep``.
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma,
+        )
+
+    manual = (
+        frozenset(axis_names) if axis_names is not None
+        else frozenset(mesh.axis_names)
+    )
+
+    @functools.wraps(f)
+    def tracked(*args, **kwargs):
+        prev = _tracked_manual_axes()
+        _tls.manual_axes = prev | manual
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _tls.manual_axes = prev
+
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(
+            tracked, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=manual, check_vma=check_vma,
+        )
+
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    auto = frozenset(mesh.axis_names) - manual
+    return _legacy(
+        tracked, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` with a fallback for jaxes that predate it.
+
+    On old jax, ``jax.core.axis_frame(name)`` resolves the bound axis size
+    (returned directly as an int on 0.4.x; as a frame object earlier).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.core as jc
+
+    frame = jc.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version (older
+    jax returns a one-element list of per-computation dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` that tolerates jaxes without ``axis_types``.
+
+    Requests Auto axis types where supported (explicit-sharding-safe);
+    silently drops the argument on older jax, whose meshes are Auto-only
+    anyway.
+    """
+    if "axis_types" not in _MAKE_MESH_PARAMS:
+        kwargs.pop("axis_types", None)
+    elif "axis_types" not in kwargs and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (
+            (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+        )
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

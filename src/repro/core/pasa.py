@@ -88,6 +88,7 @@ def update_state(
     policy: PrecisionPolicy,
     mask: Optional[jnp.ndarray],
     post_scale: float = 1.0,
+    sbar_over_mask: bool = False,
 ) -> AttnState:
     """Fold one KV block into the running state (Algorithm 1 lines 11-20).
 
@@ -98,10 +99,18 @@ def update_state(
       v: (..., s2, D) value block.
       inva: beta/(1-beta) (0.0 => plain FlashAttention-2; all correction terms
         vanish and this is exactly FA2's online softmax).
-      mask: optional (..., S1, s2) bool, True = attend.  Applied *after* the
-        row-mean: the shift M subtracted involves all s2 columns, so S-bar'
-        must also be over all s2 columns for the recovery identity (Eq. 14)
-        to hold.
+      mask: optional (..., S1, s2) bool, True = attend.  By default applied
+        *after* the row-mean: the shift M subtracted involves all s2 columns,
+        so S-bar' must also be over all s2 columns for the recovery identity
+        (Eq. 14) to hold.
+      sbar_over_mask: compute the row pseudo-average over the *masked* (valid)
+        columns only - the decode-kernel convention, where the algebraic key
+        shift also used only the valid columns of the block.  Eq. 14 holds for
+        any per-block shift vector as long as the row mean is taken over the
+        same column set the shift used, so both conventions are exact; this
+        flag selects which one.  A fully-masked block contributes sbar = 0
+        (count clamped to 1) and its exp() terms underflow to exactly 0, so
+        trailing dead blocks never perturb the output.
     """
     st = policy.stat_dtype
     gemm_t = _gemm_dtype(policy)
@@ -117,8 +126,17 @@ def update_state(
         # whole subject) is faithfully reproduced at fp16 score precision.
         s = s * jnp.asarray(post_scale, s.dtype)
 
-    # -- line 13: row pseudo-average of the *shifted* block (full block). ---
-    sbar = jnp.mean(s.astype(st), axis=-1, keepdims=True)
+    # -- line 13: row pseudo-average of the shifted block. ------------------
+    if sbar_over_mask and mask is not None:
+        cnt_cols = jnp.maximum(
+            jnp.sum(mask.astype(st), axis=-1, keepdims=True), 1.0
+        )
+        sbar = (
+            jnp.sum(jnp.where(mask, s.astype(st), 0.0), axis=-1, keepdims=True)
+            / cnt_cols
+        )
+    else:
+        sbar = jnp.mean(s.astype(st), axis=-1, keepdims=True)
 
     if mask is not None:
         s = jnp.where(mask, s, jnp.asarray(NEG_BIG, s.dtype))
@@ -126,6 +144,13 @@ def update_state(
     # -- line 12: local (uncorrected) softmax stats. -------------------------
     m_loc = jnp.max(s.astype(st), axis=-1, keepdims=True)
     p = jnp.exp(s.astype(st) - m_loc).astype(policy.score_dtype)
+    if mask is not None:
+        # Force masked probabilities to exactly 0 (matching the Pallas
+        # kernels).  In live blocks exp(NEG_BIG - m_loc) already underflows
+        # to 0, but in a FULLY-masked block m_loc == NEG_BIG makes p == 1
+        # everywhere, and e_cur * (p @ v) would 0*Inf-poison the accumulator
+        # if v holds non-finite stale values (recycled, unscrubbed pages).
+        p = jnp.where(mask, p, jnp.asarray(0.0, p.dtype))
     l_loc = jnp.sum(p.astype(st), axis=-1, keepdims=True)
 
     first = state.cnt == 0
@@ -154,6 +179,16 @@ def update_state(
     l_new = e_prev * state.l + e_cur * l_loc
 
     # -- lines 19-20: temporary output + rescaled accumulation. ---------------
+    if sbar_over_mask and mask is not None:
+        # Decode/no-scrub path: zero v at fully-masked columns before the PV
+        # GEMM.  p is 0 there, but 0 * NaN = NaN inside the contraction, so
+        # non-finite stale values in recycled KV pages would otherwise
+        # poison the accumulator.  (Masks here are row-uniform: the causal
+        # combination is rejected up front in blocked_attention.)
+        col_live = jnp.any(mask, axis=-2, keepdims=True)       # (..., 1, s2)
+        v = jnp.where(
+            jnp.swapaxes(col_live, -1, -2), v, jnp.asarray(0.0, v.dtype)
+        )
     pv = jnp.einsum(
         "...st,...td->...sd", p, v.astype(p.dtype), preferred_element_type=gemm_t
     ).astype(policy.acc_dtype)
@@ -183,7 +218,8 @@ def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "beta", "policy", "block_kv", "causal", "q_offset_static", "use_gemm_shift",
+        "beta", "policy", "block_kv", "causal", "q_offset_static",
+        "use_gemm_shift", "shift_mask_valid",
     ),
 )
 def blocked_attention(
@@ -199,6 +235,7 @@ def blocked_attention(
     q_offset: Optional[jnp.ndarray] = None,
     q_offset_static: int = 0,
     use_gemm_shift: bool = True,
+    shift_mask_valid: bool = False,
 ) -> jnp.ndarray:
     """PASA (beta>0) or FlashAttention-2 (beta==0) over KV blocks via lax.scan.
 
@@ -215,12 +252,33 @@ def blocked_attention(
       use_gemm_shift: True = the paper's batched-GEMM M preprocessing
         (lines 5-7); False = algebraic (K - beta*blockmean)/sqrt(d) epilogue
         (beyond-paper TPU-optimized variant; identical math, validated equal).
+      shift_mask_valid: decode-kernel ragged-tail convention - the algebraic
+        key shift and the row pseudo-average use only the *valid*
+        (pos < kv_len, pre-padding) columns of each block, exactly matching
+        kernels/pasa_decode.py and kernels/pasa_paged_decode.py.  Requires
+        ``use_gemm_shift=False`` when beta > 0 (a fixed GEMM M cannot mask).
+        Both conventions are mathematically exact (Eq. 14 holds for any
+        consistent per-block shift/mean pair); they differ only in rounding
+        on partial tail blocks, and this flag makes the XLA path
+        bit-comparable to the Pallas decode kernels.  It also makes the
+        output independent of whatever stale values sit beyond kv_len, which
+        is what permits KV-page reuse without scrubbing.
 
     Returns:
       (..., S1, D) attention output in ``policy.out_dtype``.
     """
     if not 0.0 <= beta < 1.0:
         raise ValueError(f"beta must be in [0, 1), got {beta}")
+    if shift_mask_valid and use_gemm_shift and beta > 0.0:
+        raise ValueError(
+            "shift_mask_valid needs the algebraic shift (use_gemm_shift=False)"
+        )
+    if shift_mask_valid and causal:
+        # The recovery identity needs sbar over exactly the columns the key
+        # shift used; under causal masking sbar's column set would shrink
+        # per-row below the shift's valid-column set.  Decode steps pass
+        # causal=False (the kv_len mask subsumes causality for one token).
+        raise ValueError("shift_mask_valid is decode-only (causal=False)")
     d = q.shape[-1]
     s1 = q.shape[-2]
     q = q.astype(policy.input_dtype)
@@ -232,6 +290,11 @@ def blocked_attention(
     s2_pad = k.shape[-2]
     n_blocks = s2_pad // block_kv
 
+    # Valid-column limit shared by the mask and (optionally) the shift.
+    limit = jnp.asarray(s2_orig, jnp.int32)
+    if kv_len is not None:
+        limit = jnp.minimum(limit, kv_len.astype(jnp.int32))
+
     post_scale = 1.0
     if beta > 0.0:
         if use_gemm_shift:
@@ -242,9 +305,25 @@ def blocked_attention(
             k = shift_kv_blocks(k, m_mat, block_kv).astype(policy.input_dtype)
         else:
             inva = beta / (1.0 - beta)
+            st = policy.stat_dtype
             kb = k.reshape(*k.shape[:-2], n_blocks, block_kv, d)
-            mean = jnp.mean(kb.astype(policy.stat_dtype), axis=-2, keepdims=True)
-            kb = (kb.astype(policy.stat_dtype) - beta * mean) / np.sqrt(d)
+            if shift_mask_valid:
+                cols = jnp.arange(s2_pad, dtype=jnp.int32).reshape(
+                    n_blocks, block_kv
+                )
+                vmask = (
+                    cols < jnp.reshape(limit, jnp.shape(limit) + (1, 1))
+                )[..., None]                       # (..., nb, bkv, 1)
+                cnt = jnp.maximum(
+                    jnp.sum(vmask.astype(st), axis=-2, keepdims=True), 1.0
+                )
+                mean = (
+                    jnp.sum(jnp.where(vmask, kb.astype(st), 0.0), axis=-2,
+                            keepdims=True) / cnt
+                )
+            else:
+                mean = jnp.mean(kb.astype(st), axis=-2, keepdims=True)
+            kb = (kb.astype(st) - beta * mean) / np.sqrt(d)
             k = kb.reshape(*k.shape).astype(policy.input_dtype)
     else:
         # Faithful plain-FA precision allocation: the first GEMM emits raw
@@ -256,7 +335,10 @@ def blocked_attention(
     kb = jnp.moveaxis(k.reshape(*k.shape[:-2], n_blocks, block_kv, d), -3, 0)
     vb = jnp.moveaxis(v.reshape(*v.shape[:-2], n_blocks, block_kv, d), -3, 0)
 
-    need_mask = causal or (kv_len is not None) or (s2_pad != s2_orig)
+    need_mask = (
+        causal or (kv_len is not None) or (s2_pad != s2_orig)
+        or shift_mask_valid
+    )
     q_pos = None
     if causal:
         qp = jnp.arange(s1, dtype=jnp.int32) + jnp.int32(q_offset_static)
@@ -277,14 +359,11 @@ def blocked_attention(
             mask = jnp.ones((s1, block_kv), bool)
             if causal:
                 mask = q_pos >= col[None, :]
-            limit = jnp.asarray(s2_orig, jnp.int32)
-            if kv_len is not None:
-                limit = jnp.minimum(limit, kv_len.astype(jnp.int32))
             col_ok = col < jnp.reshape(limit, jnp.shape(limit) + (1, 1))
             mask = jnp.logical_and(mask, col_ok)
         state = update_state(
             state, qs, kj, vj, inva=inva, policy=policy, mask=mask,
-            post_scale=post_scale,
+            post_scale=post_scale, sbar_over_mask=shift_mask_valid,
         )
         return state, None
 

@@ -61,7 +61,9 @@ def ring_pasa_attention(
     s2_loc = k.shape[-2]
     if s2_loc % block_kv:
         raise ValueError(f"local KV len {s2_loc} % block_kv {block_kv} != 0")
-    n_dev = jax.lax.axis_size(axis_name)
+    from repro.compat import axis_size
+
+    n_dev = axis_size(axis_name)
     my = jax.lax.axis_index(axis_name)
 
     q = q.astype(policy.input_dtype)
@@ -134,10 +136,12 @@ def make_ring_attention(mesh, axis_name: str, **kw):
     the caller's enclosing jit)."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     spec = P(None, None, axis_name, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(spec, spec, spec),
+        shard_map, mesh=mesh, in_specs=(spec, spec, spec),
         out_specs=spec, check_vma=False,
     )
     def fn(q, k, v):

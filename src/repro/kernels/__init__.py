@@ -4,7 +4,14 @@ from repro.kernels.ops import (
     flash_attention,
     pasa_attention,
     pasa_decode,
+    pasa_paged_decode,
     shift_kv,
 )
 
-__all__ = ["flash_attention", "pasa_attention", "pasa_decode", "shift_kv"]
+__all__ = [
+    "flash_attention",
+    "pasa_attention",
+    "pasa_decode",
+    "pasa_paged_decode",
+    "shift_kv",
+]

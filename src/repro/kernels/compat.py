@@ -1,0 +1,16 @@
+"""Pallas-TPU API portability.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+pinned runtime may have either.  All kernels import :data:`CompilerParams`
+from here instead of reaching into ``pltpu`` directly.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", None
+) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -24,6 +24,7 @@ from repro.core.precision import FP16, PrecisionPolicy
 
 from repro.kernels import pasa_attention as _attn
 from repro.kernels import pasa_decode as _decode
+from repro.kernels import pasa_paged_decode as _paged
 from repro.kernels import shift_kv as _shift
 
 
@@ -129,6 +130,54 @@ def pasa_decode(
         v_cache.astype(policy.input_dtype),
         kv_len,
         inva=inva, beta=beta, block_kv=block_kv,
+        stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
+        score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        interpret=interpret,
+    )
+
+
+def pasa_paged_decode(
+    q: jnp.ndarray,          # (B, KVH, G, D) grouped query heads, one token
+    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray, # (B, max_pages) int32
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """GQA flash-decode over a paged KV cache.
+
+    ``use_kernel=True`` runs the Pallas kernel (page-table scalar prefetch;
+    TPU, or CPU via ``interpret=True``); ``use_kernel=False`` takes the XLA
+    ``jnp.take`` gather fallback.  Both use the masked valid-column shift
+    (``shift_mask_valid`` convention), so page granularity == PASA block
+    granularity and recycled pages need no scrubbing.
+    """
+    if q.ndim != 4:
+        raise ValueError("q must be (B, KVH, G, D)")
+    if k_pages.ndim != 4 or k_pages.shape != v_pages.shape:
+        raise ValueError(
+            f"pages must be (P, page, KVH, D); got {k_pages.shape} / "
+            f"{v_pages.shape}"
+        )
+    if not use_kernel:
+        return _paged.paged_decode_xla(
+            q.astype(policy.input_dtype),
+            k_pages.astype(policy.input_dtype),
+            v_pages.astype(policy.input_dtype),
+            page_table, kv_len,
+            beta=beta, policy=policy, block_kv=k_pages.shape[1],
+        )
+    inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
+    return _paged.paged_decode_kernel_call(
+        q.astype(policy.input_dtype),
+        k_pages.astype(policy.input_dtype),
+        v_pages.astype(policy.input_dtype),
+        page_table, kv_len,
+        inva=inva, beta=beta,
         stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
         score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
         interpret=interpret,

@@ -33,6 +33,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_BIG = -30000.0
 _LANES = 128
 
@@ -215,7 +217,7 @@ def attention_kernel_call(
             pltpu.SMEM((1, 1), jnp.int32),               # processed-block count
             pltpu.VMEM((block_q, d), acc_dtype),         # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

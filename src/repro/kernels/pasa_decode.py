@@ -29,8 +29,119 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_BIG = -30000.0
 _LANES = 128
+
+
+def init_decode_scratch(m_scr, l_scr, f_scr, cnt_scr, acc_scr):
+    """Reset the online-softmax running state at the start of a KV sweep."""
+    m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    f_scr[...] = jnp.zeros_like(f_scr)
+    cnt_scr[...] = jnp.zeros_like(cnt_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def masked_block_update(
+    q, k, v,               # (G, d), (block, d), (block, d) VMEM values
+    kv_len,                # scalar int32 valid length of this sequence
+    col0,                  # first global column of this block (j * block)
+    block: int,
+    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+    *,
+    inva: float,
+    beta: float,
+    stat_dtype,
+    acc_dtype,
+    score_dtype,
+):
+    """Fold one KV block into the running decode state (shared kernel body).
+
+    The algebraic-shift/masked-mean update of the module doc: per-block key
+    mean and row pseudo-average over the *valid* (col < kv_len) columns
+    only.  Used bit-identically by the contiguous decode kernel (block ==
+    block_kv) and the paged decode kernel (block == page_size) - keeping
+    this in ONE place is what makes the two kernels' outputs comparable
+    bit-for-bit (tests/test_paged.py).
+    """
+    d = q.shape[-1]
+    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
+
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    valid = cols < kv_len                              # (block, 1)
+    count = jnp.sum(valid.astype(stat_dtype))
+
+    if beta > 0.0:
+        # Masked per-block key mean (algebraic shift; see module doc).
+        km = jnp.sum(
+            jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
+            keepdims=True,
+        ) / count                                      # (1, d)
+        k_sh = (
+            (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
+            * scale
+        ).astype(k.dtype)
+    else:
+        k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
+
+    s = jax.lax.dot_general(
+        q, k_sh, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(score_dtype)                              # (G, block)
+
+    vmask = valid[:, 0][None, :]                       # (1, block)
+    # Masked row mean over the *valid* columns only (matches the shift).
+    sbar = (
+        jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
+                keepdims=True) / count
+    )
+    s = jnp.where(vmask, s, jnp.asarray(NEG_BIG, s.dtype))
+
+    m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
+    p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
+    p = jnp.where(vmask, p, jnp.asarray(0.0, p.dtype))
+    l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+
+    m_prev = m_scr[:, :1]
+    l_prev = l_scr[:, :1]
+    cnt = cnt_scr[0, 0]
+    first = cnt == 0
+
+    if inva != 0.0:
+        f_prev = f_scr[:, :1]
+        cntf = cnt.astype(stat_dtype)
+        f_new = (cntf * f_prev + sbar) / (cntf + 1.0)
+        dm_prev_c = jnp.asarray(inva, stat_dtype) * (f_prev - f_new)
+        dm_cur_c = jnp.asarray(inva, stat_dtype) * (sbar - f_new)
+        f_scr[...] = jnp.broadcast_to(f_new, f_scr.shape)
+    else:
+        dm_prev_c = jnp.zeros_like(m_prev)
+        dm_cur_c = jnp.zeros_like(m_loc)
+
+    cand_prev = jnp.where(
+        first, jnp.asarray(NEG_BIG, stat_dtype), m_prev + dm_prev_c
+    )
+    m_new = jnp.maximum(cand_prev, m_loc + dm_cur_c)
+    e_prev = jnp.exp(cand_prev - m_new)
+    e_cur = jnp.exp(m_loc + dm_cur_c - m_new)
+    l_new = e_prev * l_prev + e_cur * l_loc
+
+    # Zero v at invalid columns BEFORE the PV GEMM: p is already 0 there,
+    # but 0 * NaN = NaN inside the contraction, so non-finite stale values
+    # in recycled (unscrubbed) pages would poison pv through the dot.
+    v_live = jnp.where(valid, v, jnp.asarray(0.0, v.dtype))
+    pv = jax.lax.dot_general(
+        p, v_live.astype(p.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(acc_dtype)
+    acc_scr[...] = (
+        e_prev.astype(acc_dtype) * acc_scr[...] + e_cur.astype(acc_dtype) * pv
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    cnt_scr[0, 0] = cnt + 1
 
 
 def _decode_kernel(
@@ -50,94 +161,20 @@ def _decode_kernel(
     b = pl.program_id(0)
     j = pl.program_id(2)
     kv_len = kv_len_ref[b]
-    d = q_ref.shape[-1]
-    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
 
     @pl.when(j == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        f_scr[...] = jnp.zeros_like(f_scr)
-        cnt_scr[...] = jnp.zeros_like(cnt_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        init_decode_scratch(m_scr, l_scr, f_scr, cnt_scr, acc_scr)
 
     @pl.when(j * block_kv < kv_len)
     def _step():
-        q = q_ref[0, 0]        # (G, d)
-        k = k_ref[0, 0]        # (bkv, d)
-        v = v_ref[0, 0]        # (bkv, d)
-
-        cols = j * block_kv + jax.lax.broadcasted_iota(
-            jnp.int32, (block_kv, 1), 0
+        masked_block_update(
+            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+            kv_len, j * block_kv, block_kv,
+            m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+            inva=inva, beta=beta, stat_dtype=stat_dtype,
+            acc_dtype=acc_dtype, score_dtype=score_dtype,
         )
-        valid = cols < kv_len                              # (bkv, 1)
-        count = jnp.sum(valid.astype(stat_dtype))
-
-        if beta > 0.0:
-            # Masked per-block key mean (algebraic shift; see module doc).
-            km = jnp.sum(
-                jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
-                keepdims=True,
-            ) / count                                      # (1, d)
-            k_sh = (
-                (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
-                * scale
-            ).astype(k.dtype)
-        else:
-            k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
-
-        s = jax.lax.dot_general(
-            q, k_sh, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).astype(score_dtype)                              # (G, bkv)
-
-        vmask = valid[:, 0][None, :]                       # (1, bkv)
-        # Masked row mean over the *valid* columns only (matches the shift).
-        sbar = (
-            jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
-                    keepdims=True) / count
-        )
-        s = jnp.where(vmask, s, jnp.asarray(NEG_BIG, s.dtype))
-
-        m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
-        p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
-        p = jnp.where(vmask, p, jnp.asarray(0.0, p.dtype))
-        l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
-
-        m_prev = m_scr[:, :1]
-        l_prev = l_scr[:, :1]
-        cnt = cnt_scr[0, 0]
-        first = cnt == 0
-
-        if inva != 0.0:
-            f_prev = f_scr[:, :1]
-            cntf = cnt.astype(stat_dtype)
-            f_new = (cntf * f_prev + sbar) / (cntf + 1.0)
-            dm_prev_c = jnp.asarray(inva, stat_dtype) * (f_prev - f_new)
-            dm_cur_c = jnp.asarray(inva, stat_dtype) * (sbar - f_new)
-            f_scr[...] = jnp.broadcast_to(f_new, f_scr.shape)
-        else:
-            dm_prev_c = jnp.zeros_like(m_prev)
-            dm_cur_c = jnp.zeros_like(m_loc)
-
-        cand_prev = jnp.where(
-            first, jnp.asarray(NEG_BIG, stat_dtype), m_prev + dm_prev_c
-        )
-        m_new = jnp.maximum(cand_prev, m_loc + dm_cur_c)
-        e_prev = jnp.exp(cand_prev - m_new)
-        e_cur = jnp.exp(m_loc + dm_cur_c - m_new)
-        l_new = e_prev * l_prev + e_cur * l_loc
-
-        pv = jax.lax.dot_general(
-            p, v.astype(p.dtype), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).astype(acc_dtype)
-        acc_scr[...] = (
-            e_prev.astype(acc_dtype) * acc_scr[...] + e_cur.astype(acc_dtype) * pv
-        )
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
-        cnt_scr[0, 0] = cnt + 1
 
     @pl.when(j == n_kv - 1)
     def _fin():
@@ -170,7 +207,17 @@ def decode_kernel_call(
     b, kvh, g, d = q.shape
     s2 = k_cache.shape[2]
     if s2 % block_kv:
-        raise ValueError(f"cache len {s2} %% block_kv {block_kv} != 0")
+        # Pad the cache view to the block granule instead of erroring: the
+        # kv_len masking already treats every pos >= kv_len as invalid, so a
+        # zero tail changes nothing (the padded columns never enter the
+        # masked block mean, the row mean, or the softmax).  This copies the
+        # whole cache per call - a documented SLOW path for ad-hoc shapes;
+        # serving loops should allocate block-aligned caches once at init.
+        pad = block_kv - s2 % block_kv
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        s2 += pad
     n_kv = s2 // block_kv
 
     kernel = functools.partial(
@@ -201,7 +248,7 @@ def decode_kernel_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

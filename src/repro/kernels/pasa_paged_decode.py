@@ -1,0 +1,195 @@
+"""PASA flash-decode over a PAGED KV cache (Pallas TPU kernel + XLA fallback).
+
+Extends ``pasa_decode.py`` (contiguous cache) to non-contiguous fixed-size
+pages: the per-sequence page table arrives via **scalar prefetch**, so the
+K/V BlockSpec index maps can translate the logical page index ``j`` of the
+grid into a physical page id *before* the DMA pipeline issues - the gather
+costs zero extra HBM traffic versus the contiguous kernel (each page is
+fetched exactly once, straight into VMEM).
+
+Algorithm identity: one grid step processes one page.  Because the engine
+fixes ``page_size`` to the PASA block length, the kernel body is the same
+algebraic-shift/masked-mean block update as the contiguous decode kernel
+(module doc there): the per-page key mean uses only valid (pos < kv_len)
+columns, the row pseudo-average S-bar is over the same columns, and the
+running (m, l, F-bar, acc) state lives in VMEM scratch across the page sweep.
+Stale contents of recycled pages beyond ``kv_len`` are therefore
+mathematically inert - no page scrubbing on free.
+
+Pages fully past ``kv_len`` are skipped via ``pl.when`` (their page-table
+entries point at the null page 0, a valid DMA target); valid pages of a
+sequence always form a prefix of its page table.
+
+Grid: (B, KVH, max_pages) with the page dimension innermost/"arbitrary".
+
+The XLA fallback (:func:`paged_decode_xla`) is a ``jnp.take`` gather of the
+pages followed by ``core.pasa.blocked_attention`` at the matching
+``shift_mask_valid`` convention - the CPU/GPU route, and the oracle the
+kernel is validated against (tests/test_paged.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.pasa_decode import init_decode_scratch, masked_block_update
+
+_LANES = 128
+
+
+def _paged_decode_kernel(
+    kv_len_ref,            # scalar prefetch: (B,) int32
+    pt_ref,                # scalar prefetch: (B, max_pages) int32 page table
+    q_ref, k_ref, v_ref,   # (1,1,G,D), (1,page,1,D), (1,page,1,D)
+    o_ref,                 # (1,1,G,D)
+    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+    *,
+    inva: float,
+    beta: float,
+    page_size: int,
+    n_pages: int,
+    stat_dtype,
+    acc_dtype,
+    score_dtype,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = kv_len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        init_decode_scratch(m_scr, l_scr, f_scr, cnt_scr, acc_scr)
+
+    @pl.when(j * page_size < kv_len)
+    def _step():
+        # One page == one PASA block: the shared block update (the SAME
+        # code the contiguous decode kernel runs, see pasa_decode.py) with
+        # the page's global column offset.  Only the ref slicing differs -
+        # the pool layout carries the head dim third.
+        masked_block_update(
+            q_ref[0, 0], k_ref[0, :, 0, :], v_ref[0, :, 0, :],
+            kv_len, j * page_size, page_size,
+            m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+            inva=inva, beta=beta, stat_dtype=stat_dtype,
+            acc_dtype=acc_dtype, score_dtype=score_dtype,
+        )
+
+    @pl.when(j == n_pages - 1)
+    def _fin():
+        l = l_scr[:, :1].astype(acc_dtype)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "inva", "beta", "stat_dtype", "acc_dtype", "score_dtype",
+        "out_dtype", "interpret",
+    ),
+)
+def paged_decode_kernel_call(
+    q: jnp.ndarray,          # (B, KVH, G, D) - one new token, grouped heads
+    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical page pool (raw keys)
+    v_pages: jnp.ndarray,    # (P, page, KVH, D)
+    page_table: jnp.ndarray, # (B, max_pages) int32 physical page ids
+    kv_len: jnp.ndarray,     # (B,) int32 valid lengths
+    *,
+    inva: float,
+    beta: float,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    score_dtype=jnp.float16,
+    out_dtype=jnp.float16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, kvh, g, d = q.shape
+    _, page_size, _, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        inva=inva, beta=beta, page_size=page_size, n_pages=n_pages,
+        stat_dtype=stat_dtype, acc_dtype=acc_dtype, score_dtype=score_dtype,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, kvl, pt: (b_, h, 0, 0)),
+            # The page gather: physical page id read from the prefetched
+            # table inside the index map, before the DMA is issued.
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h, j, kvl, pt: (pt[b_, j], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h, j, kvl, pt: (pt[b_, j], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, h, j, kvl, pt: (b_, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.VMEM((g, _LANES), stat_dtype),
+            pltpu.SMEM((1, 1), jnp.int32),
+            pltpu.VMEM((g, d), acc_dtype),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        kv_len.astype(jnp.int32), page_table.astype(jnp.int32),
+        q, k_pages, v_pages,
+    )
+    return out
+
+
+def paged_decode_xla(
+    q: jnp.ndarray,          # (B, KVH, G, D)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray, # (B, max_pages)
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    beta: float,
+    policy,
+    block_kv: int,
+) -> jnp.ndarray:
+    """Gather-then-attend fallback: ``jnp.take`` of the pages + the
+    shift_mask_valid blocked attention.  Bit-matches the dense decode path
+    when the page contents agree (tests/test_paged.py) and serves as the
+    validation oracle for the Pallas kernel."""
+    from repro.core.pasa import blocked_attention
+
+    b, kvh, g, d = q.shape
+    p_, page, _, _ = k_pages.shape
+    mp = page_table.shape[1]
+    flat = page_table.reshape(-1)
+    ks = jnp.take(k_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    vs = jnp.take(v_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    ks = jnp.moveaxis(ks, 2, 1)                      # (B, KVH, S2v, D)
+    vs = jnp.moveaxis(vs, 2, 1)
+    # kv_len rank must equal q's leading rank (B, KVH) for the in-scan mask
+    # and the shift's valid-column mask to broadcast consistently.
+    return blocked_attention(
+        q, ks, vs, beta=beta, policy=policy, block_kv=block_kv,
+        causal=False, kv_len=kv_len.reshape(b, 1),
+        use_gemm_shift=False, shift_mask_valid=True,
+    )

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _shift_kernel(m_ref, k_ref, o_ref, *, out_dtype):
     k = k_ref[0]                      # (bkv, d)
@@ -52,7 +54,7 @@ def shift_kv_kernel_call(
         ],
         out_specs=pl.BlockSpec((1, block_kv, d), lambda bh, j: (bh, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b * kvh, s2, d), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -158,7 +158,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
         mem = compiled.memory_analysis()
         print(f"[dryrun] {cid}: memory_analysis: {mem}")
-        ca = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis
+
+        ca = cost_analysis(compiled)
         raw_flops = float(ca.get("flops", 0.0))
         raw_bytes = float(ca.get("bytes accessed", 0.0))
         print(

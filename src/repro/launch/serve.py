@@ -1,8 +1,22 @@
 """Batched serving driver: prefill + greedy decode with continuous batching.
 
+Two cache backends:
+
+  * **dense** (default, all families): one ``(L, B, max_len, kv_dim)`` cache
+    allocated per batch - simple, but HBM scales with ``B * max_len`` even
+    when sequences are short.
+  * **paged** (``--paged``; transformer families): the
+    :class:`repro.runtime.ServeEngine` - fixed-size KV pages + per-sequence
+    page tables + free-list allocator, with continuous batching (requests
+    admitted whenever a slot and pages free up).  ssm/hybrid keep the dense
+    path: their recurrent state is O(1) per sequence, there is nothing to
+    page.
+
 Example (CPU-friendly):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 16 --gen 16 --mesh 1x1
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --batch 4 --prompt-len 16 --gen 16 --mesh 1x1 --paged --num-pages 32
 """
 
 from __future__ import annotations
@@ -21,6 +35,15 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged-KV continuous-batching "
+                         "engine (transformer families)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: the model's PASA "
+                         "block length)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pages in the pool (default: sized to fit "
+                         "the requested batch exactly)")
     args = ap.parse_args(argv)
 
     import jax
@@ -51,6 +74,10 @@ def main(argv=None):
         prompts = rng.integers(
             0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32
         )
+
+        if args.paged:
+            return _serve_paged(args, bundle, params, prompts)
+
         cache = bundle.init_cache(args.batch, max_len)
         step = jax.jit(make_serve_step(bundle))
 
@@ -81,6 +108,44 @@ def main(argv=None):
               f"({1000*dt/max(n_steps,1):.1f} ms/step)")
         print("sample:", gen[0][:16])
         return gen
+
+
+def _serve_paged(args, bundle, params, prompts):
+    """Serve the same workload through the paged-KV engine."""
+    import math
+
+    import numpy as np
+
+    from repro.runtime import ServeEngine
+
+    page_size = (
+        args.page_size if args.page_size is not None
+        else bundle.cfg.attention.block_kv
+    )
+    if page_size < 1:
+        raise ValueError(f"--page-size must be >= 1, got {page_size}")
+    total = args.prompt_len + args.gen
+    need = math.ceil(total / page_size) * args.batch
+    num_pages = args.num_pages or need + 1  # +1: reserved null page
+    eng = ServeEngine(
+        bundle, params,
+        max_batch=args.batch, num_pages=num_pages, page_size=page_size,
+        max_seq_len=total,
+    )
+    reqs = [eng.submit(list(p), args.gen) for p in prompts]
+    t0 = time.time()
+    eng.run_to_completion()
+    dt = time.time() - t0
+    gen = np.stack(
+        [np.asarray(r.generated, np.int32) for r in reqs], axis=0
+    )
+    st = eng.stats()
+    print(f"[paged] generated {gen.shape} tokens in {dt:.2f}s "
+          f"({1000*dt/max(st['steps'],1):.1f} ms/step), "
+          f"pool={st['cache_bytes']/1e6:.2f} MB "
+          f"({num_pages} pages x {page_size} tok)")
+    print("sample:", gen[0][:16])
+    return gen
 
 
 if __name__ == "__main__":

@@ -41,20 +41,14 @@ def get_mesh() -> Optional[Mesh]:
 def in_manual_region() -> bool:
     """True when tracing inside a shard_map with manual axes - nested manual
     shard_maps over a different axis set are rejected by JAX, so callers
-    (row-parallel matmul, a2a MoE) fall back to their GSPMD paths there."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return False
-    if am is None or am.empty:
-        return False
-    try:
-        return any(
-            str(t).lower().startswith("manual") or "Manual" in str(t)
-            for t in am.axis_types
-        )
-    except Exception:
-        return False
+    (row-parallel matmul, a2a MoE) fall back to their GSPMD paths there.
+
+    Delegates to :func:`repro.compat.manual_axes`, which reads the abstract
+    mesh on modern jax and falls back to compat.shard_map's thread-local
+    tracking on older jax (no ``get_abstract_mesh``)."""
+    from repro.compat import manual_axes
+
+    return bool(manual_axes())
 
 
 def dp_axes() -> tuple:
@@ -76,18 +70,12 @@ def shard(x, *spec):
     mesh = get_mesh()
     if mesh is None:
         return x
+    from repro.compat import manual_axes
+
     names = set(mesh.axis_names)
     # axes already manual (inside an enclosing shard_map) can't appear in
-    # with_sharding_constraint specs
-    manual = set()
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        if am is not None and not am.empty:
-            for n, t in zip(am.axis_names, am.axis_types):
-                if "anual" in str(t):
-                    manual.add(n)
-    except Exception:
-        pass
+    # with_sharding_constraint specs; auto axes still accept constraints
+    manual = manual_axes()
 
     def _filter(entry):
         if entry is None:

@@ -138,7 +138,9 @@ def make_compressed_train_step(
             jax.tree.map(lambda _: PS(), params),
             jax.tree.map(lambda _: PS("pod"), state["comp"]),
         )
-        loss, grads, new_comp = jax.shard_map(
+        from repro.compat import shard_map
+
+        loss, grads, new_comp = shard_map(
             per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=frozenset({"pod"}), check_vma=False,
         )(params, batch, state["comp"])

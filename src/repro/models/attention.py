@@ -56,8 +56,19 @@ def init_attention(key, cfg: ModelConfig, dtype, n_stack=None, kv_in_dim=None):
     return p
 
 
-def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset):
-    """q5: (B, KVH, G, S1, hd); k5/v5: (B, KVH, 1, S2, hd)."""
+def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset,
+            decode=False):
+    """q5: (B, KVH, G, S1, hd); k5/v5: (B, KVH, 1, S2, hd).
+
+    ``decode=True`` selects the decode-kernel shift convention for PASA:
+    algebraic per-block key shift and row pseudo-average over the *valid*
+    (pos < kv_len) columns only (``shift_mask_valid``).  This keeps the XLA
+    decode path bit-comparable to kernels/pasa_decode.py and
+    pasa_paged_decode.py, and - because stale columns beyond kv_len can
+    never leak into the output - is what allows recycled KV pages to skip
+    scrubbing.  Both conventions are exact softmax; see
+    core.pasa.blocked_attention.
+    """
     ac = cfg.attention
     if ac.impl == "naive":
         out = naive_attention(
@@ -67,11 +78,13 @@ def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset):
         return out
     policy = get_policy(ac.pasa_policy if ac.impl == "pasa" else ac.policy)
     beta = ac.beta if ac.impl == "pasa" else 0.0
+    use_gemm = ac.use_gemm_shift and not decode
     return blocked_attention(
         q5, k5, v5,
         beta=beta, policy=policy, block_kv=ac.block_kv, causal=causal,
         kv_len=kv_len, q_offset=q_offset,
-        use_gemm_shift=ac.use_gemm_shift,
+        use_gemm_shift=use_gemm,
+        shift_mask_valid=decode,
     )
 
 
@@ -83,9 +96,11 @@ def attention(
     causal: bool = True,
     use_rope: bool = True,
     cross_x: Optional[jnp.ndarray] = None,   # (B, S_kv, D_src) for cross-attn
-    cache: Optional[dict] = None,   # {"k","v": (B, S2max, KV_dim)}
+    cache: Optional[dict] = None,   # {"k","v": (B, S2max, KV_dim)} dense, or
+                                    # {"k","v": (P, page, KV_dim)} paged pool
     pos: Optional[jnp.ndarray] = None,       # (B,) write positions (decode)
     prefill_cache: bool = False,
+    page_table: Optional[jnp.ndarray] = None,  # (B, max_pages) -> paged cache
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     cd = cfg.jnp_compute_dtype()
     b, s, _ = x.shape
@@ -132,7 +147,39 @@ def attention(
             k = apply_rope(k, cos, sin)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and page_table is not None:
+        if prefill_cache:
+            raise NotImplementedError(
+                "paged cache is decode-only; prefill goes through the engine"
+                " token loop"
+            )
+        # Paged decode: cache is the physical page pool of THIS layer,
+        # (num_pages, page_size, kv_dim).  The token is scattered into
+        # page_table[b, pos // page] at slot pos % page; inactive batch
+        # slots carry page_table rows of null pages (page 0), so their
+        # writes land in the reserved sink and the pool stays consistent.
+        # The read is the XLA gather fallback (jnp.take of each sequence's
+        # pages); on a TPU runtime the fused kernels/pasa_paged_decode.py
+        # path replaces gather+attend with page-table scalar prefetch.
+        ck, cv = cache["k"], cache["v"]
+        page = ck.shape[1]
+        idx = jnp.arange(b)
+        pidx = (pos // page).astype(jnp.int32)
+        slot = (pos % page).astype(jnp.int32)
+        phys = page_table[idx, pidx]
+        ck = ck.at[phys, slot].set(k.reshape(b, kvh * hd).astype(ck.dtype))
+        cv = cv.at[phys, slot].set(v.reshape(b, kvh * hd).astype(cv.dtype))
+        new_cache = {"k": ck, "v": cv}
+        from repro.runtime.paged_cache import gather_pages
+
+        kseq = gather_pages(ck, page_table)       # (B, S2v, kv_dim)
+        vseq = gather_pages(cv, page_table)
+        s2 = kseq.shape[1]
+        k = kseq.reshape(b, s2, kvh, hd).astype(cd)
+        v = vseq.reshape(b, s2, kvh, hd).astype(cd)
+        kv_len = (pos + 1).astype(jnp.int32)
+        causal = False  # kv_len mask subsumes causality for 1-token steps
+    elif cache is not None:
         ck, cv = cache["k"], cache["v"]
         if prefill_cache:
             ck = jax.lax.dynamic_update_slice_in_dim(
@@ -199,6 +246,7 @@ def attention(
     out = _attend(
         q5, k5, v5, cfg, causal=causal, kv_len=kv_len_b,
         q_offset=pos if (pos is not None and not prefill_cache) else None,
+        decode=decode_path,
     )
 
     out = jnp.moveaxis(out.reshape(b, kvh * g, s, hd), 1, 2).reshape(b, s, h * hd)

@@ -69,8 +69,10 @@ def row_parallel_matmul(x: jnp.ndarray, w: jnp.ndarray, compute_dtype):
         # batch can't be dp-sharded (e.g. the batch=1 long-context decode
         # cells): the manual psum buys little there - use the plain path.
         return x.astype(compute_dtype) @ w.astype(compute_dtype)
+    from repro.compat import shard_map
+
     batch_spec = dp
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(batch_spec, None, "model"), w_spec),

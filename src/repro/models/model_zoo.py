@@ -98,6 +98,18 @@ class ModelBundle:
     serve_step: Callable[..., Any]          # (params, token, pos, cache, **ex)
     extra_train_inputs: Dict[str, tuple]    # name -> (shape_fn, dtype)
     extra_serve_inputs: Dict[str, tuple]
+    # Paged-KV serving interface (runtime/engine.py).  Present for the
+    # transformer families (dense/moe), None elsewhere: ssm/hybrid caches
+    # are O(1)-per-sequence state (nothing to page), vlm/audio keep the
+    # dense cache default.
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    #   (params, token (B,), pos (B,), pool, page_table (B, mp)) ->
+    #   (logits, pool)
+    paged_serve_step: Optional[Callable[..., Any]] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.init_paged_cache is not None
 
     def train_inputs(self, batch: int, seq: int) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for one training batch."""
@@ -136,6 +148,12 @@ def build(cfg: ModelConfig) -> ModelBundle:
             ),
             extra_train_inputs={},
             extra_serve_inputs={},
+            init_paged_cache=lambda num_pages, page_size, **kw: (
+                transformer.init_paged_cache(cfg, num_pages, page_size, **kw)
+            ),
+            paged_serve_step=lambda p, t, pos, c, pt: (
+                transformer.serve_step_paged(p, cfg, t, pos, c, pt)
+            ),
         )
     if fam == "ssm":
         return ModelBundle(

@@ -256,7 +256,9 @@ def moe_ffn_a2a(x: jnp.ndarray, p, cfg: ModelConfig, mesh) -> jnp.ndarray:
         out = jax.lax.all_gather(out_mine, "model", axis=0, tiled=True)
         return out.reshape(b_loc, s, d)
 
-    fn = _jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -39,12 +39,13 @@ def init_block(key, cfg: ModelConfig, dtype, n_stack: int):
 
 def block_apply(
     x, p, cfg: ModelConfig, *, causal=True, cache=None, pos=None,
-    prefill_cache=False,
+    prefill_cache=False, page_table=None,
 ):
     cd = cfg.jnp_compute_dtype()
     h, new_cache = attn_mod.attention(
         L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
         causal=causal, cache=cache, pos=pos, prefill_cache=prefill_cache,
+        page_table=page_table,
     )
     x = x + h.astype(x.dtype)
     ff_in = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -69,8 +70,14 @@ def init_lm(cfg: ModelConfig, key) -> dict:
 
 
 def _scan_blocks(x, stacked, cfg, *, cache=None, pos=None, prefill_cache=False,
-                 causal=True):
-    """lax.scan over stacked layer params (+ optional stacked caches)."""
+                 causal=True, page_table=None):
+    """lax.scan over stacked layer params (+ optional stacked caches).
+
+    ``page_table`` (shared by all layers - one physical page id addresses
+    the same slot of every per-layer pool) is closed over rather than
+    scanned; the per-layer cache leaves carried through ``xs`` are the
+    dense (B, max_len, kv_dim) slices or the paged (P, page, kv_dim) pools.
+    """
 
     def body(carry, xs):
         if cache is None:
@@ -80,7 +87,7 @@ def _scan_blocks(x, stacked, cfg, *, cache=None, pos=None, prefill_cache=False,
             lp, c = xs
         fn = functools.partial(
             block_apply, cfg=cfg, causal=causal, pos=pos,
-            prefill_cache=prefill_cache,
+            prefill_cache=prefill_cache, page_table=page_table,
         )
         if cfg.remat:
             fn = jax.checkpoint(fn)
@@ -120,12 +127,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_cache(
+    cfg: ModelConfig, num_pages: int, page_size: int, dtype=jnp.bfloat16,
+):
+    """Physical page pool for all layers: (L, num_pages, page_size, kv_dim).
+
+    Unlike the dense cache there is no batch dim - capacity is pooled
+    across sequences and rationed by the engine's PageAllocator.  Keep
+    ``page_size == cfg.attention.block_kv`` so page granularity coincides
+    with PASA block granularity (see runtime/paged_cache.py).
+    """
+    from repro.runtime.paged_cache import init_paged_pool
+
+    return init_paged_pool(
+        cfg.n_layers, num_pages, page_size, cfg.kv_dim, dtype
+    )
+
+
 def serve_step(params, cfg: ModelConfig, token: jnp.ndarray, pos: jnp.ndarray,
                cache: dict):
     """One decode step: token (B,), pos (B,) -> (logits (B, V), new cache)."""
     cd = cfg.jnp_compute_dtype()
     x = L.embed(token[:, None], params["embed"], cd)  # (B, 1, D)
     x, new_cache = _scan_blocks(x, params["blocks"], cfg, cache=cache, pos=pos)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    logits = shard(logits, dp_axes(), "model")
+    return logits, new_cache
+
+
+def serve_step_paged(
+    params, cfg: ModelConfig, token: jnp.ndarray, pos: jnp.ndarray,
+    cache: dict, page_table: jnp.ndarray,
+):
+    """One decode step against the paged pool: token (B,), pos (B,),
+    page_table (B, max_pages) -> (logits (B, V), updated pool).
+
+    Numerically this is the same computation as :func:`serve_step` on a
+    dense cache holding the same tokens (both decode paths use the
+    masked valid-column shift; see models/attention.py), so outputs are
+    bit-comparable between the two cache layouts.
+    """
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(token[:, None], params["embed"], cd)  # (B, 1, D)
+    x, new_cache = _scan_blocks(
+        x, params["blocks"], cfg, cache=cache, pos=pos, page_table=page_table,
+    )
     h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = h[:, 0].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
     logits = shard(logits, dp_axes(), "model")

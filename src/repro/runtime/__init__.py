@@ -1,7 +1,27 @@
+from repro.runtime.engine import Request, ServeEngine, dense_greedy_reference
 from repro.runtime.fault_tolerance import (
     FaultTolerantLoop,
     StragglerMonitor,
     elastic_mesh_shape,
 )
+from repro.runtime.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    gather_pages,
+    init_paged_pool,
+    paged_bytes,
+)
 
-__all__ = ["FaultTolerantLoop", "StragglerMonitor", "elastic_mesh_shape"]
+__all__ = [
+    "FaultTolerantLoop",
+    "NULL_PAGE",
+    "PageAllocator",
+    "Request",
+    "ServeEngine",
+    "StragglerMonitor",
+    "dense_greedy_reference",
+    "elastic_mesh_shape",
+    "gather_pages",
+    "init_paged_pool",
+    "paged_bytes",
+]

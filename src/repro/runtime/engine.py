@@ -1,0 +1,339 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The engine owns the *host-side* control plane (request queue, admission,
+page accounting, per-request cursors) around a single *device-side* jitted
+step that is fully batched and shape-static - every iteration runs the same
+``(B,)``-shaped decode step regardless of how many batch slots are live, so
+there is exactly one compilation for the whole serving session.
+
+Request lifecycle::
+
+    submit() -> WAITING --admission--> RUNNING(prefill) -> RUNNING(generate)
+                 |            (slot + pages granted)             |
+                 +<------- insufficient slot/pages               v
+                                                FINISHED (pages freed, slot
+                                                reusable next step)
+
+  * **Admission** happens at the top of every :meth:`step`, so new requests
+    join mid-stream whenever a batch slot AND enough pages are free -
+    continuous batching, no draining barrier.  Admission is *conservative*:
+    a request is admitted only if its worst-case page need,
+    ``ceil((len(prompt) + max_new_tokens) / page_size)``, is allocatable at
+    that moment.  Admitted requests can therefore never run out of pages
+    mid-flight => no preemption/eviction machinery and no deadlock (every
+    admitted request eventually finishes and returns its pages).
+  * **Prefill** is token-by-token through the same decode step (the
+    family-generic route of launch/serve.py): positions ``0..len(prompt)-2``
+    consume prompt tokens (teacher forcing into the cache), after which the
+    model's argmax output is fed back - so a request needs
+    ``len(prompt) + max_new_tokens - 1`` steps of slot occupancy in total.
+  * **Pages** are granted at admission (whole-request grant) but the page
+    *table* row is what makes them visible to the device step; freed pages
+    go straight back to the free list WITHOUT scrubbing - the decode
+    attention's masked valid-column shift (``shift_mask_valid``) guarantees
+    stale page contents beyond ``kv_len`` cannot reach the output.
+  * **Inactive slots** still execute (shape-static batching); their page
+    table rows are all null page 0 (the reserved write sink - see
+    runtime/paged_cache.py) and their outputs are discarded.
+
+PASA / page-size interaction: the engine defaults ``page_size`` to the
+model's PASA block length (``cfg.attention.block_kv``), making one page ==
+one PASA shift block.  The paged Pallas decode kernel computes its masked
+per-block key mean page-locally, so with this setting the paged path is
+bit-comparable with the contiguous decode kernel and the dense XLA path
+(tests/test_paged.py asserts bit-identical serve outputs dense vs paged).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.paged_cache import NULL_PAGE, PageAllocator, paged_bytes
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
+    """Token-by-token greedy decode on a fresh DENSE (B=1) cache.
+
+    The bit-equivalence oracle for the paged engine (examples/serve_paged.py,
+    tests/test_paged.py): it exercises only ``bundle.serve_step`` + the dense
+    cache, none of the paged machinery, and must produce token-for-token the
+    same greedy continuation as a request served through :class:`ServeEngine`.
+    """
+    step = jax.jit(lambda p, t, pos, c: bundle.serve_step(p, t, pos, c))
+    cache = bundle.init_cache(1, len(prompt) + max_new_tokens)
+    tok = jnp.asarray([prompt[0]], jnp.int32)
+    out = []
+    for i in range(len(prompt) + max_new_tokens - 1):
+        logits, cache = step(params, tok, jnp.full((1,), i, jnp.int32), cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if i + 1 < len(prompt):
+            tok = jnp.asarray([prompt[i + 1]], jnp.int32)
+        else:
+            tok = nxt
+            out.append(int(nxt[0]))
+    return out
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle bookkeeping."""
+
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    state: str = WAITING
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # engine-step timestamps (continuous-batching latency accounting)
+    submit_step: int = -1
+    admit_step: int = -1
+    finish_step: int = -1
+    # placement while RUNNING
+    slot: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+    cursor: int = 0      # next cache position to be written for this request
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+    def pages_needed(self, page_size: int) -> int:
+        # The request occupies total_len - 1 steps, writing cache positions
+        # 0..total_len-2 (the final generated token is returned, never fed
+        # back) - so only total_len - 1 positions need page backing.
+        return math.ceil(max(self.total_len - 1, 1) / page_size)
+
+
+class ServeEngine:
+    """Paged-KV continuous-batching engine over a ModelBundle.
+
+    Args:
+      bundle: model bundle; must expose the paged interface
+        (``bundle.supports_paged`` - transformer families).
+      params: model parameters.
+      max_batch: number of device batch slots (B of the jitted step).
+      num_pages: physical pages in the pool, *including* the reserved null
+        page 0 (so ``num_pages - 1`` are allocatable).
+      page_size: tokens per page; defaults to the model's PASA block
+        length so page == shift-block granularity (see module doc).
+      max_seq_len: longest sequence (prompt + generation) any single
+        request may reach.  Sets the page-table width - which is also the
+        length of the KV view each decode step attends over (the gather /
+        kernel grid is sized by the table, not by live pages) - so keep it
+        at the real per-request maximum rather than the pool size.
+        Default: unconstrained (every non-null page could belong to one
+        sequence), which is convenient but makes per-step attention work
+        scale with the POOL, not the workload.
+      cache_dtype: pool dtype (bf16 default, matching the dense cache).
+    """
+
+    def __init__(
+        self,
+        bundle,
+        params,
+        *,
+        max_batch: int = 4,
+        num_pages: int = 64,
+        page_size: Optional[int] = None,
+        max_seq_len: Optional[int] = None,
+        cache_dtype=jnp.bfloat16,
+    ):
+        if not bundle.supports_paged:
+            raise ValueError(
+                f"family {bundle.cfg.family!r} has no paged serving path; "
+                "use the dense cache (launch/serve.py default)"
+            )
+        self.bundle = bundle
+        self.params = params
+        if page_size is None:
+            page_size = bundle.cfg.attention.block_kv
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.page_size = int(page_size)
+        self.max_batch = int(max_batch)
+        self.num_pages = int(num_pages)
+        if max_seq_len is None:
+            self.max_pages_per_seq = self.num_pages - 1
+        else:
+            if max_seq_len < 1:
+                raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
+            self.max_pages_per_seq = min(
+                math.ceil(max_seq_len / self.page_size), self.num_pages - 1
+            )
+
+        self.pool = bundle.init_paged_cache(
+            self.num_pages, self.page_size, dtype=cache_dtype
+        )
+        self.allocator = PageAllocator(self.num_pages)
+        self.page_table = np.full(
+            (self.max_batch, self.max_pages_per_seq), NULL_PAGE, np.int32
+        )
+        self._slots: List[Optional[Request]] = [None] * self.max_batch
+        self._next_token = np.zeros((self.max_batch,), np.int32)
+        self.waiting: deque = deque()
+        self.finished: Dict[int, Request] = {}
+        self.steps = 0
+        self._req_counter = 0
+
+        step = bundle.paged_serve_step
+
+        def _device_step(params, token, pos, pool, table):
+            logits, new_pool = step(params, token, pos, pool, table)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_pool
+
+        # donate the pool: the update is a scatter of B tokens into a pool
+        # that can dwarf device memory if double-buffered.
+        self._step_fn = jax.jit(_device_step, donate_argnums=(3,))
+
+    # ------------------------------------------------------------- queue --
+
+    def submit(
+        self, prompt, max_new_tokens: int, req_id: Optional[int] = None
+    ) -> Request:
+        """Enqueue a request; admission happens inside :meth:`step`."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if req_id is None:
+            req_id = self._req_counter
+        self._req_counter = max(self._req_counter + 1, req_id + 1)
+        r = Request(req_id=req_id, prompt=prompt, max_new_tokens=max_new_tokens)
+        need = r.pages_needed(self.page_size)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"request needs {need} pages > pool capacity "
+                f"{self.max_pages_per_seq}"
+            )
+        r.submit_step = self.steps
+        self.waiting.append(r)
+        return r
+
+    def _try_admit(self) -> None:
+        """FCFS admission: grant a free slot + the worst-case page count.
+
+        Head-of-line blocking is intentional (simple fairness): if the head
+        request does not fit, nothing behind it is admitted this step.
+        """
+        while self.waiting:
+            r = self.waiting[0]
+            slot = next(
+                (i for i, s in enumerate(self._slots) if s is None), None
+            )
+            if slot is None:
+                return
+            pages = self.allocator.alloc(r.pages_needed(self.page_size))
+            if pages is None:
+                return
+            self.waiting.popleft()
+            r.state = RUNNING
+            r.slot = slot
+            r.pages = pages
+            r.admit_step = self.steps
+            r.cursor = 0
+            self._slots[slot] = r
+            row = self.page_table[slot]
+            row[:] = NULL_PAGE
+            row[: len(pages)] = pages
+            self._next_token[slot] = r.prompt[0]
+
+    def _finish(self, r: Request) -> None:
+        self.allocator.free(r.pages)
+        self.page_table[r.slot][:] = NULL_PAGE
+        self._slots[r.slot] = None
+        r.pages = []
+        r.slot = -1
+        r.state = FINISHED
+        r.finish_step = self.steps
+        self.finished[r.req_id] = r
+
+    # -------------------------------------------------------------- step --
+
+    @property
+    def num_running(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and self.num_running == 0
+
+    def step(self) -> int:
+        """Admit what fits, run ONE batched decode step, advance cursors.
+
+        Returns the number of requests that were live this step.  ``steps``
+        advances on every call (it is the engine's scheduling clock, used
+        for arrival/admission timestamps); the device step itself is
+        skipped when no request is live.
+        """
+        self._try_admit()
+        live = [r for r in self._slots if r is not None]
+        if not live:
+            self.steps += 1
+            return 0
+
+        tokens = np.array(self._next_token)     # copy: stable under updates
+        pos = np.zeros((self.max_batch,), np.int32)
+        for r in live:
+            pos[r.slot] = r.cursor
+
+        nxt, self.pool = self._step_fn(
+            self.params,
+            jnp.asarray(tokens),
+            jnp.asarray(pos),
+            self.pool,
+            jnp.asarray(self.page_table),
+        )
+        nxt = np.asarray(nxt)
+
+        self.steps += 1
+        for r in live:
+            p = r.cursor
+            r.cursor += 1
+            if p + 1 < len(r.prompt):
+                self._next_token[r.slot] = r.prompt[p + 1]   # teacher forcing
+                continue
+            r.generated.append(int(nxt[r.slot]))
+            self._next_token[r.slot] = nxt[r.slot]
+            if len(r.generated) >= r.max_new_tokens:
+                self._finish(r)
+        return len(live)
+
+    def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, Request]:
+        """Drive :meth:`step` until queue and slots drain.
+
+        ``max_steps`` bounds THIS call (the engine's lifetime counter keeps
+        running across calls)."""
+        start = self.steps
+        while not self.idle:
+            if self.steps - start >= max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "running": self.num_running,
+            "waiting": len(self.waiting),
+            "finished": len(self.finished),
+            "free_pages": self.allocator.free_pages,
+            "live_pages": self.allocator.live_pages,
+            "cache_bytes": paged_bytes(self.pool),
+            "page_size": self.page_size,
+        }

@@ -1,0 +1,112 @@
+"""Paged KV cache: fixed-size pages + per-sequence page tables.
+
+Replaces the dense ``(L, B, max_len, kv_dim)`` serve cache (whose HBM cost is
+``B * max_len`` regardless of how short each sequence actually is) with a
+vLLM-style pool:
+
+  * **Pool**: ``k``/``v`` arrays of shape ``(n_layers, num_pages, page_size,
+    kv_dim)``.  A *page* is ``page_size`` consecutive token positions of one
+    sequence, in every layer at once (one physical page id addresses the same
+    slot in all L per-layer pools - one allocation covers the whole model,
+    exactly like vLLM block tables).
+  * **Page table**: ``(max_batch, max_pages_per_seq) int32`` mapping each
+    sequence's logical page ``pos // page_size`` to a physical page id.
+  * **Null page**: physical page **0 is reserved as a write sink**.  Inactive
+    batch slots still execute the (fully batched, shape-static) decode step;
+    their writes land in page 0 and their outputs are discarded.  The
+    allocator never hands out page 0, so live sequences are unaffected.
+
+PASA interaction (why this composes with the paper's algorithm): PASA's
+per-block key shift is computed over *valid columns only* in the decode
+kernels (``shift_mask_valid`` convention, see ``core.pasa.blocked_attention``),
+so a reused page may carry stale garbage beyond the current ``kv_len`` without
+perturbing the output - pages are therefore recycled WITHOUT scrubbing.
+Keeping ``page_size == attention.block_kv`` makes page granularity coincide
+with PASA block granularity, so the paged Pallas kernel's per-page masked
+mean is bit-comparable to the contiguous decode kernel and the XLA path.
+
+Allocator invariants (enforced, relied on by the engine):
+  * the free list and the set of live pages partition ``{1..num_pages-1}``;
+  * page 0 is never allocated and never freed;
+  * ``alloc`` is all-or-nothing (no partial grants), so admission control can
+    reason in whole requests;
+  * double-free and foreign-page free raise immediately (catching engine
+    bookkeeping bugs at the boundary instead of as silent cache corruption).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids ``1..num_pages-1``."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null sink)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._live = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no state change) if unavailable."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("cannot free the null page")
+            if p not in self._live:
+                raise ValueError(f"double/foreign free of page {p}")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+def init_paged_pool(
+    n_layers: int, num_pages: int, page_size: int, kv_dim: int,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Zero-initialized paged KV pool, same {"k","v"} pytree shape as the
+    dense cache so ``lax.scan`` over layers treats both uniformly."""
+    shape = (n_layers, num_pages, page_size, kv_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gather_pages(pool_layer: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(num_pages, page, kv_dim) x (B, max_pages) -> (B, max_pages*page, kv_dim).
+
+    The XLA (non-Pallas) read path: one ``jnp.take`` gather rebuilds each
+    sequence's contiguous logical view; positions past ``kv_len`` may hold
+    stale page contents and are masked downstream (``shift_mask_valid``).
+    """
+    b, mp = page_table.shape
+    _, page, kv_dim = pool_layer.shape
+    out = jnp.take(pool_layer, page_table.reshape(-1), axis=0)
+    return out.reshape(b, mp * page, kv_dim)
+
+
+def paged_bytes(pool: dict) -> int:
+    """HBM footprint of the pool (benchmark reporting)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in pool.values())

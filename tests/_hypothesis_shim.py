@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (fixed-examples mode).
+
+The tier-1 environment may not ship hypothesis; rather than losing the four
+property-test modules to collection errors, conftest registers this module
+as ``hypothesis`` when the real package is absent.  It implements exactly
+the subset the suite uses:
+
+  * ``strategies.sampled_from / floats / integers / booleans``
+  * ``@given(**kwargs)`` - expands to a deterministic sweep of drawn
+    examples (seeded per test name, so runs are reproducible),
+  * ``@settings(max_examples=, deadline=)`` - caps the sweep length.
+
+It is NOT a property-based tester: no shrinking, no adaptive search.  It
+exists so the invariants still execute over a spread of inputs when the
+real dependency is missing.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: deliberately not functools.wraps - the wrapper must present a
+        # ZERO-argument signature to pytest (the drawn names would otherwise
+        # be mistaken for fixtures).
+        def wrapper():
+            # Read the example budget off the WRAPPER: @settings is usually
+            # stacked above @given and therefore annotates the wrapper, not
+            # the inner test function.
+            n = getattr(
+                wrapper, "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES),
+            )
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._shim_max_examples = getattr(
+            fn, "_shim_max_examples", _DEFAULT_EXAMPLES
+        )
+        return wrapper
+
+    return deco

@@ -94,11 +94,11 @@ def test_cosine_warmup_shape():
 def test_compressed_psum_error_feedback():
     """int8 EF-compression over a 4-way axis: averaged grads within int8
     quantization error, residual carries the rest."""
-    mesh = jax.make_mesh(
-        (1,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("pod",))
 
     from repro.optim.compression import CompressionState
 
