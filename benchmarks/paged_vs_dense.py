@@ -9,7 +9,9 @@ budget) run two ways:
             requests stop paying for the longest request's tail.
 
 Emits (name, us_per_step, derived) rows in the benchmarks/run.py CSV
-format; the derived column carries tokens/s and the HBM ratio.  On CPU the
+format; the derived column carries tokens/s, mean time-to-first-token
+(the dense loop prefills token-by-token; the engine prefills in chunks,
+which is where the TTFT gap comes from), and the HBM ratio.  On CPU the
 timing rows are indicative only (the gather fallback, not the Pallas
 kernel); the *bytes* rows are exact and hardware-independent.
 """
@@ -53,17 +55,24 @@ def _dense_rows(bundle, params, prompts):
     n_steps = plen + GEN - 1
     # warm-up compile
     step(params, tok, jnp.zeros((b,), jnp.int32), cache)
+    t_first = None
     t0 = time.perf_counter()
     for i in range(n_steps):
         pos = jnp.full((b,), i, jnp.int32)
         nxt, _, cache = step(params, tok, pos, cache)
-        tok = jnp.asarray(padded[:, i + 1]) if i + 1 < plen else nxt
+        if i + 1 < plen:
+            tok = jnp.asarray(padded[:, i + 1])
+        else:
+            if t_first is None:
+                jax.block_until_ready(nxt)
+                t_first = time.perf_counter() - t0
+            tok = nxt
     jax.block_until_ready(tok)
     dt = time.perf_counter() - t0
     # Count the same USEFUL tokens as the paged row (real prompt+gen steps
     # per request, not the right-pad filler short rows burn in lockstep).
     toks = sum(len(p) + GEN - 1 for p in prompts)
-    return dt / n_steps, toks / dt, cache_bytes
+    return dt / n_steps, toks / dt, cache_bytes, t_first
 
 
 def _paged_rows(bundle, params, prompts):
@@ -72,22 +81,31 @@ def _paged_rows(bundle, params, prompts):
         num_pages=1 + sum(math.ceil((len(p) + GEN) / PAGE) for p in prompts),
         page_size=PAGE,
         max_seq_len=max(len(p) for p in prompts) + GEN,
+        # chunk sized to the longest prompt: chunks are right-padded to the
+        # static chunk length, so the engine default (8 pages) would burn
+        # 4x the useful prefill FLOPs on this short-prompt mix.
+        prefill_chunk=2 * PAGE,
     )
-    # warm-up compile with a throwaway request
-    eng.submit(prompts[0][:2], 1)
+    # warm-up compile with a throwaway request; gen=2 so BOTH jitted calls
+    # compile (a gen=1 request finishes inside the prefill call and would
+    # leave the decode step's compile inside the timed region)
+    eng.submit(prompts[0][:2], 2)
     eng.run_to_completion()
-    for p in prompts:
-        eng.submit(p, GEN)
+    reqs = [eng.submit(p, GEN) for p in prompts]
     s0 = eng.steps
+    first_at = {}
     t0 = time.perf_counter()
-    fin = eng.run_to_completion()
+    while not eng.idle:
+        eng.step()
+        now = time.perf_counter()
+        for r in reqs:
+            if r.generated and r.req_id not in first_at:
+                first_at[r.req_id] = now - t0
     dt = time.perf_counter() - t0
     n_steps = eng.steps - s0
-    toks = sum(
-        len(r.prompt) + r.max_new_tokens - 1 for r in fin.values()
-        if r.max_new_tokens == GEN
-    )
-    return dt / max(n_steps, 1), toks / dt, paged_bytes(eng.pool)
+    toks = sum(len(r.prompt) + r.max_new_tokens - 1 for r in reqs)
+    ttft = sum(first_at.values()) / len(first_at)
+    return dt / max(n_steps, 1), toks / dt, paged_bytes(eng.pool), ttft
 
 
 def report():
@@ -97,14 +115,16 @@ def report():
     rng = np.random.default_rng(0)
     prompts = _workload(cfg, rng)
 
-    d_step, d_tps, d_bytes = _dense_rows(bundle, params, prompts)
-    p_step, p_tps, p_bytes = _paged_rows(bundle, params, prompts)
+    d_step, d_tps, d_bytes, d_ttft = _dense_rows(bundle, params, prompts)
+    p_step, p_tps, p_bytes, p_ttft = _paged_rows(bundle, params, prompts)
     ratio = d_bytes / p_bytes
     return [
         ("serve_dense_decode", d_step * 1e6,
-         f"{d_tps:.0f} tok/s | cache {d_bytes / 1e3:.0f} kB"),
+         f"{d_tps:.0f} tok/s | TTFT {d_ttft * 1e3:.0f} ms | "
+         f"cache {d_bytes / 1e3:.0f} kB"),
         ("serve_paged_decode", p_step * 1e6,
-         f"{p_tps:.0f} tok/s | pool {p_bytes / 1e3:.0f} kB"),
+         f"{p_tps:.0f} tok/s | TTFT {p_ttft * 1e3:.0f} ms | "
+         f"pool {p_bytes / 1e3:.0f} kB"),
         ("paged_hbm_saving", 0.0,
          f"dense/paged cache bytes = {ratio:.2f}x "
          f"(ragged prompts {PROMPTS}, gen {GEN}, page {PAGE})"),

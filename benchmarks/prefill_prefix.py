@@ -1,0 +1,102 @@
+"""Chunked prefill + radix prefix cache: TTFT and throughput sweeps.
+
+One long-prompt request served four ways through the paged engine:
+
+  * token-by-token prefill (the PR-1 mode): TTFT costs ``prompt_len``
+    decode steps;
+  * chunked prefill, cold cache (0% hit): TTFT costs
+    ``ceil(prompt_len / chunk)`` chunk steps;
+  * chunked prefill at 50% and 100% prefix reuse: the radix cache serves
+    the shared pages, so only the non-shared tail is computed.
+
+Emits (name, us_per_ttft, derived) rows in the benchmarks/run.py CSV
+format; derived carries TTFT, end-to-end tokens/s, and the speedup over
+the token-by-token baseline.  CPU timings exercise the XLA gather
+fallback, not the Pallas kernels - indicative, but the STEP COUNTS in the
+derived column are exact and hardware-independent.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine
+
+PROMPT_LEN = 512
+GEN = 4
+PAGE = 16
+CHUNK = 128
+
+
+def _measure(bundle, params, prompt, *, chunked, seed_prompt=None):
+    """TTFT (wall + engine steps) and tokens/s for one request.
+
+    ``seed_prompt`` is served first through the same engine to populate
+    the prefix cache (and warm the jit caches); without it a tiny
+    throwaway request warms compilation only.
+    """
+    num_pages = 1 + 3 * math.ceil((PROMPT_LEN + GEN) / PAGE)
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=num_pages, page_size=PAGE,
+        max_seq_len=PROMPT_LEN + GEN, chunked_prefill=chunked,
+        prefill_chunk=CHUNK if chunked else None,
+        prefix_cache=seed_prompt is not None,
+    )
+    # gen=2 so both jitted calls (prefill chunk AND decode) compile here
+    warm = list(prompt[:2]) if seed_prompt is None else list(seed_prompt)
+    eng.submit(warm, 2)
+    eng.run_to_completion()
+
+    r = eng.submit(list(prompt), GEN)
+    s0 = eng.steps
+    t0 = time.perf_counter()
+    while not r.generated:
+        eng.step()
+    t_first = time.perf_counter() - t0
+    ttft_steps = eng.steps - s0
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    toks = len(r.prompt) + r.max_new_tokens - 1
+    return t_first, ttft_steps, toks / dt
+
+
+def report():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+    other_half = rng.integers(0, cfg.vocab_size, PROMPT_LEN // 2)
+    half_hit_seed = np.concatenate([prompt[: PROMPT_LEN // 2], other_half])
+
+    rows = []
+    base_ttft, base_steps, base_tps = _measure(
+        bundle, params, prompt, chunked=False
+    )
+    rows.append((
+        "prefill_ttft_token_by_token", base_ttft * 1e6,
+        f"{base_steps} steps | {base_tps:.0f} tok/s | prompt {PROMPT_LEN}",
+    ))
+    for label, seed in (
+        ("0", None), ("50", half_hit_seed), ("100", prompt),
+    ):
+        ttft, steps, tps = _measure(
+            bundle, params, prompt, chunked=True, seed_prompt=seed,
+        )
+        rows.append((
+            f"prefill_ttft_chunked_hit{label}", ttft * 1e6,
+            f"{steps} steps | {tps:.0f} tok/s | "
+            f"{base_ttft / ttft:.1f}x vs token-by-token",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in report():
+        print(f"{name},{us:.1f},{derived}")

@@ -25,6 +25,12 @@ def main() -> None:
     except Exception as e:  # keep run.py total if the serve workload fails
         print(f"[paged-vs-dense report skipped: {e}]", file=sys.stderr)
     try:
+        from benchmarks import prefill_prefix as PP
+
+        rows += PP.report()
+    except Exception as e:  # keep run.py total if the serve workload fails
+        print(f"[prefill-prefix report skipped: {e}]", file=sys.stderr)
+    try:
         rows += R.report()
     except Exception as e:  # dry-run artifacts absent on a fresh checkout
         print(f"[roofline report skipped: {e}]", file=sys.stderr)

@@ -46,9 +46,14 @@ def main():
         list(rng.integers(0, cfg.vocab_size, n)) for _, n, _ in workload
     ]
 
+    # chunked_prefill=False: this demo's contract is bit-identity with the
+    # token-by-token dense serve path, which is the token-by-token engine
+    # mode's oracle.  The chunked-prefill + prefix-cache demo (whose oracle
+    # is chunked_cold_reference) is examples/serve_prefix.py.
     eng = ServeEngine(
         bundle, params, max_batch=3, num_pages=12, page_size=16,
         max_seq_len=max(n + g for _, n, g in workload),
+        chunked_prefill=False,
     )
     pending = sorted(
         zip(workload, prompts), key=lambda wp: wp[0][0]

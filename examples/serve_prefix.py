@@ -1,0 +1,86 @@
+"""Chunked prefill + radix prefix cache demo: shared system prompts.
+
+Five requests share a long "system prompt" prefix and differ only in a
+short user suffix - the classic serving workload the radix prefix cache
+is built for.  The first request prefills cold in prompt-length/chunk
+engine steps (instead of one step per prompt token); when it finishes, its
+full prompt pages are donated to the radix cache, and every later request
+is admitted charged only for its non-shared pages, skips the shared
+pages' compute entirely, and reaches its first token in one or two steps.
+
+Exactness gate: with PASA the per-page pseudo-average shift happens inside
+the attention kernel at read time, so cached pages hold RAW K/V whose
+contents are a function of the token prefix alone (the chunk-exact
+convention) - cache-hit serving is therefore BIT-IDENTICAL to cold
+serving, verified below against a fresh cacheless engine per request.
+
+Run:  PYTHONPATH=src python examples/serve_prefix.py
+(CPU-friendly: reduced config, XLA gather fallback for the paged paths.)
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine, chunked_cold_reference
+
+PAGE = 16
+CHUNK = 64
+SYSTEM_LEN = 192   # shared prefix: 12 full pages
+GEN = 6
+
+
+def main():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    system = list(rng.integers(0, cfg.vocab_size, SYSTEM_LEN))
+    suffixes = [list(rng.integers(0, cfg.vocab_size, n)) for n in
+                (9, 5, 13, 3, 7)]
+    prompts = [system + sfx for sfx in suffixes]
+
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=64, page_size=PAGE,
+        max_seq_len=SYSTEM_LEN + 16 + GEN,
+        prefill_chunk=CHUNK, prefix_cache=True,
+    )
+
+    print(f"system prompt {SYSTEM_LEN} tokens ({SYSTEM_LEN // PAGE} pages), "
+          f"prefill chunk {CHUNK} tokens\n")
+    reqs = []
+    for i, p in enumerate(prompts):
+        r = eng.submit(p, GEN)
+        eng.run_to_completion()
+        ttft = r.first_token_step - r.admit_step + 1
+        hit = r.cached_len
+        reqs.append(r)
+        print(f"req{i}: prompt {len(p):3d} tok | {hit:3d} from cache "
+              f"({100 * hit // len(p):3d}%) | TTFT {ttft} engine steps")
+
+    st = eng.stats()["prefix_cache"]
+    print(f"\nprefix cache: {st['cached_pages']} pages resident, "
+          f"{st['hits']} page hits, {st['misses']} misses, "
+          f"{st['evictions']} evictions")
+
+    cold_ttft = -(-SYSTEM_LEN // CHUNK)  # ceil: what req0 paid
+    assert all(
+        (r.first_token_step - r.admit_step + 1) < cold_ttft
+        for r in reqs[1:]
+    ), "prefix hits should beat the cold TTFT"
+
+    print("\nverifying bit-identity vs cold (cacheless) serves...")
+    for i, r in enumerate(reqs):
+        want = chunked_cold_reference(
+            bundle, params, r.prompt, GEN, page_size=PAGE,
+            prefill_chunk=CHUNK,
+        )
+        assert r.generated == want, (i, r.generated, want)
+        print(f"  req{i}: bit-identical ({len(want)} tokens)")
+    print("serve_prefix example OK")
+
+
+if __name__ == "__main__":
+    main()

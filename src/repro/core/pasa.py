@@ -59,16 +59,28 @@ class AttnState:
     cnt: jnp.ndarray
 
 
-def init_state(lead, d: int, policy: PrecisionPolicy) -> AttnState:
-    """``lead`` is the query shape without the head dim: (..., S1)."""
+def init_state(
+    lead, d: int, policy: PrecisionPolicy, *, per_row_cnt: bool = False
+) -> AttnState:
+    """``lead`` is the query shape without the head dim: (..., S1).
+
+    ``per_row_cnt=True`` makes the folded-block counter a per-query-row
+    array (the chunk-exact prefill convention, where rows of the same chunk
+    fold different numbers of live blocks); the default scalar counter is
+    the shared-sweep convention of decode and whole-prompt prefill.
+    """
     lead = tuple(lead)
     st = policy.stat_dtype
+    cnt = (
+        jnp.zeros(lead + (1,), jnp.int32) if per_row_cnt
+        else jnp.zeros((), jnp.int32)
+    )
     return AttnState(
         m=jnp.full(lead + (1,), NEG_BIG, st),
         l=jnp.zeros(lead + (1,), st),
         acc=jnp.zeros(lead + (d,), policy.acc_dtype),
         f=jnp.zeros(lead + (1,), st),
-        cnt=jnp.zeros((), jnp.int32),
+        cnt=cnt,
     )
 
 
@@ -89,6 +101,8 @@ def update_state(
     mask: Optional[jnp.ndarray],
     post_scale: float = 1.0,
     sbar_over_mask: bool = False,
+    sbar_mask: Optional[jnp.ndarray] = None,
+    dead_rows_noop: bool = False,
 ) -> AttnState:
     """Fold one KV block into the running state (Algorithm 1 lines 11-20).
 
@@ -111,6 +125,19 @@ def update_state(
         flag selects which one.  A fully-masked block contributes sbar = 0
         (count clamped to 1) and its exp() terms underflow to exactly 0, so
         trailing dead blocks never perturb the output.
+      sbar_mask: optional (..., 1, s2) row-uniform column mask; when given it
+        (not ``mask``) defines the column set of the row pseudo-average and
+        the pre-GEMM value zeroing.  The chunk-exact prefill convention uses
+        this to keep sbar over the *valid* (col < kv_len) columns while the
+        softmax ``mask`` additionally carries per-row causal structure.
+      dead_rows_noop: rows for which ``mask`` is all-False keep their state
+        bit-unchanged and do not count the block (requires a per-row ``cnt``,
+        see :func:`init_state`).  This makes a row's final state depend only
+        on its OWN live blocks - the property that makes chunked prefill
+        bit-invariant to the chunk schedule (a row folded after the chunk
+        boundary moved past it sees extra fully-masked blocks, which must be
+        exact no-ops, not merely exp-underflow-small perturbations of the
+        rescaling chain).
     """
     st = policy.stat_dtype
     gemm_t = _gemm_dtype(policy)
@@ -127,12 +154,16 @@ def update_state(
         s = s * jnp.asarray(post_scale, s.dtype)
 
     # -- line 13: row pseudo-average of the shifted block. ------------------
-    if sbar_over_mask and mask is not None:
+    smask = sbar_mask if sbar_mask is not None else (
+        mask if sbar_over_mask else None
+    )
+    if smask is not None:
         cnt_cols = jnp.maximum(
-            jnp.sum(mask.astype(st), axis=-1, keepdims=True), 1.0
+            jnp.sum(smask.astype(st), axis=-1, keepdims=True), 1.0
         )
         sbar = (
-            jnp.sum(jnp.where(mask, s.astype(st), 0.0), axis=-1, keepdims=True)
+            jnp.sum(jnp.where(smask, s.astype(st), 0.0), axis=-1,
+                    keepdims=True)
             / cnt_cols
         )
     else:
@@ -179,7 +210,14 @@ def update_state(
     l_new = e_prev * state.l + e_cur * l_loc
 
     # -- lines 19-20: temporary output + rescaled accumulation. ---------------
-    if sbar_over_mask and mask is not None:
+    if sbar_mask is not None:
+        # Chunk-exact path: sbar_mask IS the row-uniform valid-column mask;
+        # zero v at stale (invalid) columns before the PV GEMM (0 * NaN
+        # protection, same rationale as the decode branch below).
+        v = jnp.where(
+            jnp.swapaxes(sbar_mask, -1, -2), v, jnp.asarray(0.0, v.dtype)
+        )
+    elif sbar_over_mask and mask is not None:
         # Decode/no-scrub path: zero v at fully-masked columns before the PV
         # GEMM.  p is 0 there, but 0 * NaN = NaN inside the contraction, so
         # non-finite stale values in recycled KV pages would otherwise
@@ -196,6 +234,23 @@ def update_state(
         e_prev.astype(policy.acc_dtype) * state.acc
         + e_cur.astype(policy.acc_dtype) * pv
     )
+
+    if dead_rows_noop:
+        if mask is None:
+            raise ValueError("dead_rows_noop needs a mask")
+        if state.cnt.ndim == 0:
+            raise ValueError(
+                "dead_rows_noop needs a per-row cnt "
+                "(init_state(per_row_cnt=True))"
+            )
+        row_live = jnp.any(mask, axis=-1, keepdims=True)       # (..., S1, 1)
+        return AttnState(
+            m=jnp.where(row_live, m_new, state.m),
+            l=jnp.where(row_live, l_new, state.l),
+            acc=jnp.where(row_live, acc_new, state.acc),
+            f=jnp.where(row_live, f_new, state.f),
+            cnt=state.cnt + row_live.astype(jnp.int32),
+        )
 
     return AttnState(m=m_new, l=l_new, acc=acc_new, f=f_new, cnt=state.cnt + 1)
 
@@ -219,7 +274,7 @@ def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int):
     jax.jit,
     static_argnames=(
         "beta", "policy", "block_kv", "causal", "q_offset_static",
-        "use_gemm_shift", "shift_mask_valid",
+        "use_gemm_shift", "shift_mask_valid", "chunk_exact",
     ),
 )
 def blocked_attention(
@@ -236,6 +291,7 @@ def blocked_attention(
     q_offset_static: int = 0,
     use_gemm_shift: bool = True,
     shift_mask_valid: bool = False,
+    chunk_exact: bool = False,
 ) -> jnp.ndarray:
     """PASA (beta>0) or FlashAttention-2 (beta==0) over KV blocks via lax.scan.
 
@@ -263,21 +319,37 @@ def blocked_attention(
         bit-comparable to the Pallas decode kernels.  It also makes the
         output independent of whatever stale values sit beyond kv_len, which
         is what permits KV-page reuse without scrubbing.
+      chunk_exact: the chunked-prefill convention (runtime/engine.py,
+        kernels/pasa_paged_prefill.py).  Extends shift_mask_valid to MANY
+        query rows under causal masking: the algebraic key shift AND the row
+        pseudo-average both use the valid (col < kv_len) columns - the same
+        column set for every row, so Eq. 14 stays exact - while the causal
+        mask is applied *after* sbar, and rows for which a block is fully
+        masked skip it as an exact no-op (per-row block counter; see
+        ``update_state(dead_rows_noop=...)``).  Together with page-aligned
+        chunk boundaries this makes prefill outputs (and therefore the K/V
+        written to cache pages) bit-invariant to the chunk schedule and to
+        how much of the prompt was served from the prefix cache.  Requires
+        ``use_gemm_shift=False`` when beta > 0.
 
     Returns:
       (..., S1, D) attention output in ``policy.out_dtype``.
     """
     if not 0.0 <= beta < 1.0:
         raise ValueError(f"beta must be in [0, 1), got {beta}")
+    if chunk_exact:
+        shift_mask_valid = True
     if shift_mask_valid and use_gemm_shift and beta > 0.0:
         raise ValueError(
             "shift_mask_valid needs the algebraic shift (use_gemm_shift=False)"
         )
-    if shift_mask_valid and causal:
+    if shift_mask_valid and causal and not chunk_exact:
         # The recovery identity needs sbar over exactly the columns the key
         # shift used; under causal masking sbar's column set would shrink
         # per-row below the shift's valid-column set.  Decode steps pass
-        # causal=False (the kv_len mask subsumes causality for one token).
+        # causal=False (the kv_len mask subsumes causality for one token);
+        # chunked prefill passes chunk_exact=True, which keeps sbar over the
+        # valid columns while masking causally afterwards.
         raise ValueError("shift_mask_valid is decode-only (causal=False)")
     d = q.shape[-1]
     s1 = q.shape[-2]
@@ -349,11 +421,12 @@ def blocked_attention(
     # Broadcast leading dims of q against k/v once so the scan body is static.
     lead = jnp.broadcast_shapes(q.shape[:-2], k.shape[:-2])
     qs = jnp.broadcast_to(q, lead + q.shape[-2:])
-    state = init_state(qs.shape[:-1], d, policy)
+    state = init_state(qs.shape[:-1], d, policy, per_row_cnt=chunk_exact)
 
     def body(state, inp):
         kj, vj, jidx = inp
         mask = None
+        sbar_mask = None
         if need_mask:
             col = jidx * block_kv + jnp.arange(block_kv, dtype=jnp.int32)
             mask = jnp.ones((s1, block_kv), bool)
@@ -361,9 +434,15 @@ def blocked_attention(
                 mask = q_pos >= col[None, :]
             col_ok = col < jnp.reshape(limit, jnp.shape(limit) + (1, 1))
             mask = jnp.logical_and(mask, col_ok)
+            if chunk_exact:
+                # Shift/sbar column set = valid columns (row-uniform), the
+                # causal structure lives only in the softmax mask.
+                sbar_mask = col_ok
         state = update_state(
             state, qs, kj, vj, inva=inva, policy=policy, mask=mask,
-            post_scale=post_scale, sbar_over_mask=shift_mask_valid,
+            post_scale=post_scale,
+            sbar_over_mask=shift_mask_valid and not chunk_exact,
+            sbar_mask=sbar_mask, dead_rows_noop=chunk_exact,
         )
         return state, None
 

@@ -5,6 +5,7 @@ from repro.kernels.ops import (
     pasa_attention,
     pasa_decode,
     pasa_paged_decode,
+    pasa_paged_prefill,
     shift_kv,
 )
 
@@ -13,5 +14,6 @@ __all__ = [
     "pasa_attention",
     "pasa_decode",
     "pasa_paged_decode",
+    "pasa_paged_prefill",
     "shift_kv",
 ]

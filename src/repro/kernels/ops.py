@@ -25,6 +25,7 @@ from repro.core.precision import FP16, PrecisionPolicy
 from repro.kernels import pasa_attention as _attn
 from repro.kernels import pasa_decode as _decode
 from repro.kernels import pasa_paged_decode as _paged
+from repro.kernels import pasa_paged_prefill as _paged_prefill
 from repro.kernels import shift_kv as _shift
 
 
@@ -178,6 +179,59 @@ def pasa_paged_decode(
         v_pages.astype(policy.input_dtype),
         page_table, kv_len,
         inva=inva, beta=beta,
+        stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
+        score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        interpret=interpret,
+    )
+
+
+def pasa_paged_prefill(
+    q: jnp.ndarray,          # (B, H, CS, D) chunk queries, full query heads
+    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray, # (B, max_pages) int32
+    chunk_start: jnp.ndarray,  # (B,) absolute position of the chunk's row 0
+    kv_len: jnp.ndarray,     # (B,) valid KV length (chunk end)
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    block_q: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Chunked prefill over a paged KV cache (chunk-exact convention).
+
+    The chunk's K/V must already be scattered into their pages; queries
+    attend causally over cached-prefix pages and the in-flight chunk
+    through the page table.  ``use_kernel=True`` runs the Pallas kernel
+    (page-table scalar prefetch; TPU, or CPU via ``interpret=True``);
+    ``use_kernel=False`` takes the XLA gather fallback.  Both use the
+    chunk-exact shift (page-local valid-column mean, causal mask after
+    sbar, per-row dead-page no-ops), so outputs are bit-invariant to the
+    chunk schedule - the prefix cache's exactness contract.
+    """
+    if q.ndim != 4:
+        raise ValueError("q must be (B, H, CS, D)")
+    if k_pages.ndim != 4 or k_pages.shape != v_pages.shape:
+        raise ValueError(
+            f"pages must be (P, page, KVH, D); got {k_pages.shape} / "
+            f"{v_pages.shape}"
+        )
+    if not use_kernel:
+        return _paged_prefill.paged_prefill_xla(
+            q.astype(policy.input_dtype),
+            k_pages.astype(policy.input_dtype),
+            v_pages.astype(policy.input_dtype),
+            page_table, chunk_start, kv_len,
+            beta=beta, policy=policy,
+        )
+    inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
+    return _paged_prefill.paged_prefill_kernel_call(
+        q.astype(policy.input_dtype),
+        k_pages.astype(policy.input_dtype),
+        v_pages.astype(policy.input_dtype),
+        page_table, chunk_start, kv_len,
+        inva=inva, beta=beta, block_q=block_q,
         stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
         score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
         interpret=interpret,

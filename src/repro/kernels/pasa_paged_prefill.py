@@ -1,0 +1,346 @@
+"""PASA chunked prefill over PAGED KV (Pallas TPU kernel + XLA fallback).
+
+The third member of the PASA kernel family: ``pasa_attention`` is the
+whole-prompt prefill on contiguous K/V, ``pasa_paged_decode`` is one token
+vs paged K/V - this kernel is a prompt *chunk* (many query rows at a
+position offset) vs paged K/V, the compute engine of the chunked-prefill
+scheduler (runtime/engine.py).  The chunk's own K/V are scattered into
+their pages *before* the call (models/attention.py), so the kernel reads
+everything - cached prefix pages and the in-flight chunk - uniformly
+through the page table via scalar prefetch, exactly like the paged decode
+kernel: the physical page id is resolved in the BlockSpec index map before
+the DMA issues, so the gather costs no extra HBM traffic.
+
+Numerical convention: **chunk-exact** (``core.pasa.blocked_attention``
+docstring), the superset of the decode kernels' ``shift_mask_valid``:
+
+  * per-page algebraic key shift and row pseudo-average over the *valid*
+    (col < kv_len) columns - one column set for all rows, so Eq. 14 holds;
+  * causal masking (absolute row position vs absolute column) applied
+    after sbar;
+  * rows for which a page is fully causally dead skip it as an exact
+    no-op (per-row block counter in VMEM scratch), so a row's output - and
+    therefore the K/V the model writes for it - is bit-invariant to the
+    chunk schedule and to the page-table width.  This is the property the
+    radix prefix cache's exactness argument rests on
+    (runtime/prefix_cache.py): cache-hit prefill == cold prefill, bitwise.
+
+Grid: (B * H, Nq, max_pages), pages innermost/"arbitrary"; one grid step
+folds one page into the running state of one (batch, head, q-tile) cell.
+A q tile skips pages wholly past the valid length AND pages wholly in its
+causal future (tile-level ``pl.when``), mirroring the causal block skip of
+the contiguous prefill kernel.
+
+The XLA fallback (:func:`paged_prefill_xla`) is the gather +
+``blocked_attention(chunk_exact=True)`` route - the CPU/GPU path, what the
+serving engine uses off-TPU, and the oracle the kernel is validated
+against (tests/test_prefix_cache.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_BIG = -30000.0
+_LANES = 128
+
+
+def _chunk_block_update(
+    q, k, v,                  # (bq, d), (page, d), (page, d) VMEM values
+    row0,                     # scalar int32: absolute position of q row 0
+    col0,                     # scalar int32: absolute position of column 0
+    kv_len,                   # scalar int32: valid KV length (chunk end)
+    block_q: int,
+    page: int,
+    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+    *,
+    inva: float,
+    beta: float,
+    stat_dtype,
+    acc_dtype,
+    score_dtype,
+):
+    """Fold one page into the per-row running state (chunk-exact rules)."""
+    d = q.shape[-1]
+    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
+
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
+    valid = cols < kv_len                                   # (page, 1)
+    count = jnp.maximum(jnp.sum(valid.astype(stat_dtype)), 1.0)
+
+    if beta > 0.0:
+        km = jnp.sum(
+            jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
+            keepdims=True,
+        ) / count                                           # (1, d)
+        k_sh = (
+            (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
+            * scale
+        ).astype(k.dtype)
+    else:
+        k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
+
+    s = jax.lax.dot_general(
+        q, k_sh, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(score_dtype)                                   # (bq, page)
+
+    vmask = valid[:, 0][None, :]                            # (1, page)
+    # Row pseudo-average over the VALID columns (same set the shift used);
+    # the causal mask has not been applied yet - chunk-exact semantics.
+    sbar = (
+        jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
+                keepdims=True) / count
+    )
+
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    causal = rows >= jnp.transpose(cols)                    # (bq, page)
+    mask = jnp.logical_and(causal, vmask)
+    s = jnp.where(mask, s, jnp.asarray(NEG_BIG, s.dtype))
+
+    m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
+    p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
+    p = jnp.where(mask, p, jnp.asarray(0.0, p.dtype))
+    l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+
+    m_prev = m_scr[:, :1]
+    l_prev = l_scr[:, :1]
+    cnt = cnt_scr[:, :1]                                    # per-row (bq, 1)
+    first = cnt == 0.0
+
+    if inva != 0.0:
+        f_prev = f_scr[:, :1]
+        f_new = (cnt * f_prev + sbar) / (cnt + 1.0)
+        dm_prev_c = jnp.asarray(inva, stat_dtype) * (f_prev - f_new)
+        dm_cur_c = jnp.asarray(inva, stat_dtype) * (sbar - f_new)
+    else:
+        f_new = f_scr[:, :1]
+        dm_prev_c = jnp.zeros_like(m_prev)
+        dm_cur_c = jnp.zeros_like(m_loc)
+
+    cand_prev = jnp.where(
+        first, jnp.asarray(NEG_BIG, stat_dtype), m_prev + dm_prev_c
+    )
+    m_new = jnp.maximum(cand_prev, m_loc + dm_cur_c)
+    e_prev = jnp.exp(cand_prev - m_new)
+    e_cur = jnp.exp(m_loc + dm_cur_c - m_new)
+    l_new = e_prev * l_prev + e_cur * l_loc
+
+    # Zero v at INVALID columns before the PV GEMM (0 * NaN protection for
+    # stale page contents); causally-masked-but-valid columns hold real
+    # finite K/V and are already nulled through p == 0.
+    v_live = jnp.where(valid, v, jnp.asarray(0.0, v.dtype))
+    pv = jax.lax.dot_general(
+        p, v_live.astype(p.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(acc_dtype)
+    acc_new = (
+        e_prev.astype(acc_dtype) * acc_scr[...]
+        + e_cur.astype(acc_dtype) * pv
+    )
+
+    # Per-row dead-page no-op: rows with no causally-visible valid column
+    # keep their state bit-unchanged and do not count the page.
+    row_live = jnp.logical_and(rows >= col0, col0 < kv_len)  # (bq, 1)
+    m_scr[...] = jnp.where(
+        row_live, jnp.broadcast_to(m_new, m_scr.shape), m_scr[...]
+    )
+    l_scr[...] = jnp.where(
+        row_live, jnp.broadcast_to(l_new, l_scr.shape), l_scr[...]
+    )
+    f_scr[...] = jnp.where(
+        row_live, jnp.broadcast_to(f_new, f_scr.shape), f_scr[...]
+    )
+    acc_scr[...] = jnp.where(row_live, acc_new, acc_scr[...])
+    cnt_scr[...] = cnt_scr[...] + jnp.where(
+        row_live, 1.0, 0.0
+    ).astype(cnt_scr.dtype)
+
+
+def _paged_prefill_kernel(
+    start_ref,             # scalar prefetch: (B,) int32 chunk start
+    kv_len_ref,            # scalar prefetch: (B,) int32 valid KV length
+    pt_ref,                # scalar prefetch: (B, max_pages) int32 page table
+    q_ref, k_ref, v_ref,   # (1, bq, D), (1, page, 1, D), (1, page, 1, D)
+    o_ref,                 # (1, bq, D)
+    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+    *,
+    inva: float,
+    beta: float,
+    n_heads: int,
+    block_q: int,
+    page_size: int,
+    n_pages: int,
+    stat_dtype,
+    acc_dtype,
+    score_dtype,
+):
+    bh = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    b = bh // n_heads
+    start = start_ref[b]
+    kv_len = kv_len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        f_scr[...] = jnp.zeros_like(f_scr)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Page j is dead for the whole tile iff it is past the valid length or
+    # wholly in the causal future of the tile's LAST row.
+    row_last = start + (i + 1) * block_q - 1
+    live = jnp.logical_and(j * page_size < kv_len, j * page_size <= row_last)
+
+    @pl.when(live)
+    def _step():
+        _chunk_block_update(
+            q_ref[0], k_ref[0, :, 0, :], v_ref[0, :, 0, :],
+            start + i * block_q, j * page_size, kv_len,
+            block_q, page_size,
+            m_scr, l_scr, f_scr, cnt_scr, acc_scr,
+            inva=inva, beta=beta, stat_dtype=stat_dtype,
+            acc_dtype=acc_dtype, score_dtype=score_dtype,
+        )
+
+    @pl.when(j == n_pages - 1)
+    def _fin():
+        l = l_scr[:, :1].astype(acc_dtype)
+        # Rows past the real chunk never fold a block (l == 0); emit 0
+        # instead of 0/0 so pad rows cannot NaN-poison downstream layers.
+        safe = jnp.where(l > 0.0, l, jnp.asarray(1.0, acc_dtype))
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "inva", "beta", "block_q", "stat_dtype", "acc_dtype", "score_dtype",
+        "out_dtype", "interpret",
+    ),
+)
+def paged_prefill_kernel_call(
+    q: jnp.ndarray,          # (B, H, CS, D) chunk queries, full query heads
+    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical pool (raw K)
+    v_pages: jnp.ndarray,    # (P, page, KVH, D)
+    page_table: jnp.ndarray, # (B, max_pages) int32
+    chunk_start: jnp.ndarray,  # (B,) int32 absolute position of q row 0
+    kv_len: jnp.ndarray,     # (B,) int32 valid length (chunk end)
+    *,
+    inva: float,
+    beta: float,
+    block_q: int = 128,
+    stat_dtype=jnp.float32,
+    acc_dtype=jnp.float32,
+    score_dtype=jnp.float16,
+    out_dtype=jnp.float16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, cs, d = q.shape
+    _, page_size, kvh, _ = k_pages.shape
+    if h % kvh:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kvh}")
+    group = h // kvh
+    if cs % block_q:
+        raise ValueError(f"chunk {cs} % block_q {block_q} != 0 (pad upstream)")
+    n_q = cs // block_q
+    n_pages = page_table.shape[1]
+
+    qr = q.reshape(b * h, cs, d)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel,
+        inva=inva, beta=beta, n_heads=h, block_q=block_q,
+        page_size=page_size, n_pages=n_pages,
+        stat_dtype=stat_dtype, acc_dtype=acc_dtype, score_dtype=score_dtype,
+    )
+
+    def q_map(bh, i, j, st, kvl, pt):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j, st, kvl, pt):
+        # page gather: physical id from the prefetched table, before DMA
+        return (pt[bh // h, j], 0, (bh % h) // group, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * h, n_q, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), stat_dtype),   # m
+            pltpu.VMEM((block_q, _LANES), stat_dtype),   # l
+            pltpu.VMEM((block_q, _LANES), stat_dtype),   # f
+            pltpu.VMEM((block_q, _LANES), stat_dtype),   # per-row block count
+            pltpu.VMEM((block_q, d), acc_dtype),         # accumulator
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, cs, d), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        chunk_start.astype(jnp.int32), kv_len.astype(jnp.int32),
+        page_table.astype(jnp.int32),
+        qr, k_pages, v_pages,
+    )
+    return out.reshape(b, h, cs, d)
+
+
+def paged_prefill_xla(
+    q: jnp.ndarray,          # (B, H, CS, D)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray, # (B, max_pages)
+    chunk_start: jnp.ndarray,  # (B,)
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    beta: float,
+    policy,
+) -> jnp.ndarray:
+    """Gather-then-attend fallback at the chunk-exact convention.
+
+    ``jnp.take`` of the pages + ``blocked_attention(chunk_exact=True)`` with
+    block granularity == page size, so the XLA shift/sbar column sets match
+    the kernel's page-local ones.  The engine's CPU route and the kernel's
+    validation oracle."""
+    from repro.core.pasa import blocked_attention
+
+    b, h, cs, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    group = h // kvh
+    mp = page_table.shape[1]
+    flat = page_table.reshape(-1)
+    ks = jnp.take(k_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    vs = jnp.take(v_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    ks = jnp.moveaxis(ks, 2, 1)                      # (B, KVH, S2v, D)
+    vs = jnp.moveaxis(vs, 2, 1)
+    qg = q.reshape(b, kvh, group, cs, d)
+    out = blocked_attention(
+        qg, ks[:, :, None], vs[:, :, None],
+        beta=beta, policy=policy, block_kv=page, causal=True,
+        kv_len=kv_len.reshape(b, 1, 1),
+        q_offset=chunk_start.reshape(b, 1, 1, 1),
+        use_gemm_shift=False, chunk_exact=True,
+    )
+    return out.reshape(b, h, cs, d)

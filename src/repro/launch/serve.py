@@ -4,19 +4,29 @@ Two cache backends:
 
   * **dense** (default, all families): one ``(L, B, max_len, kv_dim)`` cache
     allocated per batch - simple, but HBM scales with ``B * max_len`` even
-    when sequences are short.
+    when sequences are short.  Families exposing a fused prefill
+    (``bundle.prefill``: dense/moe transformers) consume the whole prompt in
+    ONE forward pass instead of token-by-token teacher forcing, so TTFT is
+    one model call rather than ``prompt_len`` decode steps.
   * **paged** (``--paged``; transformer families): the
     :class:`repro.runtime.ServeEngine` - fixed-size KV pages + per-sequence
     page tables + free-list allocator, with continuous batching (requests
-    admitted whenever a slot and pages free up).  ssm/hybrid keep the dense
-    path: their recurrent state is O(1) per sequence, there is nothing to
-    page.
+    admitted whenever a slot and pages free up).  Prompts are prefetched in
+    ``--prefill-chunk``-token chunks through the chunk-exact paged prefill
+    (Sarathi-style mixing with the batched decode step); pass
+    ``--no-chunked-prefill`` for the PR-1 token-by-token reference mode.
+    ``--prefix-cache`` additionally shares identical prompt-prefix K/V
+    pages across requests through the radix prefix cache -
+    bit-identically, see repro/runtime/prefix_cache.py.  ssm/hybrid keep
+    the dense path: their recurrent state is O(1) per sequence, there is
+    nothing to page.
 
 Example (CPU-friendly):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 16 --gen 16 --mesh 1x1
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-      --batch 4 --prompt-len 16 --gen 16 --mesh 1x1 --paged --num-pages 32
+      --batch 4 --prompt-len 64 --gen 16 --mesh 1x1 --paged \
+      --num-pages 64 --prefix-cache
 """
 
 from __future__ import annotations
@@ -44,6 +54,25 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="physical pages in the pool (default: sized to fit "
                          "the requested batch exactly)")
+    ap.add_argument("--chunked-prefill", dest="chunked_prefill",
+                    action="store_true", default=True,
+                    help="paged route: prefill prompts in chunks through "
+                         "the paged prefill path (default)")
+    ap.add_argument("--no-chunked-prefill", dest="chunked_prefill",
+                    action="store_false",
+                    help="paged route: token-by-token prompt consumption "
+                         "(the PR-1 reference mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="per-step prefill token budget; multiple of the "
+                         "page size (default: 8 pages)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=False,
+                    help="share identical prompt-prefix KV pages across "
+                         "requests (radix cache; requires chunked prefill, "
+                         "so it cannot combine with --no-chunked-prefill)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prompt-prefix KV page sharing (default)")
     args = ap.parse_args(argv)
 
     import jax
@@ -87,25 +116,43 @@ def main(argv=None):
                 (args.batch, cfg.n_image_tokens, cfg.vision_dim), jnp.bfloat16
             )
 
-        # prompt consumption token-by-token (teacher forcing into the cache);
-        # a fused prefill kernel path exists for the dense family
-        # (transformer.prefill) - this loop is the family-generic route.
-        tok = jnp.asarray(prompts[:, 0])
         t0 = time.time()
         generated = []
-        for i in range(args.prompt_len + args.gen - 1):
-            pos = jnp.full((args.batch,), i, jnp.int32)
-            nxt, logits, cache = step(params, tok, pos, cache, **extras)
-            if i + 1 < args.prompt_len:
-                tok = jnp.asarray(prompts[:, i + 1])
-            else:
-                tok = nxt
-                generated.append(np.asarray(nxt))
+        if bundle.prefill is not None and not extras:
+            # Fused prefill: the whole prompt in one forward pass - the
+            # dense route's replacement for token-by-token consumption.
+            pf = jax.jit(lambda p, t, c: bundle.prefill(p, t, c))
+            logits, cache = pf(params, jnp.asarray(prompts), cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tok)
+            t_first = time.time() - t0
+            generated.append(np.asarray(tok))
+            for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
+                pos = jnp.full((args.batch,), i, jnp.int32)
+                tok, _, cache = step(params, tok, pos, cache)
+                generated.append(np.asarray(tok))
+            n_steps = 1 + args.gen - 1
+        else:
+            # family-generic token-by-token route (ssm/hybrid/vlm/audio)
+            tok = jnp.asarray(prompts[:, 0])
+            t_first = None
+            for i in range(args.prompt_len + args.gen - 1):
+                pos = jnp.full((args.batch,), i, jnp.int32)
+                nxt, logits, cache = step(params, tok, pos, cache, **extras)
+                if i + 1 < args.prompt_len:
+                    tok = jnp.asarray(prompts[:, i + 1])
+                else:
+                    if t_first is None:
+                        jax.block_until_ready(nxt)
+                        t_first = time.time() - t0
+                    tok = nxt
+                    generated.append(np.asarray(nxt))
+            n_steps = args.prompt_len + args.gen - 1
         dt = time.time() - t0
         gen = np.stack(generated, axis=1)
-        n_steps = args.prompt_len + args.gen - 1
         print(f"generated {gen.shape} tokens in {dt:.2f}s "
-              f"({1000*dt/max(n_steps,1):.1f} ms/step)")
+              f"({1000*dt/max(n_steps,1):.1f} ms/step, "
+              f"TTFT {1000*t_first:.1f} ms)")
         print("sample:", gen[0][:16])
         return gen
 
@@ -127,10 +174,19 @@ def _serve_paged(args, bundle, params, prompts):
     total = args.prompt_len + args.gen
     need = math.ceil(total / page_size) * args.batch
     num_pages = args.num_pages or need + 1  # +1: reserved null page
+    chunk = args.prefill_chunk
+    if chunk is not None and chunk % page_size:
+        raise ValueError(
+            f"--prefill-chunk {chunk} must be a multiple of the page size "
+            f"{page_size}"
+        )
     eng = ServeEngine(
         bundle, params,
         max_batch=args.batch, num_pages=num_pages, page_size=page_size,
         max_seq_len=total,
+        chunked_prefill=args.chunked_prefill,
+        prefill_chunk=chunk,
+        prefix_cache=args.prefix_cache,
     )
     reqs = [eng.submit(list(p), args.gen) for p in prompts]
     t0 = time.time()
@@ -140,10 +196,18 @@ def _serve_paged(args, bundle, params, prompts):
         [np.asarray(r.generated, np.int32) for r in reqs], axis=0
     )
     st = eng.stats()
-    print(f"[paged] generated {gen.shape} tokens in {dt:.2f}s "
+    ttft_steps = [r.first_token_step - r.admit_step + 1 for r in reqs]
+    mode = ("chunked" if args.chunked_prefill else "token-by-token")
+    print(f"[paged/{mode}] generated {gen.shape} tokens in {dt:.2f}s "
           f"({1000*dt/max(st['steps'],1):.1f} ms/step), "
           f"pool={st['cache_bytes']/1e6:.2f} MB "
-          f"({num_pages} pages x {page_size} tok)")
+          f"({num_pages} pages x {page_size} tok), "
+          f"TTFT {np.mean(ttft_steps):.1f} engine steps")
+    if args.prefix_cache:
+        pc = st["prefix_cache"]
+        print(f"[prefix-cache] {pc['cached_pages']} pages cached, "
+              f"{pc['hits']} page hits / {pc['misses']} misses, "
+              f"{pc['evictions']} evictions")
     print("sample:", gen[0][:16])
     return gen
 

@@ -57,7 +57,7 @@ def init_attention(key, cfg: ModelConfig, dtype, n_stack=None, kv_in_dim=None):
 
 
 def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset,
-            decode=False):
+            decode=False, chunk_block: int = 0):
     """q5: (B, KVH, G, S1, hd); k5/v5: (B, KVH, 1, S2, hd).
 
     ``decode=True`` selects the decode-kernel shift convention for PASA:
@@ -68,16 +68,37 @@ def _attend(q5, k5, v5, cfg: ModelConfig, *, causal, kv_len, q_offset,
     never leak into the output - is what allows recycled KV pages to skip
     scrubbing.  Both conventions are exact softmax; see
     core.pasa.blocked_attention.
+
+    ``chunk_block > 0`` selects the chunked-prefill convention
+    (``chunk_exact``: valid-column shift under causal masking with per-row
+    dead-block no-ops) at block granularity ``chunk_block`` (== the KV page
+    size, so shift blocks coincide with cache pages and prefix-cache hits
+    are bit-identical to cold prefill; see kernels/pasa_paged_prefill.py).
     """
     ac = cfg.attention
     if ac.impl == "naive":
+        # Chunked prefill puts S1 rows at a dynamic position offset; the
+        # reshaped q_offset broadcasts as (..., S1, 1) against the column
+        # ids once given a trailing axis (blocked_attention adds the same
+        # axis internally).  Without it, a chunk at c0 > 0 would causally
+        # mask out the whole cached prefix beyond column S1-1.
+        qo = 0
+        if chunk_block > 0 and q_offset is not None:
+            qo = q_offset[..., None]
         out = naive_attention(
             q5, k5, v5, causal=causal, kv_len=kv_len,
-            q_offset=0,
+            q_offset=qo,
         ).astype(q5.dtype)
         return out
     policy = get_policy(ac.pasa_policy if ac.impl == "pasa" else ac.policy)
     beta = ac.beta if ac.impl == "pasa" else 0.0
+    if chunk_block > 0:
+        return blocked_attention(
+            q5, k5, v5,
+            beta=beta, policy=policy, block_kv=chunk_block, causal=True,
+            kv_len=kv_len, q_offset=q_offset,
+            use_gemm_shift=False, chunk_exact=True,
+        )
     use_gemm = ac.use_gemm_shift and not decode
     return blocked_attention(
         q5, k5, v5,
@@ -99,8 +120,11 @@ def attention(
     cache: Optional[dict] = None,   # {"k","v": (B, S2max, KV_dim)} dense, or
                                     # {"k","v": (P, page, KV_dim)} paged pool
     pos: Optional[jnp.ndarray] = None,       # (B,) write positions (decode)
+                                             # or chunk starts (paged prefill)
     prefill_cache: bool = False,
     page_table: Optional[jnp.ndarray] = None,  # (B, max_pages) -> paged cache
+    prefill_len: Optional[jnp.ndarray] = None,  # (B,) valid KV length after
+                                                # this chunk (paged prefill)
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     cd = cfg.jnp_compute_dtype()
     b, s, _ = x.shape
@@ -130,15 +154,21 @@ def attention(
     q_offset = None
     kv_len = None
     if use_rope and cross_x is None:
-        if pos is not None and not prefill_cache:
-            # decode: rotate by per-batch absolute position
+        if pos is not None:
+            # decode (S == 1) or chunked prefill: rotate by per-batch
+            # absolute positions pos + [0, S)
             half = hd // 2
             freqs = 1.0 / (
                 cfg.rope_theta
                 ** (jnp.arange(0, half, dtype=jnp.float32) / half)
             )
-            ang = pos.astype(jnp.float32)[:, None, None, None] * freqs
-            cos, sin = jnp.cos(ang), jnp.sin(ang)  # (B,1,1,half)
+            abs_pos = (
+                pos.astype(jnp.float32)[:, None]
+                + jnp.arange(s, dtype=jnp.float32)[None, :]
+            )                                      # (B, S)
+            ang = abs_pos[:, :, None] * freqs
+            cos = jnp.cos(ang)[:, :, None, :]      # (B, S, 1, half)
+            sin = jnp.sin(ang)[:, :, None, :]
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
         else:
@@ -147,12 +177,51 @@ def attention(
             k = apply_rope(k, cos, sin)
 
     new_cache = None
-    if cache is not None and page_table is not None:
-        if prefill_cache:
-            raise NotImplementedError(
-                "paged cache is decode-only; prefill goes through the engine"
-                " token loop"
+    chunk_block = 0
+    if cache is not None and page_table is not None and prefill_cache:
+        # Chunked paged prefill: scatter this chunk's K/V into its pages,
+        # then attend causally over the page table - cached prefix pages
+        # and the in-flight chunk read uniformly (write-then-attend).  The
+        # attention runs at the chunk-exact convention with shift-block
+        # granularity == page size, so every full page's contents are a
+        # function of the token prefix alone and prefix-cache hits are
+        # bit-identical to cold prefill (see kernels/pasa_paged_prefill.py).
+        if pos is None or prefill_len is None:
+            raise ValueError(
+                "paged prefill needs pos (chunk start) and prefill_len"
             )
+        from repro.runtime.paged_cache import NULL_PAGE, gather_pages
+
+        ck, cv = cache["k"], cache["v"]
+        page = ck.shape[1]
+        mp = page_table.shape[1]
+        positions = (
+            pos.astype(jnp.int32)[:, None]
+            + jnp.arange(s, dtype=jnp.int32)[None, :]
+        )                                             # (B, S)
+        limit = prefill_len.astype(jnp.int32)
+        valid = positions < limit[:, None]
+        pidx = jnp.minimum(positions // page, mp - 1)
+        slot = positions % page
+        phys = jnp.take_along_axis(page_table, pidx, axis=1)
+        # pad rows (beyond the real chunk) land in the null write sink
+        phys = jnp.where(valid, phys, NULL_PAGE)
+        ck = ck.at[phys, slot].set(
+            k.reshape(b, s, kvh * hd).astype(ck.dtype)
+        )
+        cv = cv.at[phys, slot].set(
+            v.reshape(b, s, kvh * hd).astype(cv.dtype)
+        )
+        new_cache = {"k": ck, "v": cv}
+        kseq = gather_pages(ck, page_table)           # (B, S2v, kv_dim)
+        vseq = gather_pages(cv, page_table)
+        s2 = kseq.shape[1]
+        k = kseq.reshape(b, s2, kvh, hd).astype(cd)
+        v = vseq.reshape(b, s2, kvh, hd).astype(cd)
+        kv_len = limit
+        chunk_block = page
+        causal = True
+    elif cache is not None and page_table is not None:
         # Paged decode: cache is the physical page pool of THIS layer,
         # (num_pages, page_size, kv_dim).  The token is scattered into
         # page_table[b, pos // page] at slot pos % page; inactive batch
@@ -243,10 +312,17 @@ def attention(
     if kv_len is not None:
         shape = (b, 1) if out_heads_axis == 1 else (b, 1, 1)
         kv_len_b = kv_len.reshape(shape)
+    q_off = None
+    if pos is not None and not prefill_cache:
+        q_off = pos
+    elif chunk_block > 0:
+        # causal q positions = pos + arange(S); shaped to broadcast as
+        # (..., S1, 1) against the per-block column ids in blocked_attention
+        q_off = pos.reshape((b, 1, 1) if out_heads_axis == 1 else (b, 1, 1, 1))
     out = _attend(
         q5, k5, v5, cfg, causal=causal, kv_len=kv_len_b,
-        q_offset=pos if (pos is not None and not prefill_cache) else None,
-        decode=decode_path,
+        q_offset=q_off,
+        decode=decode_path, chunk_block=chunk_block,
     )
 
     out = jnp.moveaxis(out.reshape(b, kvh * g, s, hd), 1, 2).reshape(b, s, h * hd)

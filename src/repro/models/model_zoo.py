@@ -106,10 +106,26 @@ class ModelBundle:
     #   (params, token (B,), pos (B,), pool, page_table (B, mp)) ->
     #   (logits, pool)
     paged_serve_step: Optional[Callable[..., Any]] = None
+    #   (params, tokens (B, CS), start (B,), kv_len (B,), last_idx (B,),
+    #    pool, page_table (B, mp)) -> (logits (B, V), pool)
+    # One chunked-prefill step (transformer.prefill_step_paged); the
+    # engine's Sarathi-style scheduler mixes one such chunk per step with
+    # the batched decode step.
+    paged_prefill_step: Optional[Callable[..., Any]] = None
+    #   (params, tokens (B, S), cache) -> (last-position logits (B, V),
+    #    filled cache)
+    # Fused whole-prompt prefill on the DENSE cache - the non-paged
+    # launch/serve.py route's replacement for token-by-token prompt
+    # consumption.
+    prefill: Optional[Callable[..., Any]] = None
 
     @property
     def supports_paged(self) -> bool:
         return self.init_paged_cache is not None
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self.paged_prefill_step is not None
 
     def train_inputs(self, batch: int, seq: int) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for one training batch."""
@@ -154,6 +170,10 @@ def build(cfg: ModelConfig) -> ModelBundle:
             paged_serve_step=lambda p, t, pos, c, pt: (
                 transformer.serve_step_paged(p, cfg, t, pos, c, pt)
             ),
+            paged_prefill_step=lambda p, t, st, kvl, li, c, pt: (
+                transformer.prefill_step_paged(p, cfg, t, st, kvl, li, c, pt)
+            ),
+            prefill=lambda p, t, c: transformer.prefill_logits(p, cfg, t, c),
         )
     if fam == "ssm":
         return ModelBundle(

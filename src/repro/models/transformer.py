@@ -39,13 +39,13 @@ def init_block(key, cfg: ModelConfig, dtype, n_stack: int):
 
 def block_apply(
     x, p, cfg: ModelConfig, *, causal=True, cache=None, pos=None,
-    prefill_cache=False, page_table=None,
+    prefill_cache=False, page_table=None, prefill_len=None,
 ):
     cd = cfg.jnp_compute_dtype()
     h, new_cache = attn_mod.attention(
         L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
         causal=causal, cache=cache, pos=pos, prefill_cache=prefill_cache,
-        page_table=page_table,
+        page_table=page_table, prefill_len=prefill_len,
     )
     x = x + h.astype(x.dtype)
     ff_in = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -70,7 +70,7 @@ def init_lm(cfg: ModelConfig, key) -> dict:
 
 
 def _scan_blocks(x, stacked, cfg, *, cache=None, pos=None, prefill_cache=False,
-                 causal=True, page_table=None):
+                 causal=True, page_table=None, prefill_len=None):
     """lax.scan over stacked layer params (+ optional stacked caches).
 
     ``page_table`` (shared by all layers - one physical page id addresses
@@ -88,6 +88,7 @@ def _scan_blocks(x, stacked, cfg, *, cache=None, pos=None, prefill_cache=False,
         fn = functools.partial(
             block_apply, cfg=cfg, causal=causal, pos=pos,
             prefill_cache=prefill_cache, page_table=page_table,
+            prefill_len=prefill_len,
         )
         if cfg.remat:
             fn = jax.checkpoint(fn)
@@ -182,3 +183,51 @@ def serve_step_paged(
 def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, cache: dict):
     """Prefill a zero-initialized cache; returns (hidden, filled cache)."""
     return forward(params, cfg, tokens, cache=cache, prefill_cache=True)
+
+
+def prefill_logits(params, cfg: ModelConfig, tokens: jnp.ndarray, cache: dict):
+    """Fused whole-prompt prefill: (B, S) tokens -> (last-position logits
+    (B, V), filled cache).  One forward pass replaces S decode steps; the
+    argmax of the returned logits is the first generated token and decode
+    continues at pos == S (launch/serve.py dense route)."""
+    h, new_cache = forward(params, cfg, tokens, cache=cache, prefill_cache=True)
+    logits = (
+        h[:, -1].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    )
+    logits = shard(logits, dp_axes(), "model")
+    return logits, new_cache
+
+
+def prefill_step_paged(
+    params, cfg: ModelConfig, tokens: jnp.ndarray, start: jnp.ndarray,
+    kv_len: jnp.ndarray, last_idx: jnp.ndarray, cache: dict,
+    page_table: jnp.ndarray,
+):
+    """One chunked-prefill step against the paged pool.
+
+    tokens (B, CS) - one prompt chunk, right-padded to the static chunk
+    size (pad positions write K/V to the null page);
+    start (B,) - absolute position of the chunk's first token;
+    kv_len (B,) - valid KV length after this chunk (start + real length);
+    last_idx (B,) - row of the chunk whose logits the caller wants (the
+    last REAL row; only meaningful on the chunk that completes the prompt).
+
+    Returns (logits (B, V) of the requested row, updated pool).  K/V for
+    positions [start, kv_len) are written to the page table's pages; the
+    attention is the chunk-exact paged prefill (models/attention.py), so
+    the pages end up bit-identical to any other chunk schedule - the
+    prefix-cache sharing contract.
+    """
+    cd = cfg.jnp_compute_dtype()
+    x = L.embed(tokens, params["embed"], cd)          # (B, CS, D)
+    x, new_cache = _scan_blocks(
+        x, params["blocks"], cfg, cache=cache, pos=start,
+        prefill_cache=True, page_table=page_table, prefill_len=kv_len,
+    )
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hl = jnp.take_along_axis(
+        h, last_idx.astype(jnp.int32)[:, None, None], axis=1
+    )[:, 0]                                            # (B, D)
+    logits = hl.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    logits = shard(logits, dp_axes(), "model")
+    return logits, new_cache

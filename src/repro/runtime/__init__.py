@@ -1,4 +1,9 @@
-from repro.runtime.engine import Request, ServeEngine, dense_greedy_reference
+from repro.runtime.engine import (
+    Request,
+    ServeEngine,
+    chunked_cold_reference,
+    dense_greedy_reference,
+)
 from repro.runtime.fault_tolerance import (
     FaultTolerantLoop,
     StragglerMonitor,
@@ -11,14 +16,17 @@ from repro.runtime.paged_cache import (
     init_paged_pool,
     paged_bytes,
 )
+from repro.runtime.prefix_cache import RadixPrefixCache
 
 __all__ = [
     "FaultTolerantLoop",
     "NULL_PAGE",
     "PageAllocator",
+    "RadixPrefixCache",
     "Request",
     "ServeEngine",
     "StragglerMonitor",
+    "chunked_cold_reference",
     "dense_greedy_reference",
     "elastic_mesh_shape",
     "gather_pages",

@@ -1,47 +1,61 @@
 """Continuous-batching serving engine over the paged KV cache.
 
 The engine owns the *host-side* control plane (request queue, admission,
-page accounting, per-request cursors) around a single *device-side* jitted
-step that is fully batched and shape-static - every iteration runs the same
-``(B,)``-shaped decode step regardless of how many batch slots are live, so
-there is exactly one compilation for the whole serving session.
+page accounting, prefix-cache references, per-request cursors) around at
+most two *device-side* jitted calls per step - one chunked-prefill call and
+one fully-batched decode call - both shape-static, so there are exactly two
+compilations for the whole serving session.
 
 Request lifecycle::
 
-    submit() -> WAITING --admission--> RUNNING(prefill) -> RUNNING(generate)
-                 |            (slot + pages granted)             |
-                 +<------- insufficient slot/pages               v
-                                                FINISHED (pages freed, slot
-                                                reusable next step)
+    submit() -> WAITING --admission--> RUNNING(prefill) -> RUNNING(decode)
+                 |            (slot + pages granted,             |
+                 |             shared prefix pages referenced)   v
+                 +<------- insufficient slot/pages    FINISHED (owned pages
+                                                      freed or donated to the
+                                                      prefix cache, slot
+                                                      reusable next step)
 
   * **Admission** happens at the top of every :meth:`step`, so new requests
     join mid-stream whenever a batch slot AND enough pages are free -
     continuous batching, no draining barrier.  Admission is *conservative*:
-    a request is admitted only if its worst-case page need,
-    ``ceil((len(prompt) + max_new_tokens) / page_size)``, is allocatable at
-    that moment.  Admitted requests can therefore never run out of pages
-    mid-flight => no preemption/eviction machinery and no deadlock (every
-    admitted request eventually finishes and returns its pages).
-  * **Prefill** is token-by-token through the same decode step (the
-    family-generic route of launch/serve.py): positions ``0..len(prompt)-2``
-    consume prompt tokens (teacher forcing into the cache), after which the
-    model's argmax output is fed back - so a request needs
-    ``len(prompt) + max_new_tokens - 1`` steps of slot occupancy in total.
-  * **Pages** are granted at admission (whole-request grant) but the page
-    *table* row is what makes them visible to the device step; freed pages
-    go straight back to the free list WITHOUT scrubbing - the decode
-    attention's masked valid-column shift (``shift_mask_valid``) guarantees
-    stale page contents beyond ``kv_len`` cannot reach the output.
-  * **Inactive slots** still execute (shape-static batching); their page
-    table rows are all null page 0 (the reserved write sink - see
-    runtime/paged_cache.py) and their outputs are discarded.
+    a request is admitted only if its worst-case page need is coverable at
+    that moment - but with the prefix cache enabled it is charged only for
+    its **non-shared** pages (matched prefix pages are refcounted, not
+    copied), and refcount-0 cache pages are evicted on demand to make room.
+  * **Chunked prefill** (default): each step runs ONE prompt chunk of
+    ``prefill_chunk`` tokens for the oldest still-prefilling request
+    through the chunk-exact paged prefill (kernels/pasa_paged_prefill.py),
+    then the batched decode step for every request past its prompt -
+    Sarathi-style mixing, so decode latency stays bounded while prefill
+    proceeds at O(chunk) tokens/step instead of 1 token/step.  TTFT for a
+    prompt of P tokens is ``ceil((P - cached) / prefill_chunk)`` steps, and
+    prefix-cache hits skip their shared pages' compute entirely.  Chunk
+    boundaries are page-aligned (``prefill_chunk`` is a multiple of
+    ``page_size``), which together with the chunk-exact convention makes
+    the K/V written to every full page - and all downstream logits -
+    bit-identical between cache-hit and cold prefill of the same request
+    (tests/test_prefix_cache.py).
+  * **Token-by-token prefill** (``chunked_prefill=False``): the PR-1
+    behavior - prompts teacher-forced one token per decode step; kept as
+    the reference mode (``dense_greedy_reference`` bit-matches it).
+  * **Pages** are granted at admission; freed pages go straight back to
+    the free list WITHOUT scrubbing - the masked valid-column shift
+    (``shift_mask_valid`` / ``chunk_exact``) guarantees stale page contents
+    beyond ``kv_len`` cannot reach any output.  On finish, the full prompt
+    pages of a request are DONATED to the prefix cache (when enabled)
+    instead of freed; the cache frees them on LRU eviction.
+  * **Inactive slots** still execute in the decode call (shape-static
+    batching); their page table rows are nulled in the decode view - so
+    still-prefilling requests' pages cannot be clobbered - and their
+    writes land in null page 0 (the reserved sink, runtime/paged_cache.py).
 
 PASA / page-size interaction: the engine defaults ``page_size`` to the
 model's PASA block length (``cfg.attention.block_kv``), making one page ==
-one PASA shift block.  The paged Pallas decode kernel computes its masked
-per-block key mean page-locally, so with this setting the paged path is
-bit-comparable with the contiguous decode kernel and the dense XLA path
-(tests/test_paged.py asserts bit-identical serve outputs dense vs paged).
+one PASA shift block.  Both paged kernels compute their per-block key shift
+page-locally, so page granularity and shift granularity coincide - the
+property that makes raw-K/V page sharing exact (see
+runtime/prefix_cache.py's module doc for the full argument).
 """
 
 from __future__ import annotations
@@ -56,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.paged_cache import NULL_PAGE, PageAllocator, paged_bytes
+from repro.runtime.prefix_cache import RadixPrefixCache
 
 WAITING = "waiting"
 RUNNING = "running"
@@ -65,10 +80,14 @@ FINISHED = "finished"
 def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
     """Token-by-token greedy decode on a fresh DENSE (B=1) cache.
 
-    The bit-equivalence oracle for the paged engine (examples/serve_paged.py,
-    tests/test_paged.py): it exercises only ``bundle.serve_step`` + the dense
-    cache, none of the paged machinery, and must produce token-for-token the
-    same greedy continuation as a request served through :class:`ServeEngine`.
+    The bit-equivalence oracle for the TOKEN-BY-TOKEN engine mode
+    (``chunked_prefill=False``; examples/serve_paged.py, tests/test_paged.py):
+    it exercises only ``bundle.serve_step`` + the dense cache, none of the
+    paged machinery, and must produce token-for-token the same greedy
+    continuation as a request served through :class:`ServeEngine` in that
+    mode.  Chunked prefill uses the chunk-exact convention instead (same
+    exact softmax, different fp16 rounding on interior rows); its oracle is
+    :func:`chunked_cold_reference`.
     """
     step = jax.jit(lambda p, t, pos, c: bundle.serve_step(p, t, pos, c))
     cache = bundle.init_cache(1, len(prompt) + max_new_tokens)
@@ -85,6 +104,29 @@ def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
     return out
 
 
+def chunked_cold_reference(
+    bundle, params, prompt, max_new_tokens: int, *,
+    page_size: int = 16, prefill_chunk: Optional[int] = None,
+    cache_dtype=jnp.bfloat16,
+):
+    """Cold (empty-prefix-cache) chunked-prefill serve of one request.
+
+    The hit-vs-cold oracle: a prefix-cache-hit serve of the same request
+    must match this token-for-token AND page-for-page bit-identically,
+    REGARDLESS of the chunk size used by either side (the chunk-exact
+    convention is schedule-invariant)."""
+    total = len(prompt) + max_new_tokens
+    eng = ServeEngine(
+        bundle, params, max_batch=1,
+        num_pages=1 + math.ceil(max(total - 1, 1) / page_size),
+        page_size=page_size, max_seq_len=total,
+        prefill_chunk=prefill_chunk, cache_dtype=cache_dtype,
+    )
+    r = eng.submit(prompt, max_new_tokens)
+    eng.run_to_completion()
+    return r.generated
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request and its lifecycle bookkeeping."""
@@ -97,20 +139,25 @@ class Request:
     # engine-step timestamps (continuous-batching latency accounting)
     submit_step: int = -1
     admit_step: int = -1
+    first_token_step: int = -1
     finish_step: int = -1
     # placement while RUNNING
     slot: int = -1
-    pages: List[int] = dataclasses.field(default_factory=list)
-    cursor: int = 0      # next cache position to be written for this request
+    pages: List[int] = dataclasses.field(default_factory=list)  # owned only
+    cursor: int = 0      # next cache position to be written (decode phase)
+    # chunked-prefill bookkeeping
+    prefill_pos: int = 0     # next prompt position whose K/V is not written
+    cached_len: int = 0      # prompt tokens served from the prefix cache
+    prefix_nodes: list = dataclasses.field(default_factory=list)
 
     @property
     def total_len(self) -> int:
         return len(self.prompt) + self.max_new_tokens
 
     def pages_needed(self, page_size: int) -> int:
-        # The request occupies total_len - 1 steps, writing cache positions
-        # 0..total_len-2 (the final generated token is returned, never fed
-        # back) - so only total_len - 1 positions need page backing.
+        # The request writes cache positions 0..total_len-2 (the final
+        # generated token is returned, never fed back) - so only
+        # total_len - 1 positions need page backing.
         return math.ceil(max(self.total_len - 1, 1) / page_size)
 
 
@@ -121,19 +168,29 @@ class ServeEngine:
       bundle: model bundle; must expose the paged interface
         (``bundle.supports_paged`` - transformer families).
       params: model parameters.
-      max_batch: number of device batch slots (B of the jitted step).
+      max_batch: number of device batch slots (B of the jitted decode step).
       num_pages: physical pages in the pool, *including* the reserved null
         page 0 (so ``num_pages - 1`` are allocatable).
       page_size: tokens per page; defaults to the model's PASA block
         length so page == shift-block granularity (see module doc).
       max_seq_len: longest sequence (prompt + generation) any single
         request may reach.  Sets the page-table width - which is also the
-        length of the KV view each decode step attends over (the gather /
-        kernel grid is sized by the table, not by live pages) - so keep it
-        at the real per-request maximum rather than the pool size.
-        Default: unconstrained (every non-null page could belong to one
-        sequence), which is convenient but makes per-step attention work
-        scale with the POOL, not the workload.
+        length of the KV view each decode step attends over - AND the
+        submit-time admissibility bound: requests with
+        ``len(prompt) + max_new_tokens > max_seq_len`` are rejected at
+        :meth:`submit` (they could never be served under the bounded page
+        table, and would otherwise wedge the FCFS queue forever).
+        Default: the page table's physical capacity,
+        ``(num_pages - 1) * page_size``.
+      chunked_prefill: prefill prompts in ``prefill_chunk``-token chunks
+        through the paged prefill path (default) instead of token-by-token
+        through the decode step.
+      prefill_chunk: per-step prefill token budget; must be a multiple of
+        ``page_size`` (chunk boundaries must be page-aligned for the
+        chunk-exact bit-invariance).  Default: ``8 * page_size``.
+      prefix_cache: share identical prompt-prefix K/V pages across requests
+        via a radix prefix cache (requires ``chunked_prefill`` - the
+        cache's contents are defined by the chunk-exact convention).
       cache_dtype: pool dtype (bf16 default, matching the dense cache).
     """
 
@@ -146,6 +203,9 @@ class ServeEngine:
         num_pages: int = 64,
         page_size: Optional[int] = None,
         max_seq_len: Optional[int] = None,
+        chunked_prefill: bool = True,
+        prefill_chunk: Optional[int] = None,
+        prefix_cache: bool = False,
         cache_dtype=jnp.bfloat16,
     ):
         if not bundle.supports_paged:
@@ -166,17 +226,45 @@ class ServeEngine:
         self.num_pages = int(num_pages)
         if max_seq_len is None:
             self.max_pages_per_seq = self.num_pages - 1
+            self.max_seq_len = self.max_pages_per_seq * self.page_size
         else:
             if max_seq_len < 1:
                 raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
             self.max_pages_per_seq = min(
                 math.ceil(max_seq_len / self.page_size), self.num_pages - 1
             )
+            self.max_seq_len = int(max_seq_len)
+
+        if chunked_prefill and not bundle.supports_chunked_prefill:
+            raise ValueError(
+                f"family {bundle.cfg.family!r} has no chunked-prefill path; "
+                "pass chunked_prefill=False"
+            )
+        self.chunked_prefill = bool(chunked_prefill)
+        if prefill_chunk is None:
+            prefill_chunk = 8 * self.page_size
+        if prefill_chunk < 1 or prefill_chunk % self.page_size:
+            raise ValueError(
+                f"prefill_chunk ({prefill_chunk}) must be a positive "
+                f"multiple of page_size ({self.page_size}); page-aligned "
+                "chunk boundaries are what make chunked prefill bit-exact"
+            )
+        self.prefill_chunk = int(prefill_chunk)
+        if prefix_cache and not self.chunked_prefill:
+            raise ValueError(
+                "prefix_cache requires chunked_prefill: cached page contents "
+                "are defined by the chunk-exact convention, which the "
+                "token-by-token decode path does not produce"
+            )
 
         self.pool = bundle.init_paged_cache(
             self.num_pages, self.page_size, dtype=cache_dtype
         )
         self.allocator = PageAllocator(self.num_pages)
+        self.prefix_cache = (
+            RadixPrefixCache(self.allocator, self.page_size)
+            if prefix_cache else None
+        )
         self.page_table = np.full(
             (self.max_batch, self.max_pages_per_seq), NULL_PAGE, np.int32
         )
@@ -198,12 +286,31 @@ class ServeEngine:
         # that can dwarf device memory if double-buffered.
         self._step_fn = jax.jit(_device_step, donate_argnums=(3,))
 
+        if self.chunked_prefill:
+            pstep = bundle.paged_prefill_step
+
+            def _device_prefill(params, tokens, start, kv_len, last, pool,
+                                table):
+                logits, new_pool = pstep(
+                    params, tokens, start, kv_len, last, pool, table
+                )
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, new_pool
+
+            self._prefill_fn = jax.jit(_device_prefill, donate_argnums=(5,))
+
     # ------------------------------------------------------------- queue --
 
     def submit(
         self, prompt, max_new_tokens: int, req_id: Optional[int] = None
     ) -> Request:
-        """Enqueue a request; admission happens inside :meth:`step`."""
+        """Enqueue a request; admission happens inside :meth:`step`.
+
+        Raises ValueError immediately for requests that could NEVER be
+        served - ``len(prompt) + max_new_tokens`` beyond ``max_seq_len`` or
+        beyond the pool's page capacity - instead of letting them wedge the
+        FCFS queue behind an unsatisfiable head forever.
+        """
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -213,6 +320,12 @@ class ServeEngine:
             req_id = self._req_counter
         self._req_counter = max(self._req_counter + 1, req_id + 1)
         r = Request(req_id=req_id, prompt=prompt, max_new_tokens=max_new_tokens)
+        if r.total_len > self.max_seq_len:
+            raise ValueError(
+                f"request needs {len(prompt)} prompt + {max_new_tokens} new "
+                f"= {r.total_len} positions > max_seq_len {self.max_seq_len}"
+                "; it can never be served under the bounded page table"
+            )
         need = r.pages_needed(self.page_size)
         if need > self.max_pages_per_seq:
             raise ValueError(
@@ -224,7 +337,10 @@ class ServeEngine:
         return r
 
     def _try_admit(self) -> None:
-        """FCFS admission: grant a free slot + the worst-case page count.
+        """FCFS admission: grant a free slot + the worst-case page count,
+        charging only NON-SHARED pages when the prefix cache is enabled
+        (matched prefix pages are referenced, not copied; refcount-0 cache
+        pages are evicted on demand to cover the remainder).
 
         Head-of-line blocking is intentional (simple fairness): if the head
         request does not fit, nothing behind it is admitted this step.
@@ -236,26 +352,73 @@ class ServeEngine:
             )
             if slot is None:
                 return
-            pages = self.allocator.alloc(r.pages_needed(self.page_size))
+            nodes = []
+            if self.prefix_cache is not None:
+                # cap at len(prompt)-1: the last prompt position is always
+                # computed (its logits are the first generated token), and
+                # the final/partial page stays private (copy-on-write).
+                nodes = self.prefix_cache.match(
+                    r.prompt, max_tokens=len(r.prompt) - 1
+                )
+            need_new = r.pages_needed(self.page_size) - len(nodes)
+            if self.prefix_cache is not None:
+                short = need_new - self.allocator.free_pages
+                # Evict only when eviction actually covers the shortfall:
+                # otherwise admission fails regardless and the cache would
+                # be stripped of resident prefixes for nothing.
+                if 0 < short <= self.prefix_cache.evictable_pages:
+                    self.prefix_cache.evict(short)
+            pages = self.allocator.alloc(need_new)
             if pages is None:
+                if nodes:
+                    self.prefix_cache.release(nodes)
                 return
             self.waiting.popleft()
+            if self.prefix_cache is not None:
+                self.prefix_cache.record_match(
+                    r.prompt, nodes, max_tokens=len(r.prompt) - 1
+                )
             r.state = RUNNING
             r.slot = slot
             r.pages = pages
+            r.prefix_nodes = nodes
+            r.cached_len = len(nodes) * self.page_size
             r.admit_step = self.steps
-            r.cursor = 0
             self._slots[slot] = r
             row = self.page_table[slot]
             row[:] = NULL_PAGE
-            row[: len(pages)] = pages
-            self._next_token[slot] = r.prompt[0]
+            shared = [n.page for n in nodes]
+            row[: len(shared)] = shared
+            row[len(shared): len(shared) + len(pages)] = pages
+            if self.chunked_prefill:
+                r.prefill_pos = r.cached_len
+                r.cursor = len(r.prompt)     # decode starts after the prompt
+            else:
+                r.prefill_pos = len(r.prompt)  # unused in this mode
+                r.cursor = 0
+                self._next_token[slot] = r.prompt[0]
 
     def _finish(self, r: Request) -> None:
-        self.allocator.free(r.pages)
+        if self.prefix_cache is not None:
+            # Donate the full prompt pages (prefix-determined contents,
+            # chunk-exact convention) to the cache; keep/free the rest.
+            n_share = len(r.prompt) // self.page_size
+            row = self.page_table[r.slot]
+            adopted = set(
+                self.prefix_cache.insert(
+                    r.prompt[: n_share * self.page_size], list(row[:n_share])
+                )
+            )
+            if r.prefix_nodes:
+                self.prefix_cache.release(r.prefix_nodes)
+            leftover = [p for p in r.pages if p not in adopted]
+            self.allocator.free(leftover)
+        else:
+            self.allocator.free(r.pages)
         self.page_table[r.slot][:] = NULL_PAGE
         self._slots[r.slot] = None
         r.pages = []
+        r.prefix_nodes = []
         r.slot = -1
         r.state = FINISHED
         r.finish_step = self.steps
@@ -271,23 +434,79 @@ class ServeEngine:
     def idle(self) -> bool:
         return not self.waiting and self.num_running == 0
 
+    def _run_prefill_chunk(self) -> Optional[Request]:
+        """One chunk of the oldest still-prefilling request (FCFS)."""
+        cands = [
+            r for r in self._slots
+            if r is not None and r.prefill_pos < len(r.prompt)
+        ]
+        if not cands:
+            return None
+        r = min(cands, key=lambda x: (x.admit_step, x.req_id))
+        c0 = r.prefill_pos
+        real = min(self.prefill_chunk, len(r.prompt) - c0)
+        chunk = r.prompt[c0: c0 + real]
+        chunk = chunk + [0] * (self.prefill_chunk - real)  # pad -> null page
+        first, self.pool = self._prefill_fn(
+            self.params,
+            jnp.asarray([chunk], jnp.int32),
+            jnp.asarray([c0], jnp.int32),
+            jnp.asarray([c0 + real], jnp.int32),
+            jnp.asarray([real - 1], jnp.int32),
+            self.pool,
+            jnp.asarray(self.page_table[r.slot: r.slot + 1]),
+        )
+        r.prefill_pos = c0 + real
+        if r.prefill_pos >= len(r.prompt):
+            # this chunk contained the last prompt token; its logits row is
+            # the first generated token - TTFT is now, not after the prompt
+            # has been teacher-forced token-by-token.
+            tok = int(np.asarray(first)[0])
+            r.generated.append(tok)
+            r.first_token_step = self.steps
+            self._next_token[r.slot] = tok
+            if len(r.generated) >= r.max_new_tokens:
+                self._finish(r)
+        return r
+
     def step(self) -> int:
-        """Admit what fits, run ONE batched decode step, advance cursors.
+        """Admit what fits, run one prefill chunk + ONE batched decode
+        step, advance cursors.
 
         Returns the number of requests that were live this step.  ``steps``
         advances on every call (it is the engine's scheduling clock, used
-        for arrival/admission timestamps); the device step itself is
-        skipped when no request is live.
+        for arrival/admission timestamps); the device calls are skipped
+        when no request needs them.
         """
         self._try_admit()
         live = [r for r in self._slots if r is not None]
         if not live:
             self.steps += 1
             return 0
+        n_live = len(live)
+
+        if self.chunked_prefill:
+            self._run_prefill_chunk()
+            dec = [
+                r for r in self._slots
+                if r is not None and r.prefill_pos >= len(r.prompt)
+            ]
+            if not dec:
+                self.steps += 1
+                return n_live
+            # decode view of the table: still-prefilling rows are nulled so
+            # the batched scatter cannot touch their pages.
+            table = np.array(self.page_table)
+            for i, s in enumerate(self._slots):
+                if s is None or s.prefill_pos < len(s.prompt):
+                    table[i, :] = NULL_PAGE
+        else:
+            dec = live
+            table = self.page_table
 
         tokens = np.array(self._next_token)     # copy: stable under updates
         pos = np.zeros((self.max_batch,), np.int32)
-        for r in live:
+        for r in dec:
             pos[r.slot] = r.cursor
 
         nxt, self.pool = self._step_fn(
@@ -295,22 +514,24 @@ class ServeEngine:
             jnp.asarray(tokens),
             jnp.asarray(pos),
             self.pool,
-            jnp.asarray(self.page_table),
+            jnp.asarray(table),
         )
         nxt = np.asarray(nxt)
 
         self.steps += 1
-        for r in live:
+        for r in dec:
             p = r.cursor
             r.cursor += 1
-            if p + 1 < len(r.prompt):
+            if not self.chunked_prefill and p + 1 < len(r.prompt):
                 self._next_token[r.slot] = r.prompt[p + 1]   # teacher forcing
                 continue
             r.generated.append(int(nxt[r.slot]))
+            if r.first_token_step < 0:
+                r.first_token_step = self.steps - 1
             self._next_token[r.slot] = nxt[r.slot]
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
-        return len(live)
+        return n_live
 
     def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, Request]:
         """Drive :meth:`step` until queue and slots drain.
@@ -327,7 +548,7 @@ class ServeEngine:
     # ------------------------------------------------------------- stats --
 
     def stats(self) -> dict:
-        return {
+        out = {
             "steps": self.steps,
             "running": self.num_running,
             "waiting": len(self.waiting),
@@ -336,4 +557,8 @@ class ServeEngine:
             "live_pages": self.allocator.live_pages,
             "cache_bytes": paged_bytes(self.pool),
             "page_size": self.page_size,
+            "chunked_prefill": self.chunked_prefill,
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out

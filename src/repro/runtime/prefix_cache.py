@@ -1,0 +1,243 @@
+"""Radix prefix cache: shared prompt-prefix K/V pages over the paged pool.
+
+A trie over token IDs at **page granularity**: each edge is the tuple of
+``page_size`` token IDs that fills one KV page, and each node owns one
+physical page of the :class:`~repro.runtime.paged_cache.PageAllocator` pool
+holding the **raw** (unshifted) K/V of those positions.  Two prompts that
+share a token prefix share the underlying pages - no recomputation and no
+extra HBM - because with PASA the pseudo-average shift happens *inside* the
+attention kernel at read time: pages store raw K/V, and the chunk-exact
+prefill convention (``core.pasa.blocked_attention(chunk_exact=True)``)
+computes every full interior page's K/V as a function of the token prefix
+alone, independent of the chunk schedule that produced it.  Cache-hit and
+cold prefill are therefore *bit-identical*, not merely close
+(tests/test_prefix_cache.py).
+
+Why only FULL pages are shared: the per-block key shift couples each query
+row to its block's whole column set.  Rows of a *partial* tail page are
+computed with the shift/sbar column set ``col < prompt_len`` - a set that
+depends on the requesting prompt's length, so its contents are NOT a
+function of the token prefix alone and cannot be shared.  The partial last
+page is instead handled copy-on-write style: the new request allocates a
+private page and recomputes the tail rows into it, never mutating a shared
+page (see ``RadixPrefixCache.match``'s ``max_tokens`` cap).
+
+Ownership / refcounting protocol (the engine side is runtime/engine.py):
+
+  * pages enter the cache via :meth:`insert` when a request finishes - the
+    request *donates* its full prompt pages (ownership transfers from the
+    request to the cache; pages the cache already had are NOT adopted and
+    stay with the caller to free);
+  * :meth:`match` walks the trie and bumps a refcount on every matched
+    node; :meth:`release` drops it.  A running request holds references to
+    exactly the cached pages in its page table, so eviction can never free
+    a page some sequence is still reading;
+  * eviction (:meth:`evict`) frees LRU leaf nodes with refcount 0 back to
+    the allocator.  Interior nodes are only evictable once their children
+    are gone (children are longer prefixes reachable only through them), so
+    the trie never dangles.
+
+The allocator sees cached pages as *live*; ``evictable_pages`` is the slack
+admission control may reclaim on demand (engine charges a request only for
+its non-shared pages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.runtime.paged_cache import PageAllocator
+
+
+@dataclasses.dataclass
+class _Node:
+    """One cached page: edge = the page's token tuple, payload = page id."""
+
+    tokens: Tuple[int, ...]
+    page: int
+    parent: Optional["_Node"]
+    children: Dict[Tuple[int, ...], "_Node"] = dataclasses.field(
+        default_factory=dict
+    )
+    refcount: int = 0
+    last_use: int = 0
+
+
+class RadixPrefixCache:
+    """Page-granular radix tree of prompt prefixes over ``allocator``."""
+
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self._root = _Node(tokens=(), page=-1, parent=None)
+        self._clock = 0
+        self._nodes = 0
+        # monotone counters (stats / benchmark reporting)
+        self.hits = 0          # pages served from cache across all matches
+        self.misses = 0        # pages a match could not serve
+        self.evictions = 0
+
+    # ------------------------------------------------------------- sizing --
+
+    @property
+    def cached_pages(self) -> int:
+        return self._nodes
+
+    @property
+    def evictable_pages(self) -> int:
+        """Pages evict() could free right now (refcount-0 SUBTREES: an
+        interior refcount-0 node is reclaimable because its refcount-0
+        descendants are evicted first).  One post-order DFS, O(nodes)."""
+
+        def walk(node: _Node):
+            # (subtree node count, reclaimable nodes in subtree)
+            kids_size = kids_free = 0
+            for c in node.children.values():
+                s, f = walk(c)
+                kids_size += s
+                kids_free += f
+            mine = 1 if node.refcount == 0 and kids_free == kids_size else 0
+            return 1 + kids_size, kids_free + mine
+
+        return sum(walk(c)[1] for c in self._root.children.values())
+
+    # ------------------------------------------------------------ matching --
+
+    def _walk(self, tokens) -> List[_Node]:
+        out = []
+        node = self._root
+        ntok = len(tokens)
+        for start in range(0, ntok - self.page_size + 1, self.page_size):
+            edge = tuple(int(t) for t in tokens[start:start + self.page_size])
+            nxt = node.children.get(edge)
+            if nxt is None:
+                break
+            out.append(nxt)
+            node = nxt
+        return out
+
+    def match(self, tokens, max_tokens: Optional[int] = None) -> List[_Node]:
+        """Longest cached page-prefix of ``tokens``; acquires a reference on
+        every returned node (caller MUST :meth:`release` them later).
+
+        ``max_tokens`` caps the match (engine passes ``len(prompt) - 1`` so
+        at least the last prompt position is always computed - its logits
+        produce the first generated token - and so a fully-cached prompt
+        still leaves the partial/final page private: copy-on-write).
+
+        Does NOT touch the hit/miss counters: a failed admission retries
+        match() every engine step, which would inflate them arbitrarily.
+        The engine calls :meth:`record_match` once per ADMITTED request.
+        """
+        nodes = self._walk(tokens)
+        if max_tokens is not None:
+            nodes = nodes[: max(0, int(max_tokens)) // self.page_size]
+        self._clock += 1
+        for n in nodes:
+            n.refcount += 1
+            n.last_use = self._clock
+        return nodes
+
+    def record_match(self, tokens, nodes: List[_Node],
+                     max_tokens: Optional[int] = None) -> None:
+        """Count one request's served/missed pages (same args as the
+        :meth:`match` call it mirrors)."""
+        self.hits += len(nodes)
+        want = (len(tokens) if max_tokens is None
+                else min(len(tokens), int(max_tokens))) // self.page_size
+        self.misses += max(0, want - len(nodes))
+
+    def release(self, nodes: List[_Node]) -> None:
+        for n in nodes:
+            if n.refcount <= 0:
+                raise ValueError(
+                    f"release of unreferenced cache node (page {n.page})"
+                )
+            n.refcount -= 1
+
+    # ----------------------------------------------------------- insertion --
+
+    def insert(self, tokens, pages: List[int]) -> List[int]:
+        """Donate the pages backing ``tokens`` (full pages only) to the trie.
+
+        ``pages[i]`` must hold the K/V of ``tokens[i*page : (i+1)*page]``
+        under the chunk-exact prefill convention.  Returns the page ids the
+        cache ADOPTED (ownership transferred); pages covering prefixes the
+        cache already held are not adopted - the caller keeps them and
+        should free its duplicates.
+        """
+        n_full = len(tokens) // self.page_size
+        if len(pages) < n_full:
+            raise ValueError(
+                f"{n_full} full pages of tokens but only {len(pages)} pages"
+            )
+        adopted: List[int] = []
+        node = self._root
+        self._clock += 1
+        for i in range(n_full):
+            edge = tuple(
+                int(t) for t in tokens[i * self.page_size:(i + 1) * self.page_size]
+            )
+            nxt = node.children.get(edge)
+            if nxt is None:
+                nxt = _Node(
+                    tokens=edge, page=int(pages[i]), parent=node,
+                    last_use=self._clock,
+                )
+                node.children[edge] = nxt
+                self._nodes += 1
+                adopted.append(int(pages[i]))
+            else:
+                nxt.last_use = self._clock
+            node = nxt
+        return adopted
+
+    # ------------------------------------------------------------ eviction --
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` refcount-0 LRU leaves back to the
+        allocator; returns how many were freed.  Evicting a leaf may expose
+        its parent as the next candidate (deep branches unwind tail-first).
+
+        One trie traversal + a heap, so reclaiming P pages under admission
+        pressure costs O(nodes + P log nodes), not P full rescans.
+        """
+        freed = 0
+        heap = [
+            (node.last_use, id(node), node)
+            for node in _iter_subtree(self._root)
+            if node is not self._root
+            and not node.children and node.refcount == 0
+        ]
+        heapq.heapify(heap)
+        while freed < n_pages and heap:
+            _, _, victim = heapq.heappop(heap)
+            parent = victim.parent
+            del parent.children[victim.tokens]
+            self.allocator.free([victim.page])
+            self._nodes -= 1
+            self.evictions += 1
+            freed += 1
+            if (parent is not self._root and not parent.children
+                    and parent.refcount == 0):
+                heapq.heappush(heap, (parent.last_use, id(parent), parent))
+        return freed
+
+    def stats(self) -> dict:
+        return {
+            "cached_pages": self.cached_pages,
+            "evictable_pages": self.evictable_pages,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+
+def _iter_subtree(node: _Node):
+    yield node
+    for c in list(node.children.values()):
+        yield from _iter_subtree(c)

@@ -345,6 +345,44 @@ def test_engine_page_reuse_is_clean(tiny_bundle):
     assert rb.generated == rf.generated
 
 
+def test_evicted_prefix_pages_are_reused_cleanly(tiny_bundle):
+    """Stale-page immunity through the prefix-cache lifecycle: pages
+    donated to the radix cache, LRU-evicted under admission pressure, and
+    recycled into a NEW request's page table still hold the old request's
+    K/V debris - the valid-column masking must keep it inert, and the
+    evicted branch must be recomputed (bit-identically), not served."""
+    from repro.runtime import chunked_cold_reference
+
+    bundle, params = tiny_bundle
+    rng = np.random.default_rng(9)
+    vocab = bundle.cfg.vocab_size
+    pa = list(rng.integers(0, vocab, 17))
+    pb = list(rng.integers(0, vocab, 17))
+
+    # 3 allocatable pages; each request needs all 3, so every admission
+    # after the first must first evict the previous donation.
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=4, page_size=8,
+        max_seq_len=24, prefix_cache=True,
+    )
+    ra = eng.submit(pa, 3)
+    eng.run_to_completion()                     # donates pa's 2 full pages
+    assert eng.prefix_cache.cached_pages == 2
+    rb = eng.submit(pb, 3)                      # unrelated: evicts both and
+    eng.run_to_completion()                     # recycles the dirty pages
+    assert eng.prefix_cache.stats()["evictions"] == 2
+    assert rb.generated == chunked_cold_reference(
+        bundle, params, pb, 3, page_size=8
+    )
+    # pa again: its branch is gone, so this is a recompute on pages now
+    # dirty with pb's K/V - and it must reproduce the original cold serve.
+    ra2 = eng.submit(pa, 3)
+    eng.run_to_completion()
+    assert ra2.cached_len == 0
+    assert ra2.generated == ra.generated
+    assert eng.prefix_cache.stats()["evictions"] == 4
+
+
 def test_engine_admission_is_conservative(tiny_bundle):
     """A request whose worst case cannot fit the free pool waits; one that
     can never fit the pool at all is rejected at submit."""
