@@ -1,5 +1,13 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Also writes benchmarks/BENCH_numerics.json: the machine-diffable RMSE
+# trajectory (per-pool-dtype paged-decode accuracy vs fp64 exact attention),
+# so accuracy regressions across PRs are a JSON diff, not an eyeballed CSV.
+import json
+import os
 import sys
+
+NUMERICS_JSON = os.path.join(os.path.dirname(__file__), "BENCH_numerics.json")
 
 
 def main() -> None:
@@ -24,6 +32,21 @@ def main() -> None:
         rows += PD.report()
     except Exception as e:  # keep run.py total if the serve workload fails
         print(f"[paged-vs-dense report skipped: {e}]", file=sys.stderr)
+    try:
+        # serialize BEFORE opening: a failure mid-evaluation must not
+        # truncate the previous run's trajectory file
+        from benchmarks import paged_vs_dense as PD
+
+        payload = json.dumps(
+            {"schema": 1, "rows": PD.numerics_rows()}, indent=1,
+            sort_keys=True,
+        )
+        with open(NUMERICS_JSON, "w") as f:
+            f.write(payload)
+        print(f"[numerics trajectory written to {NUMERICS_JSON}]",
+              file=sys.stderr)
+    except Exception as e:
+        print(f"[numerics trajectory skipped: {e}]", file=sys.stderr)
     try:
         from benchmarks import prefill_prefix as PP
 

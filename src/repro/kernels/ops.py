@@ -137,15 +137,37 @@ def pasa_decode(
     )
 
 
+def _check_quant(k_pages, quant):
+    """Validate the all-or-none sidecar bundle; returns the kwargs dict."""
+    names = ("k_scale", "k_shift", "v_scale", "v_shift")
+    given = [q is not None for q in quant]
+    if not any(given):
+        return {}
+    if not all(given):
+        raise ValueError(f"quantized pool needs all of {names}")
+    p, _, kvh, d = k_pages.shape
+    for name, arr, want in zip(
+        names, quant,
+        ((p, kvh), (p, kvh, d), (p, kvh), (p, kvh, d)),
+    ):
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{name} shape {arr.shape} != {want}")
+    return dict(zip(names, quant))
+
+
 def pasa_paged_decode(
     q: jnp.ndarray,          # (B, KVH, G, D) grouped query heads, one token
-    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages
-    v_pages: jnp.ndarray,
+    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages,
+    v_pages: jnp.ndarray,    #   or fp8/int8 codes when sidecars are given
     page_table: jnp.ndarray, # (B, max_pages) int32
     kv_len: jnp.ndarray,     # (B,)
     *,
     beta: float = beta_lib.DEFAULT_BETA,
     policy: PrecisionPolicy = FP16,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KVH) f32
+    k_shift: Optional[jnp.ndarray] = None,   # (P, KVH, D) f32
+    v_scale: Optional[jnp.ndarray] = None,
+    v_shift: Optional[jnp.ndarray] = None,
     interpret: bool = False,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
@@ -156,6 +178,11 @@ def pasa_paged_decode(
     ``jnp.take`` gather fallback.  Both use the masked valid-column shift
     (``shift_mask_valid`` convention), so page granularity == PASA block
     granularity and recycled pages need no scrubbing.
+
+    Passing the four sidecar arrays selects the quantized-pool mode: pages
+    are fp8/int8 shift-centered codes (runtime/paged_cache.py), dequantized
+    in VMEM (kernel) / post-gather (XLA fallback) at
+    ``policy.input_dtype``.
     """
     if q.ndim != 4:
         raise ValueError("q must be (B, KVH, G, D)")
@@ -164,37 +191,46 @@ def pasa_paged_decode(
             f"pages must be (P, page, KVH, D); got {k_pages.shape} / "
             f"{v_pages.shape}"
         )
+    quant = _check_quant(k_pages, (k_scale, k_shift, v_scale, v_shift))
+    if not quant:
+        k_pages = k_pages.astype(policy.input_dtype)
+        v_pages = v_pages.astype(policy.input_dtype)
     if not use_kernel:
         return _paged.paged_decode_xla(
             q.astype(policy.input_dtype),
-            k_pages.astype(policy.input_dtype),
-            v_pages.astype(policy.input_dtype),
+            k_pages, v_pages,
             page_table, kv_len,
             beta=beta, policy=policy, block_kv=k_pages.shape[1],
+            **quant,
         )
     inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
     return _paged.paged_decode_kernel_call(
         q.astype(policy.input_dtype),
-        k_pages.astype(policy.input_dtype),
-        v_pages.astype(policy.input_dtype),
+        k_pages, v_pages,
         page_table, kv_len,
         inva=inva, beta=beta,
         stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
         score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        deq_dtype=policy.input_dtype,
         interpret=interpret,
+        **quant,
     )
 
 
 def pasa_paged_prefill(
     q: jnp.ndarray,          # (B, H, CS, D) chunk queries, full query heads
-    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages
-    v_pages: jnp.ndarray,
+    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages,
+    v_pages: jnp.ndarray,    #   or fp8/int8 codes when sidecars are given
     page_table: jnp.ndarray, # (B, max_pages) int32
     chunk_start: jnp.ndarray,  # (B,) absolute position of the chunk's row 0
     kv_len: jnp.ndarray,     # (B,) valid KV length (chunk end)
     *,
     beta: float = beta_lib.DEFAULT_BETA,
     policy: PrecisionPolicy = FP16,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KVH) f32
+    k_shift: Optional[jnp.ndarray] = None,   # (P, KVH, D) f32
+    v_scale: Optional[jnp.ndarray] = None,
+    v_shift: Optional[jnp.ndarray] = None,
     block_q: int = 128,
     interpret: bool = False,
     use_kernel: bool = True,
@@ -209,6 +245,11 @@ def pasa_paged_prefill(
     chunk-exact shift (page-local valid-column mean, causal mask after
     sbar, per-row dead-page no-ops), so outputs are bit-invariant to the
     chunk schedule - the prefix cache's exactness contract.
+
+    Passing the four sidecar arrays selects the quantized-pool mode (see
+    :func:`pasa_paged_decode`); quantization params are per page, so the
+    dequantized values - and hence the chunk-exact bit-invariance - are
+    preserved at fp8/int8.
     """
     if q.ndim != 4:
         raise ValueError("q must be (B, H, CS, D)")
@@ -217,24 +258,29 @@ def pasa_paged_prefill(
             f"pages must be (P, page, KVH, D); got {k_pages.shape} / "
             f"{v_pages.shape}"
         )
+    quant = _check_quant(k_pages, (k_scale, k_shift, v_scale, v_shift))
+    if not quant:
+        k_pages = k_pages.astype(policy.input_dtype)
+        v_pages = v_pages.astype(policy.input_dtype)
     if not use_kernel:
         return _paged_prefill.paged_prefill_xla(
             q.astype(policy.input_dtype),
-            k_pages.astype(policy.input_dtype),
-            v_pages.astype(policy.input_dtype),
+            k_pages, v_pages,
             page_table, chunk_start, kv_len,
             beta=beta, policy=policy,
+            **quant,
         )
     inva = beta / (1.0 - beta) if beta > 0.0 else 0.0
     return _paged_prefill.paged_prefill_kernel_call(
         q.astype(policy.input_dtype),
-        k_pages.astype(policy.input_dtype),
-        v_pages.astype(policy.input_dtype),
+        k_pages, v_pages,
         page_table, chunk_start, kv_len,
         inva=inva, beta=beta, block_q=block_q,
         stat_dtype=policy.stat_dtype, acc_dtype=policy.acc_dtype,
         score_dtype=policy.score_dtype, out_dtype=policy.out_dtype,
+        deq_dtype=policy.input_dtype,
         interpret=interpret,
+        **quant,
     )
 
 

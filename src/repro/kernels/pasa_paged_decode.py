@@ -20,6 +20,15 @@ Pages fully past ``kv_len`` are skipped via ``pl.when`` (their page-table
 entries point at the null page 0, a valid DMA target); valid pages of a
 sequence always form a prefix of its page table.
 
+Quantized pools (``runtime/paged_cache.py``): when the per-page sidecar
+arrays (scale/shift) are passed, the K/V blocks arrive as fp8/int8 codes
+and are dequantized **in VMEM** (``codes * scale + shift``, one scalar
+scale and one head_dim shift vector per (page, kv-head), fetched through
+the same page-table index maps) right before the shared block update - the
+HBM read is 8-bit, and the shift-centered values never exist at high
+precision outside the kernel.  Pages past ``kv_len`` are skipped before
+their (possibly NaN-poisoned) sidecars are ever used.
+
 Grid: (B, KVH, max_pages) with the page dimension innermost/"arbitrary".
 
 The XLA fallback (:func:`paged_decode_xla`) is a ``jnp.take`` gather of the
@@ -43,13 +52,20 @@ from repro.kernels.pasa_decode import init_decode_scratch, masked_block_update
 _LANES = 128
 
 
+def dequant_block(codes, scale, shift, deq_dtype):
+    """VMEM dequantization: (page, D) codes x scalar scale x (1, D) shift
+    -> (page, D) values at the kernels' input dtype.  Element-wise and
+    deterministic, so the Pallas kernels and the XLA gather fallbacks
+    produce bit-identical dequantized values from the same page bytes."""
+    return (
+        codes.astype(jnp.float32) * scale + shift
+    ).astype(deq_dtype)
+
+
 def _paged_decode_kernel(
     kv_len_ref,            # scalar prefetch: (B,) int32
     pt_ref,                # scalar prefetch: (B, max_pages) int32 page table
-    q_ref, k_ref, v_ref,   # (1,1,G,D), (1,page,1,D), (1,page,1,D)
-    o_ref,                 # (1,1,G,D)
-    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
-    *,
+    *refs,
     inva: float,
     beta: float,
     page_size: int,
@@ -57,7 +73,16 @@ def _paged_decode_kernel(
     stat_dtype,
     acc_dtype,
     score_dtype,
+    quantized: bool,
+    deq_dtype,
 ):
+    if quantized:
+        # (1,1,G,D), (1,page,1,D) codes x2, (1,1) scale x2, (1,1,D) shift x2
+        (q_ref, k_ref, v_ref, ks_ref, kh_ref, vs_ref, vh_ref,
+         o_ref, m_scr, l_scr, f_scr, cnt_scr, acc_scr) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         o_ref, m_scr, l_scr, f_scr, cnt_scr, acc_scr) = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
     kv_len = kv_len_ref[b]
@@ -72,8 +97,13 @@ def _paged_decode_kernel(
         # code the contiguous decode kernel runs, see pasa_decode.py) with
         # the page's global column offset.  Only the ref slicing differs -
         # the pool layout carries the head dim third.
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        if quantized:
+            k = dequant_block(k, ks_ref[0, 0], kh_ref[0], deq_dtype)
+            v = dequant_block(v, vs_ref[0, 0], vh_ref[0], deq_dtype)
         masked_block_update(
-            q_ref[0, 0], k_ref[0, :, 0, :], v_ref[0, :, 0, :],
+            q_ref[0, 0], k, v,
             kv_len, j * page_size, page_size,
             m_scr, l_scr, f_scr, cnt_scr, acc_scr,
             inva=inva, beta=beta, stat_dtype=stat_dtype,
@@ -90,50 +120,67 @@ def _paged_decode_kernel(
     jax.jit,
     static_argnames=(
         "inva", "beta", "stat_dtype", "acc_dtype", "score_dtype",
-        "out_dtype", "interpret",
+        "out_dtype", "deq_dtype", "interpret",
     ),
 )
 def paged_decode_kernel_call(
     q: jnp.ndarray,          # (B, KVH, G, D) - one new token, grouped heads
-    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical page pool (raw keys)
-    v_pages: jnp.ndarray,    # (P, page, KVH, D)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical page pool (raw or
+    v_pages: jnp.ndarray,    # (P, page, KVH, D)   quantized codes)
     page_table: jnp.ndarray, # (B, max_pages) int32 physical page ids
     kv_len: jnp.ndarray,     # (B,) int32 valid lengths
     *,
     inva: float,
     beta: float,
+    k_scale=None,            # (P, KVH) f32     } quantized-pool sidecars;
+    k_shift=None,            # (P, KVH, D) f32  } all four or none
+    v_scale=None,
+    v_shift=None,
     stat_dtype=jnp.float32,
     acc_dtype=jnp.float32,
     score_dtype=jnp.float16,
     out_dtype=jnp.float16,
+    deq_dtype=jnp.float16,
     interpret: bool = False,
 ) -> jnp.ndarray:
     b, kvh, g, d = q.shape
     _, page_size, _, _ = k_pages.shape
     n_pages = page_table.shape[1]
+    quantized = k_scale is not None
 
     kernel = functools.partial(
         _paged_decode_kernel,
         inva=inva, beta=beta, page_size=page_size, n_pages=n_pages,
         stat_dtype=stat_dtype, acc_dtype=acc_dtype, score_dtype=score_dtype,
+        quantized=quantized, deq_dtype=deq_dtype,
     )
+
+    # The page gather: physical page id read from the prefetched table
+    # inside the index map, before the DMA is issued.
+    kv_map = lambda b_, h, j, kvl, pt: (pt[b_, j], 0, h, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, j, kvl, pt: (b_, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+    ]
+    inputs = [q, k_pages, v_pages]
+    if quantized:
+        # Sidecars ride the same page-table gather; one (scalar, vector)
+        # pair per (page, kv-head).
+        sc_map = lambda b_, h, j, kvl, pt: (pt[b_, j], h)
+        sh_map = lambda b_, h, j, kvl, pt: (pt[b_, j], h, 0)
+        in_specs += [
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1, d), sh_map),
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1, d), sh_map),
+        ]
+        inputs += [k_scale, k_shift, v_scale, v_shift]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kvh, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, kvl, pt: (b_, h, 0, 0)),
-            # The page gather: physical page id read from the prefetched
-            # table inside the index map, before the DMA is issued.
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda b_, h, j, kvl, pt: (pt[b_, j], 0, h, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda b_, h, j, kvl, pt: (pt[b_, j], 0, h, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, d), lambda b_, h, j, kvl, pt: (b_, h, 0, 0)
         ),
@@ -156,9 +203,27 @@ def paged_decode_kernel_call(
         interpret=interpret,
     )(
         kv_len.astype(jnp.int32), page_table.astype(jnp.int32),
-        q, k_pages, v_pages,
+        *inputs,
     )
     return out
+
+
+def _gather_dequant(pages, scale, shift, page_table, deq_dtype):
+    """XLA-side page gather + dequantization to (B, S2v, KVH, D).
+
+    Same ``codes * scale + shift`` epilogue as :func:`dequant_block` (and
+    the same fp32 intermediate), so the fallback's dequantized values are
+    bit-identical to the kernel's."""
+    b, mp = page_table.shape
+    _, page, kvh, d = pages.shape
+    flat = page_table.reshape(-1)
+    codes = jnp.take(pages, flat, axis=0).reshape(b, mp, page, kvh, d)
+    if scale is None:
+        return codes.reshape(b, mp * page, kvh, d)
+    sc = jnp.take(scale, flat, axis=0).reshape(b, mp, 1, kvh, 1)
+    sh = jnp.take(shift, flat, axis=0).reshape(b, mp, 1, kvh, d)
+    out = (codes.astype(jnp.float32) * sc + sh).astype(deq_dtype)
+    return out.reshape(b, mp * page, kvh, d)
 
 
 def paged_decode_xla(
@@ -171,19 +236,25 @@ def paged_decode_xla(
     beta: float,
     policy,
     block_kv: int,
+    k_scale=None,
+    k_shift=None,
+    v_scale=None,
+    v_shift=None,
 ) -> jnp.ndarray:
-    """Gather-then-attend fallback: ``jnp.take`` of the pages + the
-    shift_mask_valid blocked attention.  Bit-matches the dense decode path
-    when the page contents agree (tests/test_paged.py) and serves as the
-    validation oracle for the Pallas kernel."""
+    """Gather-then-attend fallback: ``jnp.take`` of the pages (+ sidecar
+    dequantization for quantized pools) + the shift_mask_valid blocked
+    attention.  Bit-matches the dense decode path when the page contents
+    agree (tests/test_paged.py) and serves as the validation oracle for
+    the Pallas kernel."""
     from repro.core.pasa import blocked_attention
 
     b, kvh, g, d = q.shape
-    p_, page, _, _ = k_pages.shape
-    mp = page_table.shape[1]
-    flat = page_table.reshape(-1)
-    ks = jnp.take(k_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
-    vs = jnp.take(v_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    ks = _gather_dequant(
+        k_pages, k_scale, k_shift, page_table, policy.input_dtype
+    )
+    vs = _gather_dequant(
+        v_pages, v_scale, v_shift, page_table, policy.input_dtype
+    )
     ks = jnp.moveaxis(ks, 2, 1)                      # (B, KVH, S2v, D)
     vs = jnp.moveaxis(vs, 2, 1)
     # kv_len rank must equal q's leading rank (B, KVH) for the in-scan mask

@@ -31,6 +31,13 @@ A q tile skips pages wholly past the valid length AND pages wholly in its
 causal future (tile-level ``pl.when``), mirroring the causal block skip of
 the contiguous prefill kernel.
 
+Quantized pools: as in the paged decode kernel, per-page scale/shift
+sidecars ride the same page-table index maps and the fp8/int8 codes are
+dequantized in VMEM immediately before the chunk block update
+(``kernels/pasa_paged_decode.dequant_block``); dead pages are skipped
+before their sidecars are touched, so NaN-poisoned metadata on stale pages
+is as inert as stale page bytes.
+
 The XLA fallback (:func:`paged_prefill_xla`) is the gather +
 ``blocked_attention(chunk_exact=True)`` route - the CPU/GPU path, what the
 serving engine uses off-TPU, and the oracle the kernel is validated
@@ -48,6 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.pasa_paged_decode import _gather_dequant, dequant_block
 
 NEG_BIG = -30000.0
 _LANES = 128
@@ -169,10 +177,7 @@ def _paged_prefill_kernel(
     start_ref,             # scalar prefetch: (B,) int32 chunk start
     kv_len_ref,            # scalar prefetch: (B,) int32 valid KV length
     pt_ref,                # scalar prefetch: (B, max_pages) int32 page table
-    q_ref, k_ref, v_ref,   # (1, bq, D), (1, page, 1, D), (1, page, 1, D)
-    o_ref,                 # (1, bq, D)
-    m_scr, l_scr, f_scr, cnt_scr, acc_scr,
-    *,
+    *refs,
     inva: float,
     beta: float,
     n_heads: int,
@@ -182,7 +187,16 @@ def _paged_prefill_kernel(
     stat_dtype,
     acc_dtype,
     score_dtype,
+    quantized: bool,
+    deq_dtype,
 ):
+    if quantized:
+        # (1,bq,D), (1,page,1,D) codes x2, (1,1) scale x2, (1,1,D) shift x2
+        (q_ref, k_ref, v_ref, ks_ref, kh_ref, vs_ref, vh_ref,
+         o_ref, m_scr, l_scr, f_scr, cnt_scr, acc_scr) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         o_ref, m_scr, l_scr, f_scr, cnt_scr, acc_scr) = refs
     bh = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -205,8 +219,13 @@ def _paged_prefill_kernel(
 
     @pl.when(live)
     def _step():
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        if quantized:
+            k = dequant_block(k, ks_ref[0, 0], kh_ref[0], deq_dtype)
+            v = dequant_block(v, vs_ref[0, 0], vh_ref[0], deq_dtype)
         _chunk_block_update(
-            q_ref[0], k_ref[0, :, 0, :], v_ref[0, :, 0, :],
+            q_ref[0], k, v,
             start + i * block_q, j * page_size, kv_len,
             block_q, page_size,
             m_scr, l_scr, f_scr, cnt_scr, acc_scr,
@@ -227,12 +246,12 @@ def _paged_prefill_kernel(
     jax.jit,
     static_argnames=(
         "inva", "beta", "block_q", "stat_dtype", "acc_dtype", "score_dtype",
-        "out_dtype", "interpret",
+        "out_dtype", "deq_dtype", "interpret",
     ),
 )
 def paged_prefill_kernel_call(
     q: jnp.ndarray,          # (B, H, CS, D) chunk queries, full query heads
-    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical pool (raw K)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D) physical pool (raw or codes)
     v_pages: jnp.ndarray,    # (P, page, KVH, D)
     page_table: jnp.ndarray, # (B, max_pages) int32
     chunk_start: jnp.ndarray,  # (B,) int32 absolute position of q row 0
@@ -240,11 +259,16 @@ def paged_prefill_kernel_call(
     *,
     inva: float,
     beta: float,
+    k_scale=None,            # (P, KVH) f32     } quantized-pool sidecars;
+    k_shift=None,            # (P, KVH, D) f32  } all four or none
+    v_scale=None,
+    v_shift=None,
     block_q: int = 128,
     stat_dtype=jnp.float32,
     acc_dtype=jnp.float32,
     score_dtype=jnp.float16,
     out_dtype=jnp.float16,
+    deq_dtype=jnp.float16,
     interpret: bool = False,
 ) -> jnp.ndarray:
     b, h, cs, d = q.shape
@@ -256,6 +280,7 @@ def paged_prefill_kernel_call(
         raise ValueError(f"chunk {cs} % block_q {block_q} != 0 (pad upstream)")
     n_q = cs // block_q
     n_pages = page_table.shape[1]
+    quantized = k_scale is not None
 
     qr = q.reshape(b * h, cs, d)
 
@@ -264,6 +289,7 @@ def paged_prefill_kernel_call(
         inva=inva, beta=beta, n_heads=h, block_q=block_q,
         page_size=page_size, n_pages=n_pages,
         stat_dtype=stat_dtype, acc_dtype=acc_dtype, score_dtype=score_dtype,
+        quantized=quantized, deq_dtype=deq_dtype,
     )
 
     def q_map(bh, i, j, st, kvl, pt):
@@ -273,14 +299,31 @@ def paged_prefill_kernel_call(
         # page gather: physical id from the prefetched table, before DMA
         return (pt[bh // h, j], 0, (bh % h) // group, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, d), q_map),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+    ]
+    inputs = [qr, k_pages, v_pages]
+    if quantized:
+        def sc_map(bh, i, j, st, kvl, pt):
+            return (pt[bh // h, j], (bh % h) // group)
+
+        def sh_map(bh, i, j, st, kvl, pt):
+            return (pt[bh // h, j], (bh % h) // group, 0)
+
+        in_specs += [
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1, d), sh_map),
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1, d), sh_map),
+        ]
+        inputs += [k_scale, k_shift, v_scale, v_shift]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b * h, n_q, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), q_map),
-            pl.BlockSpec((1, page_size, 1, d), kv_map),
-            pl.BlockSpec((1, page_size, 1, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, d), q_map),
         scratch_shapes=[
             pltpu.VMEM((block_q, _LANES), stat_dtype),   # m
@@ -302,7 +345,7 @@ def paged_prefill_kernel_call(
     )(
         chunk_start.astype(jnp.int32), kv_len.astype(jnp.int32),
         page_table.astype(jnp.int32),
-        qr, k_pages, v_pages,
+        *inputs,
     )
     return out.reshape(b, h, cs, d)
 
@@ -317,22 +360,29 @@ def paged_prefill_xla(
     *,
     beta: float,
     policy,
+    k_scale=None,
+    k_shift=None,
+    v_scale=None,
+    v_shift=None,
 ) -> jnp.ndarray:
     """Gather-then-attend fallback at the chunk-exact convention.
 
-    ``jnp.take`` of the pages + ``blocked_attention(chunk_exact=True)`` with
-    block granularity == page size, so the XLA shift/sbar column sets match
-    the kernel's page-local ones.  The engine's CPU route and the kernel's
-    validation oracle."""
+    ``jnp.take`` of the pages (+ sidecar dequantization for quantized
+    pools) + ``blocked_attention(chunk_exact=True)`` with block granularity
+    == page size, so the XLA shift/sbar column sets match the kernel's
+    page-local ones.  The engine's CPU route and the kernel's validation
+    oracle."""
     from repro.core.pasa import blocked_attention
 
     b, h, cs, d = q.shape
     _, page, kvh, _ = k_pages.shape
     group = h // kvh
-    mp = page_table.shape[1]
-    flat = page_table.reshape(-1)
-    ks = jnp.take(k_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
-    vs = jnp.take(v_pages, flat, axis=0).reshape(b, mp * page, kvh, d)
+    ks = _gather_dequant(
+        k_pages, k_scale, k_shift, page_table, policy.input_dtype
+    )
+    vs = _gather_dequant(
+        v_pages, v_scale, v_shift, page_table, policy.input_dtype
+    )
     ks = jnp.moveaxis(ks, 2, 1)                      # (B, KVH, S2v, D)
     vs = jnp.moveaxis(vs, 2, 1)
     qg = q.reshape(b, kvh, group, cs, d)

@@ -178,6 +178,7 @@ def attention(
 
     new_cache = None
     chunk_block = 0
+    quantized = cache is not None and "k_scale" in cache
     if cache is not None and page_table is not None and prefill_cache:
         # Chunked paged prefill: scatter this chunk's K/V into its pages,
         # then attend causally over the page table - cached prefix pages
@@ -190,7 +191,12 @@ def attention(
             raise ValueError(
                 "paged prefill needs pos (chunk start) and prefill_len"
             )
-        from repro.runtime.paged_cache import NULL_PAGE, gather_pages
+        from repro.runtime.paged_cache import (
+            NULL_PAGE,
+            gather_pages,
+            gather_pages_dequant,
+            quantize_kv_page,
+        )
 
         ck, cv = cache["k"], cache["v"]
         page = ck.shape[1]
@@ -201,20 +207,75 @@ def attention(
         )                                             # (B, S)
         limit = prefill_len.astype(jnp.int32)
         valid = positions < limit[:, None]
-        pidx = jnp.minimum(positions // page, mp - 1)
-        slot = positions % page
-        phys = jnp.take_along_axis(page_table, pidx, axis=1)
-        # pad rows (beyond the real chunk) land in the null write sink
-        phys = jnp.where(valid, phys, NULL_PAGE)
-        ck = ck.at[phys, slot].set(
-            k.reshape(b, s, kvh * hd).astype(ck.dtype)
-        )
-        cv = cv.at[phys, slot].set(
-            v.reshape(b, s, kvh * hd).astype(cv.dtype)
-        )
-        new_cache = {"k": ck, "v": cv}
-        kseq = gather_pages(ck, page_table)           # (B, S2v, kv_dim)
-        vseq = gather_pages(cv, page_table)
+        if quantized:
+            # Quantize-on-write at PAGE granularity: chunk starts are
+            # page-aligned and the chunk length is a page multiple
+            # (enforced by the engine), so every page of the chunk has all
+            # of its valid rows in hand and its scale/shift can be
+            # computed from exactly those rows - making the codes and
+            # sidecar a pure function of the token prefix (the quantized
+            # extension of the chunk-exact bit-invariance contract).
+            if s % page:
+                raise ValueError(
+                    f"quantized pool needs page-multiple chunks "
+                    f"({s} % {page})"
+                )
+            # pos (the chunk start) must ALSO be page-aligned; it is a
+            # traced value so it cannot be checked here.  The engine
+            # guarantees it (prefill_chunk is a page multiple and starts
+            # advance from a page-aligned cached_len); direct callers of
+            # prefill_step_paged with a misaligned start would scatter
+            # whole-page codes into the wrong physical pages.
+            n_cp = s // page
+            validp = valid.reshape(b, n_cp, page)
+            kcodes, ksc, ksh = quantize_kv_page(
+                k.astype(jnp.float32).reshape(b, n_cp, page, kvh, hd),
+                validp, ck.dtype,
+            )
+            vcodes, vsc, vsh = quantize_kv_page(
+                v.astype(jnp.float32).reshape(b, n_cp, page, kvh, hd),
+                validp, cv.dtype,
+            )
+            page_idx = (
+                pos.astype(jnp.int32)[:, None] // page
+                + jnp.arange(n_cp, dtype=jnp.int32)[None, :]
+            )                                         # (B, n_cp)
+            phys_p = jnp.take_along_axis(
+                page_table, jnp.minimum(page_idx, mp - 1), axis=1
+            )
+            # all-pad pages (beyond the real chunk) land in the write sink
+            phys_p = jnp.where(validp.any(-1), phys_p, NULL_PAGE)
+            ck = ck.at[phys_p].set(kcodes.reshape(b, n_cp, page, kvh * hd))
+            cv = cv.at[phys_p].set(vcodes.reshape(b, n_cp, page, kvh * hd))
+            k_scale = cache["k_scale"].at[phys_p].set(ksc)
+            k_shift = cache["k_shift"].at[phys_p].set(
+                ksh.reshape(b, n_cp, kvh * hd)
+            )
+            v_scale = cache["v_scale"].at[phys_p].set(vsc)
+            v_shift = cache["v_shift"].at[phys_p].set(
+                vsh.reshape(b, n_cp, kvh * hd)
+            )
+            new_cache = {
+                "k": ck, "v": cv, "k_scale": k_scale, "k_shift": k_shift,
+                "v_scale": v_scale, "v_shift": v_shift,
+            }
+            kseq = gather_pages_dequant(ck, k_scale, k_shift, page_table)
+            vseq = gather_pages_dequant(cv, v_scale, v_shift, page_table)
+        else:
+            pidx = jnp.minimum(positions // page, mp - 1)
+            slot = positions % page
+            phys = jnp.take_along_axis(page_table, pidx, axis=1)
+            # pad rows (beyond the real chunk) land in the null write sink
+            phys = jnp.where(valid, phys, NULL_PAGE)
+            ck = ck.at[phys, slot].set(
+                k.reshape(b, s, kvh * hd).astype(ck.dtype)
+            )
+            cv = cv.at[phys, slot].set(
+                v.reshape(b, s, kvh * hd).astype(cv.dtype)
+            )
+            new_cache = {"k": ck, "v": cv}
+            kseq = gather_pages(ck, page_table)       # (B, S2v, kv_dim)
+            vseq = gather_pages(cv, page_table)
         s2 = kseq.shape[1]
         k = kseq.reshape(b, s2, kvh, hd).astype(cd)
         v = vseq.reshape(b, s2, kvh, hd).astype(cd)
@@ -230,19 +291,65 @@ def attention(
         # The read is the XLA gather fallback (jnp.take of each sequence's
         # pages); on a TPU runtime the fused kernels/pasa_paged_decode.py
         # path replaces gather+attend with page-table scalar prefetch.
+        from repro.runtime.paged_cache import (
+            dequantize_kv_page,
+            gather_pages,
+            gather_pages_dequant,
+            quantize_kv_page,
+        )
+
         ck, cv = cache["k"], cache["v"]
         page = ck.shape[1]
         idx = jnp.arange(b)
         pidx = (pos // page).astype(jnp.int32)
         slot = (pos % page).astype(jnp.int32)
         phys = page_table[idx, pidx]
-        ck = ck.at[phys, slot].set(k.reshape(b, kvh * hd).astype(ck.dtype))
-        cv = cv.at[phys, slot].set(v.reshape(b, kvh * hd).astype(cv.dtype))
-        new_cache = {"k": ck, "v": cv}
-        from repro.runtime.paged_cache import gather_pages
+        if quantized:
+            # Decode appends one token to the tail page: dequantize that
+            # page's valid rows, splice the new token in, and REQUANTIZE
+            # the page with statistics over rows 0..slot.  Per-page
+            # scale/shift stays exact metadata (no slot-granular state),
+            # at the cost of re-rounding earlier tail-page rows - an
+            # RMSE-bounded, never bit-contract-bearing path: full prompt
+            # pages (the only shareable ones) are written once by prefill
+            # and never pass through here.
+            sl = jnp.arange(page, dtype=jnp.int32)[None, :]   # (1, page)
+            is_new = (sl == slot[:, None])[..., None, None]
+            valid_rows = sl <= slot[:, None]                  # (B, page)
 
-        kseq = gather_pages(ck, page_table)       # (B, S2v, kv_dim)
-        vseq = gather_pages(cv, page_table)
+            def requant(codes, sc, sh, new_vec):
+                old = dequantize_kv_page(
+                    codes[phys].reshape(b, page, kvh, hd),
+                    sc[phys], sh[phys].reshape(b, kvh, hd),
+                )                                             # f32
+                raw = jnp.where(is_new, new_vec[:, None], old)
+                qc, qs, qh = quantize_kv_page(raw, valid_rows, codes.dtype)
+                return (
+                    codes.at[phys].set(qc.reshape(b, page, kvh * hd)),
+                    sc.at[phys].set(qs),
+                    sh.at[phys].set(qh.reshape(b, kvh * hd)),
+                )
+
+            ck, k_scale, k_shift = requant(
+                ck, cache["k_scale"], cache["k_shift"],
+                k.reshape(b, kvh, hd).astype(jnp.float32),
+            )
+            cv, v_scale, v_shift = requant(
+                cv, cache["v_scale"], cache["v_shift"],
+                v.reshape(b, kvh, hd).astype(jnp.float32),
+            )
+            new_cache = {
+                "k": ck, "v": cv, "k_scale": k_scale, "k_shift": k_shift,
+                "v_scale": v_scale, "v_shift": v_shift,
+            }
+            kseq = gather_pages_dequant(ck, k_scale, k_shift, page_table)
+            vseq = gather_pages_dequant(cv, v_scale, v_shift, page_table)
+        else:
+            ck = ck.at[phys, slot].set(k.reshape(b, kvh * hd).astype(ck.dtype))
+            cv = cv.at[phys, slot].set(v.reshape(b, kvh * hd).astype(cv.dtype))
+            new_cache = {"k": ck, "v": cv}
+            kseq = gather_pages(ck, page_table)       # (B, S2v, kv_dim)
+            vseq = gather_pages(cv, page_table)
         s2 = kseq.shape[1]
         k = kseq.reshape(b, s2, kvh, hd).astype(cd)
         v = vseq.reshape(b, s2, kvh, hd).astype(cd)

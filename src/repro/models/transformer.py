@@ -137,11 +137,17 @@ def init_paged_cache(
     across sequences and rationed by the engine's PageAllocator.  Keep
     ``page_size == cfg.attention.block_kv`` so page granularity coincides
     with PASA block granularity (see runtime/paged_cache.py).
+
+    ``dtype`` may be a quantized pool dtype ("fp8_e4m3"/"int8" or the jnp
+    dtypes): the pool then carries per-page, per-kv-head scale/shift
+    sidecar leaves and the attention layer quantizes on write /
+    dequantizes in-kernel on read.
     """
     from repro.runtime.paged_cache import init_paged_pool
 
     return init_paged_pool(
-        cfg.n_layers, num_pages, page_size, cfg.kv_dim, dtype
+        cfg.n_layers, num_pages, page_size, cfg.kv_dim, dtype,
+        n_kv_heads=cfg.n_kv_heads,
     )
 
 
@@ -207,7 +213,9 @@ def prefill_step_paged(
 
     tokens (B, CS) - one prompt chunk, right-padded to the static chunk
     size (pad positions write K/V to the null page);
-    start (B,) - absolute position of the chunk's first token;
+    start (B,) - absolute position of the chunk's first token; with a
+    QUANTIZED pool this must be page-aligned and CS a page multiple
+    (quantize-on-write is page-granular; see models/attention.py);
     kv_len (B,) - valid KV length after this chunk (start + real length);
     last_idx (B,) - row of the chunk whose logits the caller wants (the
     last REAL row; only meaningful on the chunk that completes the prompt).

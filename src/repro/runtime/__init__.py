@@ -11,16 +11,24 @@ from repro.runtime.fault_tolerance import (
 )
 from repro.runtime.paged_cache import (
     NULL_PAGE,
+    POOL_DTYPES,
     PageAllocator,
+    dequantize_kv_page,
     gather_pages,
+    gather_pages_dequant,
     init_paged_pool,
+    is_quantized_dtype,
     paged_bytes,
+    pool_dtype_name,
+    quantize_kv_page,
+    resolve_pool_dtype,
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
 
 __all__ = [
     "FaultTolerantLoop",
     "NULL_PAGE",
+    "POOL_DTYPES",
     "PageAllocator",
     "RadixPrefixCache",
     "Request",
@@ -28,8 +36,14 @@ __all__ = [
     "StragglerMonitor",
     "chunked_cold_reference",
     "dense_greedy_reference",
+    "dequantize_kv_page",
     "elastic_mesh_shape",
     "gather_pages",
+    "gather_pages_dequant",
     "init_paged_pool",
+    "is_quantized_dtype",
     "paged_bytes",
+    "pool_dtype_name",
+    "quantize_kv_page",
+    "resolve_pool_dtype",
 ]

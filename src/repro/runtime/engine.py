@@ -69,7 +69,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.paged_cache import NULL_PAGE, PageAllocator, paged_bytes
+from repro.runtime.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    paged_bytes,
+    pool_dtype_name,
+    resolve_pool_dtype,
+)
 from repro.runtime.prefix_cache import RadixPrefixCache
 
 WAITING = "waiting"
@@ -191,7 +197,14 @@ class ServeEngine:
       prefix_cache: share identical prompt-prefix K/V pages across requests
         via a radix prefix cache (requires ``chunked_prefill`` - the
         cache's contents are defined by the chunk-exact convention).
-      cache_dtype: pool dtype (bf16 default, matching the dense cache).
+      cache_dtype: pool storage dtype - a jnp dtype, or one of the
+        ``runtime.paged_cache.POOL_DTYPES`` names ("bf16", "fp8_e4m3",
+        "int8").  Quantized dtypes store shift-centered 8-bit codes plus
+        per-page scale/shift sidecars; because the sidecars are pool
+        leaves indexed by physical page id, every engine-side page
+        movement (prefix-cache donation, copy-on-write recompute,
+        eviction, free-list recycling) carries the quantization metadata
+        with the page automatically.
     """
 
     def __init__(
@@ -257,8 +270,9 @@ class ServeEngine:
                 "token-by-token decode path does not produce"
             )
 
+        self.cache_dtype = resolve_pool_dtype(cache_dtype)
         self.pool = bundle.init_paged_cache(
-            self.num_pages, self.page_size, dtype=cache_dtype
+            self.num_pages, self.page_size, dtype=self.cache_dtype
         )
         self.allocator = PageAllocator(self.num_pages)
         self.prefix_cache = (
@@ -557,6 +571,7 @@ class ServeEngine:
             "live_pages": self.allocator.live_pages,
             "cache_bytes": paged_bytes(self.pool),
             "page_size": self.page_size,
+            "pool_dtype": pool_dtype_name(self.cache_dtype),
             "chunked_prefill": self.chunked_prefill,
         }
         if self.prefix_cache is not None:

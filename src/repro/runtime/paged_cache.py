@@ -32,6 +32,24 @@ Allocator invariants (enforced, relied on by the engine):
     reason in whole requests;
   * double-free and foreign-page free raise immediately (catching engine
     bookkeeping bugs at the boundary instead of as silent cache corruption).
+
+Quantized pools (``pool_dtype`` in {"fp8_e4m3", "int8"}): pages store
+**shift-centered** quantized K/V codes plus per-page, per-kv-head sidecar
+arrays - ``shift`` (the page's valid-token mean, a head_dim vector) and
+``scale`` (absmax of the centered values / qmax, a scalar).  This is PASA's
+own preprocessing turned into a storage format: the paper's analysis says
+the large sequence-dim bias and Q/K resonance amplitude live in the key
+*mean*, so subtracting the per-page mean before rounding is exactly what
+collapses the dynamic range far enough for 8-bit codes to carry the
+residual.  Dequantization (``codes * scale + shift``) happens *inside* the
+attention kernels in VMEM, fused with the per-page PASA shift - centered
+values never round-trip through HBM at high precision.
+
+Sidecars are ordinary pool leaves indexed by physical page id, so every
+page-lifecycle operation (copy-on-write recompute, donation to the prefix
+cache, LRU eviction, recycling through the free list) carries them
+automatically: scale/shift ARE page metadata, not separate state the engine
+could forget to move.
 """
 
 from __future__ import annotations
@@ -41,6 +59,45 @@ from typing import List, Optional
 import jax.numpy as jnp
 
 NULL_PAGE = 0
+
+# --------------------------------------------------------- pool dtypes --
+
+# CLI/engine-facing names for the pool storage dtype.
+POOL_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "int8": jnp.int8,
+}
+
+# Largest code magnitude per quantized dtype.  int8 uses the symmetric
+# [-127, 127] range (no -128: symmetry keeps the zero-point at exactly 0);
+# fp8_e4m3fn's max finite is 448, and conversions OVERFLOW TO NaN (no Inf
+# in the fn variant), so codes are clipped to the range before the cast.
+QMAX = {jnp.dtype(jnp.int8): 127.0, jnp.dtype(jnp.float8_e4m3fn): 448.0}
+
+
+def resolve_pool_dtype(dtype):
+    """Accept a ``POOL_DTYPES`` name or any jnp dtype; return the dtype."""
+    if isinstance(dtype, str):
+        try:
+            return POOL_DTYPES[dtype]
+        except KeyError as e:
+            raise ValueError(
+                f"unknown pool dtype {dtype!r}; have {sorted(POOL_DTYPES)}"
+            ) from e
+    return dtype
+
+
+def is_quantized_dtype(dtype) -> bool:
+    return jnp.dtype(resolve_pool_dtype(dtype)) in QMAX
+
+
+def pool_dtype_name(dtype) -> str:
+    dt = jnp.dtype(resolve_pool_dtype(dtype))
+    for name, d in POOL_DTYPES.items():
+        if jnp.dtype(d) == dt:
+            return name
+    return dt.name
 
 
 class PageAllocator:
@@ -86,12 +143,104 @@ class PageAllocator:
 
 def init_paged_pool(
     n_layers: int, num_pages: int, page_size: int, kv_dim: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, n_kv_heads: Optional[int] = None,
 ) -> dict:
-    """Zero-initialized paged KV pool, same {"k","v"} pytree shape as the
-    dense cache so ``lax.scan`` over layers treats both uniformly."""
+    """Zero-initialized paged KV pool; every leaf keeps the leading
+    ``n_layers`` dim so ``lax.scan`` over layers treats dense and paged
+    caches uniformly.
+
+    ``dtype`` may be a ``POOL_DTYPES`` name or a jnp dtype.  Quantized
+    dtypes add per-page sidecar leaves (see module doc) and require
+    ``n_kv_heads`` (the scale granularity)."""
+    dtype = resolve_pool_dtype(dtype)
     shape = (n_layers, num_pages, page_size, kv_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if is_quantized_dtype(dtype):
+        if n_kv_heads is None or kv_dim % n_kv_heads:
+            raise ValueError(
+                f"quantized pool needs n_kv_heads dividing kv_dim "
+                f"({n_kv_heads} / {kv_dim})"
+            )
+        sc = (n_layers, num_pages, n_kv_heads)
+        sh = (n_layers, num_pages, kv_dim)
+        for side in ("k", "v"):
+            pool[f"{side}_scale"] = jnp.zeros(sc, jnp.float32)
+            pool[f"{side}_shift"] = jnp.zeros(sh, jnp.float32)
+    return pool
+
+
+def quantize_kv_page(raw: jnp.ndarray, valid: jnp.ndarray, dtype, *,
+                     center: bool = True):
+    """Shift-centered symmetric quantization of KV pages.
+
+    raw: (..., page, KVH, D) float values; valid: (..., page) bool rows
+    (invalid rows are excluded from the statistics and coded as 0).
+
+    Returns (codes (..., page, KVH, D) in ``dtype``,
+             scale (..., KVH) f32, shift (..., KVH, D) f32) with
+    ``dequant = codes * scale + shift`` on the valid rows.
+
+    The statistics use ONLY the valid rows of each page, so a page's codes
+    and sidecar are a pure function of its own (chunk-exact, hence
+    prefix-determined) K/V values - the property that keeps prefix-cache
+    hits and chunk schedules bit-identical at quantized dtypes.
+
+    ``center=False`` forces the shift to 0 (raw absmax scaling) - the
+    unshifted baseline the adversarial numerics suite measures PASA's
+    centering against; never used by the serving stack.
+    """
+    dtype = resolve_pool_dtype(dtype)
+    qmax = QMAX[jnp.dtype(dtype)]
+    raw = raw.astype(jnp.float32)
+    vm = valid[..., None, None]                       # (..., page, 1, 1)
+    if center:
+        cnt = jnp.maximum(
+            jnp.sum(vm.astype(jnp.float32), axis=-3, keepdims=True), 1.0
+        )
+        shift = jnp.sum(jnp.where(vm, raw, 0.0), axis=-3, keepdims=True) / cnt
+    else:
+        shift = jnp.zeros_like(raw[..., :1, :, :])
+    centered = jnp.where(vm, raw - shift, 0.0)        # (..., page, KVH, D)
+    amax = jnp.max(jnp.abs(centered), axis=(-3, -1))  # (..., KVH)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    codes = centered / scale[..., None, :, None]
+    codes = jnp.clip(codes, -qmax, qmax)              # fp8 overflow -> NaN
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        codes = jnp.round(codes)
+    return codes.astype(dtype), scale, shift[..., 0, :, :]
+
+
+def dequantize_kv_page(codes: jnp.ndarray, scale: jnp.ndarray,
+                       shift: jnp.ndarray) -> jnp.ndarray:
+    """codes (..., page, KVH, D) x scale (..., KVH) x shift (..., KVH, D)
+    -> f32 values.  The same formula the kernels fuse in VMEM."""
+    return (
+        codes.astype(jnp.float32) * scale[..., None, :, None]
+        + shift[..., None, :, :]
+    )
+
+
+def gather_pages_dequant(
+    pool_layer: jnp.ndarray,    # (num_pages, page, kv_dim) codes
+    scale: jnp.ndarray,         # (num_pages, KVH)
+    shift: jnp.ndarray,         # (num_pages, kv_dim)
+    page_table: jnp.ndarray,    # (B, max_pages)
+) -> jnp.ndarray:
+    """Quantized counterpart of :func:`gather_pages`: one gather of codes +
+    sidecars, dequantized to (B, max_pages*page, kv_dim) f32.  The XLA
+    (non-Pallas) read path; positions past ``kv_len`` dequantize stale
+    garbage and are masked downstream exactly like the raw-pool path."""
+    b, mp = page_table.shape
+    _, page, kv_dim = pool_layer.shape
+    kvh = scale.shape[-1]
+    flat = page_table.reshape(-1)
+    codes = jnp.take(pool_layer, flat, axis=0).reshape(
+        b, mp, page, kvh, kv_dim // kvh
+    )
+    sc = jnp.take(scale, flat, axis=0).reshape(b, mp, kvh)
+    sh = jnp.take(shift, flat, axis=0).reshape(b, mp, kvh, kv_dim // kvh)
+    out = dequantize_kv_page(codes, sc, sh)
+    return out.reshape(b, mp * page, kv_dim)
 
 
 def gather_pages(pool_layer: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:

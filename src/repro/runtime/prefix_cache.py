@@ -63,6 +63,10 @@ class _Node:
     )
     refcount: int = 0
     last_use: int = 0
+    # Sum of refcounts over this node's whole subtree (self included).
+    # A node is reclaimable-by-evict() exactly when this is 0, which is
+    # what the cached evictable-page counter counts (see evictable_pages).
+    subtree_refs: int = 0
 
 
 class RadixPrefixCache:
@@ -76,6 +80,8 @@ class RadixPrefixCache:
         self._root = _Node(tokens=(), page=-1, parent=None)
         self._clock = 0
         self._nodes = 0
+        self._evictable = 0    # cached count, kept exact incrementally
+        self.traversals = 0    # full-trie walks (perf regression guard)
         # monotone counters (stats / benchmark reporting)
         self.hits = 0          # pages served from cache across all matches
         self.misses = 0        # pages a match could not serve
@@ -91,7 +97,20 @@ class RadixPrefixCache:
     def evictable_pages(self) -> int:
         """Pages evict() could free right now (refcount-0 SUBTREES: an
         interior refcount-0 node is reclaimable because its refcount-0
-        descendants are evicted first).  One post-order DFS, O(nodes)."""
+        descendants are evicted first).
+
+        O(1): admission control probes this on EVERY page-short attempt,
+        so it reads a counter maintained incrementally on the four
+        mutation points (ref/deref in match/release, insert, evict) -
+        each a ``subtree_refs`` walk of one root path, not a trie DFS
+        (the ROADMAP-flagged hot path).  ``_evictable_pages_dfs`` is the
+        O(nodes) reference implementation the tests check it against.
+        """
+        return self._evictable
+
+    def _evictable_pages_dfs(self) -> int:
+        """Slow reference for :attr:`evictable_pages` (tests only)."""
+        self.traversals += 1
 
         def walk(node: _Node):
             # (subtree node count, reclaimable nodes in subtree)
@@ -104,6 +123,56 @@ class RadixPrefixCache:
             return 1 + kids_size, kids_free + mine
 
         return sum(walk(c)[1] for c in self._root.children.values())
+
+    def _bump_subtree(self, n: _Node, delta: int) -> None:
+        """subtree_refs += delta on one node, tracking 0 <-> nonzero
+        transitions in the cached evictable counter."""
+        if delta == 0:
+            return
+        old = n.subtree_refs
+        n.subtree_refs = old + delta
+        if old == 0:
+            self._evictable -= 1
+        elif n.subtree_refs == 0:
+            self._evictable += 1
+
+    def _ref(self, node: _Node) -> None:
+        """refcount +1 on ``node``; maintain subtree sums + the counter."""
+        node.refcount += 1
+        n = node
+        while n is not None and n is not self._root:
+            self._bump_subtree(n, 1)
+            n = n.parent
+
+    def _deref(self, node: _Node) -> None:
+        node.refcount -= 1
+        n = node
+        while n is not None and n is not self._root:
+            self._bump_subtree(n, -1)
+            n = n.parent
+
+    def _bump_chain(self, nodes: List[_Node], sign: int) -> None:
+        """refcount +-1 on every node of a parent->child CHAIN in ONE
+        root-path walk (O(path), not O(path^2) of per-node _ref): the
+        node at chain index i gains ``sign * (len - i)`` subtree
+        references, and every strict ancestor of the chain head gains
+        ``sign * len``.  match()/release() run on every page-short
+        admission retry, so this is as hot as the evictable_pages probe
+        the cached counter exists for."""
+        length = len(nodes)
+        for i, n in enumerate(nodes):
+            n.refcount += sign
+            self._bump_subtree(n, sign * (length - i))
+        a = nodes[0].parent
+        while a is not None and a is not self._root:
+            self._bump_subtree(a, sign * length)
+            a = a.parent
+
+    @staticmethod
+    def _is_chain(nodes: List[_Node]) -> bool:
+        return all(
+            nodes[i + 1].parent is nodes[i] for i in range(len(nodes) - 1)
+        )
 
     # ------------------------------------------------------------ matching --
 
@@ -137,9 +206,10 @@ class RadixPrefixCache:
         if max_tokens is not None:
             nodes = nodes[: max(0, int(max_tokens)) // self.page_size]
         self._clock += 1
-        for n in nodes:
-            n.refcount += 1
-            n.last_use = self._clock
+        if nodes:
+            self._bump_chain(nodes, 1)   # _walk returns a root-path chain
+            for n in nodes:
+                n.last_use = self._clock
         return nodes
 
     def record_match(self, tokens, nodes: List[_Node],
@@ -157,7 +227,12 @@ class RadixPrefixCache:
                 raise ValueError(
                     f"release of unreferenced cache node (page {n.page})"
                 )
-            n.refcount -= 1
+        if nodes and self._is_chain(nodes):
+            # the common case: releasing exactly what match() returned
+            self._bump_chain(nodes, -1)
+        else:
+            for n in nodes:
+                self._deref(n)
 
     # ----------------------------------------------------------- insertion --
 
@@ -190,6 +265,7 @@ class RadixPrefixCache:
                 )
                 node.children[edge] = nxt
                 self._nodes += 1
+                self._evictable += 1   # fresh node: subtree_refs == 0
                 adopted.append(int(pages[i]))
             else:
                 nxt.last_use = self._clock
@@ -204,9 +280,12 @@ class RadixPrefixCache:
         its parent as the next candidate (deep branches unwind tail-first).
 
         One trie traversal + a heap, so reclaiming P pages under admission
-        pressure costs O(nodes + P log nodes), not P full rescans.
+        pressure costs O(nodes + P log nodes), not P full rescans - and
+        page-short admission PROBES (`evictable_pages`) cost no traversal
+        at all (cached counter; `traversals` counts the walks).
         """
         freed = 0
+        self.traversals += 1
         heap = [
             (node.last_use, id(node), node)
             for node in _iter_subtree(self._root)
@@ -220,6 +299,7 @@ class RadixPrefixCache:
             del parent.children[victim.tokens]
             self.allocator.free([victim.page])
             self._nodes -= 1
+            self._evictable -= 1   # a leaf in the heap has subtree_refs == 0
             self.evictions += 1
             freed += 1
             if (parent is not self._root and not parent.children

@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import adversarial_inputs as adv
 import repro.kernels as K
+from adversarial_inputs import adversarial_case  # noqa: F401
 from repro.core import F64, FP16, FP16_FP32, FP32, naive_attention, shifting
 from repro.core.numerics import rmse
 from repro.kernels import ref
@@ -147,3 +149,23 @@ def test_kernel_shape_guards():
         K.pasa_attention(q, k, k, **I)
     with pytest.raises(ValueError):
         K.pasa_attention(jnp.zeros((1, 3, 128, 64), jnp.float16), k, k, **I)
+
+
+def test_pasa_kernel_on_adversarial_inputs(adversarial_case, rng):
+    """The paper's failure generators against the fused prefill kernel:
+    the kernel must agree with the pure-jnp oracle at fp32 statistics (the
+    'Is Flash Attention Stable?' concern - implementation divergence shows
+    up ONLY under stress inputs) and stay finite at the all-fp16 policy
+    the paper serves with."""
+    b, h, kvh, s, d = 1, 4, 2, 256, 64
+    q, k, v = adv.make_adversarial(
+        adversarial_case, rng, q_shape=(b, h, s, d), kv_shape=(b, kvh, s, d),
+    )
+    got = K.pasa_attention(q, k, v, beta=0.984497, policy=FP32, **I)
+    want = ref.attention_ref(q, k, v, beta=0.984497, policy=FP32, block_kv=128)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=8e-3, rtol=2e-2,
+    )
+    got16 = K.pasa_attention(q, k, v, beta=0.984497, policy=FP16, **I)
+    assert bool(jnp.isfinite(got16.astype(jnp.float32)).all())

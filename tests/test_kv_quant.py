@@ -1,0 +1,531 @@
+"""Quantized KV page pool: shift-centered fp8/int8 codes + per-page sidecars.
+
+Four contract families, each driven by the paper's own failure generators
+(tests/adversarial_inputs.py):
+
+  * RMSE vs fp64 exact attention within per-dtype bounds, for the paged
+    decode AND paged prefill read paths, Pallas kernel AND XLA fallback;
+  * the acceptance demonstration: on sequence-biased / resonant inputs the
+    shift-centered pool beats an UNSHIFTED int8/fp8 baseline by >= 10x
+    RMSE (PASA's centering is exactly the preprocessing 8-bit KV needs);
+  * stale-page immunity: extreme/NaN code debris past kv_len and
+    NaN-poisoned sidecars on dead pages are bit-exact no-ops;
+  * bit-contracts at quantized dtypes: chunk-schedule invariance,
+    cache-hit == cold prefill, recycled == fresh pages (engine level).
+
+The wider adversarial sweep is marked ``numerics`` (tier-2:
+``pytest -m "slow or numerics"``); one representative of each contract
+stays in tier-1.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import adversarial_inputs as adv
+import repro.kernels as K
+from adversarial_inputs import adversarial_case  # noqa: F401
+from repro.core import FP16, FP32, naive_attention
+from repro.core.numerics import rmse, score_overflow_probe
+from repro.runtime import (
+    NULL_PAGE,
+    ServeEngine,
+    chunked_cold_reference,
+    dequantize_kv_page,
+    init_paged_pool,
+    paged_bytes,
+    quantize_kv_page,
+)
+
+I = dict(interpret=True)
+BETA = 0.9375
+QDTYPES = ("fp8_e4m3", "int8")
+
+# Relative-RMSE-vs-fp64 acceptance bounds per pool dtype at the FP32
+# precision policy (fp16 inputs, fp32 score/statistics).  fp32 stats
+# isolate what THIS subsystem adds - the 8-bit storage rounding - from the
+# fp16-statistics accuracy floor the paper's own overflow replay reports
+# (~3e-1 on resonant inputs; benchmarks/paper_tables.real_model_overflow).
+# bf16 is the raw (unquantized) pool reference; int8 carries ~7 effective
+# bits of the centered range, fp8_e4m3 ~3 mantissa bits (coarser than int8
+# but range-robust).
+RMSE_BOUND = {"bf16": 0.02, "int8": 0.03, "fp8_e4m3": 0.09}
+
+# Per-generator multiplier for the tier-2 sweep.  resonance_180 drives all
+# scores hugely negative -> near-uniform softmax -> the output is a mean
+# of ~100 v rows with a small norm, inflating RELATIVE rmse for every
+# dtype (bf16 included) - an instrument artifact, not a quantization one.
+CASE_MULT = {
+    "seq_bias": 1.0, "resonance_0": 1.0, "resonance_180": 8.0,
+    "heavy_tail": 1.0,
+}
+
+
+# -------------------------------------------------------------- helpers --
+
+def _pool_from_contiguous(kc, vc, kv_lens, page, dtype, *, center=True,
+                          extra_pages=2, shuffle_seed=0):
+    """Pack a contiguous (B, KVH, S2, D) cache into a SHUFFLED page pool
+    (page 0 reserved), quantizing per page when ``dtype`` is quantized.
+    Returns (k_pages, v_pages, table, quant_kwargs, valid)."""
+    from repro.runtime import is_quantized_dtype
+
+    b, kvh, s2, d = kc.shape
+    mp = s2 // page
+    n_pages = 1 + b * mp + extra_pages
+    rng = np.random.default_rng(shuffle_seed)
+    ids = rng.permutation(np.arange(1, n_pages))
+    table = np.full((b, mp), NULL_PAGE, np.int32)
+    kp = np.zeros((n_pages, page, kvh, d), np.float32)
+    vp = np.zeros((n_pages, page, kvh, d), np.float32)
+    valid = np.zeros((n_pages, page), bool)
+    kcn = np.moveaxis(np.asarray(kc, np.float32), 2, 1)
+    vcn = np.moveaxis(np.asarray(vc, np.float32), 2, 1)
+    nxt = 0
+    for bi in range(b):
+        for j in range(math.ceil(kv_lens[bi] / page)):
+            pid = int(ids[nxt]); nxt += 1
+            table[bi, j] = pid
+            kp[pid] = kcn[bi, j * page:(j + 1) * page]
+            vp[pid] = vcn[bi, j * page:(j + 1) * page]
+            valid[pid] = (j * page + np.arange(page)) < kv_lens[bi]
+    if not is_quantized_dtype(dtype):
+        return (jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table), {},
+                jnp.asarray(valid))
+    kq, ksc, ksh = quantize_kv_page(
+        jnp.asarray(kp), jnp.asarray(valid), dtype, center=center
+    )
+    vq, vsc, vsh = quantize_kv_page(
+        jnp.asarray(vp), jnp.asarray(valid), dtype, center=center
+    )
+    quant = dict(k_scale=ksc, k_shift=ksh, v_scale=vsc, v_shift=vsh)
+    return kq, vq, jnp.asarray(table), quant, jnp.asarray(valid)
+
+
+def _decode_case(key, case, kv_lens, *, b=2, kvh=2, g=4, d=64, page=16):
+    mp = max(math.ceil(length / page) for length in kv_lens) + 1
+    s2 = mp * page
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    q, kc, vc = adv.make_adversarial(
+        case, key, q_shape=(b, kvh, g, d), kv_shape=(b, kvh, s2, d),
+    )
+    mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
+    kc = jnp.where(mask, kc, 0.0)
+    vc = jnp.where(mask, vc, 0.0)
+    return q, kc, vc, kv_len
+
+
+def _gold_decode(q, kc, vc, kv_len):
+    outs = []
+    for bi in range(q.shape[0]):
+        L = int(kv_len[bi])
+        outs.append(naive_attention(
+            q[bi:bi + 1].astype(jnp.float64),
+            kc[bi:bi + 1, :, :L].astype(jnp.float64),
+            vc[bi:bi + 1, :, :L].astype(jnp.float64),
+            dtype=jnp.float64,
+        ))
+    return outs
+
+
+# ------------------------------------------------------------ quantizer --
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_quantize_roundtrip_and_masking(dtype, rng):
+    """Dequantized valid rows approximate the raw values; the shift IS the
+    valid-row mean; invalid rows never perturb codes or sidecar."""
+    raw = jax.random.normal(rng, (3, 16, 2, 32)) * 2.0 + 7.0
+    valid = jnp.asarray(np.arange(16) < 11)[None, :].repeat(3, 0)
+    codes, scale, shift = quantize_kv_page(raw, valid, dtype)
+    back = dequantize_kv_page(codes, scale, shift)
+    vm = np.asarray(valid)[..., None, None]
+    centered_amax = float(jnp.max(jnp.abs(
+        jnp.where(vm, raw - shift[:, None], 0.0)
+    )))
+    err = float(jnp.max(jnp.abs(jnp.where(vm, back - raw, 0.0))))
+    # half-LSB for int8 (1/254 of the centered range); fp8_e4m3's largest
+    # ULP is 32-at-448, i.e. 1/28 of the range near the top
+    assert err <= centered_amax * (1 / 20 if dtype == "fp8_e4m3" else 1 / 250)
+    want_mean = np.asarray(raw)[:, :11].mean(axis=1)
+    np.testing.assert_allclose(np.asarray(shift), want_mean, rtol=1e-5)
+    # poisoning the invalid rows changes nothing (stats are masked)
+    raw2 = jnp.where(vm, raw, jnp.nan)
+    codes2, scale2, shift2 = quantize_kv_page(raw2, valid, dtype)
+    np.testing.assert_array_equal(
+        np.asarray(codes)[:, :11], np.asarray(codes2)[:, :11]
+    )
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(scale2))
+    np.testing.assert_array_equal(np.asarray(shift), np.asarray(shift2))
+    # fp8 overflow-to-NaN guard: codes are always finite
+    assert bool(jnp.isfinite(codes2.astype(jnp.float32)).all())
+
+
+def test_pool_dtype_plumbing():
+    """Sidecar shapes, byte accounting, and the guard rails."""
+    pool = init_paged_pool(2, 5, 4, 8, "int8", n_kv_heads=2)
+    assert pool["k"].dtype == jnp.int8
+    assert pool["k_scale"].shape == (2, 5, 2)
+    assert pool["k_shift"].shape == (2, 5, 8)
+    # bytes include the sidecars (honest HBM accounting)
+    base = 2 * 2 * 5 * 4 * 8 * 1
+    side = 2 * 2 * (5 * 2 + 5 * 8) * 4
+    assert paged_bytes(pool) == base + side
+    bf = init_paged_pool(2, 5, 4, 8, "bf16")
+    assert set(bf) == {"k", "v"} and bf["k"].dtype == jnp.bfloat16
+    with pytest.raises(ValueError):
+        init_paged_pool(2, 5, 4, 8, "int8")          # missing n_kv_heads
+    with pytest.raises(ValueError):
+        init_paged_pool(2, 5, 4, 8, "float7")        # unknown name
+
+
+# -------------------------------------------- read paths: RMSE vs fp64 --
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_paged_decode_quant_vs_gold_and_kernel_vs_xla(dtype, rng):
+    """Decode over a quantized pool: XLA fallback ~ Pallas kernel, both
+    within the per-dtype RMSE bound of exact fp64 attention - on the
+    paper's sequence-bias driver, where quantization is hardest."""
+    kv_lens = [100, 37]
+    q, kc, vc, kv_len = _decode_case(rng, "seq_bias", kv_lens)
+    kq, vq, table, quant, _ = _pool_from_contiguous(
+        kc, vc, kv_lens, 16, dtype
+    )
+    xla = K.pasa_paged_decode(
+        q, kq, vq, table, kv_len, beta=BETA, policy=FP32,
+        use_kernel=False, **quant,
+    )
+    kern = K.pasa_paged_decode(
+        q, kq, vq, table, kv_len, beta=BETA, policy=FP32, **I, **quant,
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern, np.float32), np.asarray(xla, np.float32),
+        atol=3e-3, rtol=3e-2,
+    )
+    for bi, gold in enumerate(_gold_decode(q, kc, vc, kv_len)):
+        assert rmse(xla[bi:bi + 1], gold) < RMSE_BOUND[dtype]
+        assert rmse(kern[bi:bi + 1], gold) < RMSE_BOUND[dtype]
+    # the serving policy (fp16 statistics) must at least stay finite and
+    # pay only a small multiple of the raw bf16 pool's fp16-floor RMSE
+    kb, vb, tb, qb, _ = _pool_from_contiguous(kc, vc, kv_lens, 16, "bf16")
+    raw16 = K.pasa_paged_decode(
+        q, kb, vb, tb, kv_len, beta=BETA, policy=FP16, use_kernel=False,
+    )
+    q16 = K.pasa_paged_decode(
+        q, kq, vq, table, kv_len, beta=BETA, policy=FP16,
+        use_kernel=False, **quant,
+    )
+    assert bool(jnp.isfinite(q16.astype(jnp.float32)).all())
+    for bi, gold in enumerate(_gold_decode(q, kc, vc, kv_len)):
+        # 2x: storage rounding and the fp16-statistics floor are two
+        # roughly-independent error sources of comparable size here
+        assert rmse(q16[bi:bi + 1], gold) <= max(
+            2.0 * rmse(raw16[bi:bi + 1], gold), RMSE_BOUND[dtype]
+        )
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_paged_prefill_quant_vs_gold_and_kernel_vs_xla(dtype, rng):
+    """Chunked prefill over a quantized pool: kernel ~ XLA ~ fp64 gold."""
+    b, h, kvh, cs, d, page = 1, 4, 2, 48, 32, 16
+    key = jax.random.fold_in(rng, 11)
+    q, kc, vc = adv.make_adversarial(
+        "seq_bias", key, q_shape=(b, h, cs, d), kv_shape=(b, kvh, cs, d),
+    )
+    kq, vq, table, quant, _ = _pool_from_contiguous(
+        kc, vc, [cs], page, dtype
+    )
+    start = jnp.zeros((b,), jnp.int32)
+    kv_len = jnp.full((b,), cs, jnp.int32)
+    xla = K.pasa_paged_prefill(
+        q, kq, vq, table, start, kv_len, beta=BETA, policy=FP32,
+        use_kernel=False, **quant,
+    )
+    kern = K.pasa_paged_prefill(
+        q, kq, vq, table, start, kv_len, beta=BETA, policy=FP32,
+        block_q=16, **I, **quant,
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern, np.float32), np.asarray(xla, np.float32),
+        atol=5e-3, rtol=3e-2,
+    )
+    g = h // kvh
+    gold = naive_attention(
+        q.reshape(b, kvh, g, cs, d).astype(jnp.float64),
+        kc[:, :, None].astype(jnp.float64),
+        vc[:, :, None].astype(jnp.float64),
+        causal=True, dtype=jnp.float64,
+    ).reshape(b, h, cs, d)
+    assert rmse(xla, gold) < RMSE_BOUND[dtype]
+    assert rmse(kern, gold) < RMSE_BOUND[dtype]
+
+
+# ------------------------------- acceptance: shift-centered vs unshifted --
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+@pytest.mark.parametrize("case", ["seq_bias", "resonance_0"])
+def test_shift_centered_beats_unshifted_10x(case, dtype, rng):
+    """THE acceptance criterion: on the paper's biased/resonant inputs the
+    shift-centered pool stays within its RMSE bound while the unshifted
+    baseline (same quantizer, center forced to 0 - the mean/waveform eats
+    the whole code range and the unit-variance signal drowns) is >= 10x
+    worse or non-finite.  (resonance_180 is exercised in the tier-2 sweep:
+    its all-negative scores give near-uniform attention, which is
+    insensitive to ANY key noise - no quantizer can look bad there.)"""
+    kv_lens = [96]
+    q, kc, vc, kv_len = _decode_case(rng, case, kv_lens, b=1)
+    kq, vq, table, quant, _ = _pool_from_contiguous(
+        kc, vc, kv_lens, 16, dtype
+    )
+    uq_k, uq_v, _, unquant, _ = _pool_from_contiguous(
+        kc, vc, kv_lens, 16, dtype, center=False
+    )
+    gold = _gold_decode(q, kc, vc, kv_len)[0]
+    shifted = K.pasa_paged_decode(
+        q, kq, vq, table, kv_len, beta=BETA, policy=FP32,
+        use_kernel=False, **quant,
+    )
+    unshifted = K.pasa_paged_decode(
+        q, uq_k, uq_v, table, kv_len, beta=BETA, policy=FP32,
+        use_kernel=False, **unquant,
+    )
+    r_shift = rmse(shifted, gold)
+    assert r_shift < RMSE_BOUND[dtype], (case, dtype, r_shift)
+    if bool(jnp.isfinite(unshifted.astype(jnp.float32)).all()):
+        r_plain = rmse(unshifted, gold)
+        assert r_plain >= 10 * r_shift, (case, dtype, r_plain, r_shift)
+
+
+def test_resonant_inputs_are_genuinely_adversarial(rng):
+    """The resonance generator reproduces the paper's overflow mechanism:
+    the RAW fp16 score GEMM would overflow (this is what makes the 10x
+    demonstration above meaningful rather than synthetic)."""
+    q, kc, _, _ = _decode_case(rng, "resonance_0", [96], b=1)
+    probe = score_overflow_probe(q[:, :, 0], kc)
+    assert probe["would_overflow_fp16"], probe
+
+
+# ----------------------------------------------------- stale-page debris --
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_stale_quant_pages_and_sidecars_cannot_leak(dtype, rng):
+    """Recycled quantized pages carry code debris AND sidecar debris.
+    Poison every position past kv_len with extreme/NaN codes, and the
+    scale/shift of every fully-dead page with NaN: outputs must be
+    BIT-identical, in the XLA fallback and the Pallas kernel."""
+    kv_lens = [40]   # partial tail page: 40 = 2.5 pages of 16
+    q, kc, vc, kv_len = _decode_case(rng, "seq_bias", kv_lens, b=1)
+    kq, vq, table, quant, valid = _pool_from_contiguous(
+        kc, vc, kv_lens, 16, dtype, extra_pages=3
+    )
+    poison_code = (
+        jnp.nan if dtype == "fp8_e4m3" else jnp.asarray(127, jnp.int8)
+    )
+    stale = ~valid[..., None, None]                  # rows past kv_len
+    kq2 = jnp.where(stale, poison_code, kq).astype(kq.dtype)
+    vq2 = jnp.where(stale, poison_code, vq).astype(vq.dtype)
+    # NaN sidecars on pages with NO valid rows (incl. never-referenced and
+    # null pages); pages with any valid row keep their real sidecar - it
+    # is live metadata for the valid rows.
+    dead_page = ~np.asarray(valid).any(axis=1)
+    q2 = {}
+    for name, arr in quant.items():
+        bad = jnp.full_like(arr[0], jnp.nan)
+        q2[name] = jnp.where(
+            jnp.asarray(dead_page).reshape((-1,) + (1,) * (arr.ndim - 1)),
+            bad, arr,
+        )
+    for kw in (dict(use_kernel=False), I):
+        clean = K.pasa_paged_decode(
+            q, kq, vq, table, kv_len, beta=BETA, policy=FP16, **kw, **quant,
+        )
+        dirty = K.pasa_paged_decode(
+            q, kq2, vq2, table, kv_len, beta=BETA, policy=FP16, **kw, **q2,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(clean), np.asarray(dirty), err_msg=str(kw)
+        )
+        assert bool(jnp.isfinite(clean.astype(jnp.float32)).all())
+
+
+# -------------------------------------------------- requantization drift --
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_decode_requantization_drift_bounded(dtype, rng):
+    """Decode appends requantize the tail page each step (double-rounding
+    earlier rows).  Simulate the exact write path for a full page: the
+    accumulated drift must stay within a small multiple of the one-shot
+    quantization error - not grow with the page length."""
+    page, kvh, d = 16, 2, 32
+    raw = np.asarray(jax.random.normal(rng, (page, kvh, d))) * 1.5 + 4.0
+    raw_j = jnp.asarray(raw)
+    sl = jnp.arange(page)
+    codes = jnp.zeros((page, kvh, d),
+                      dtype=jnp.int8 if dtype == "int8" else jnp.float8_e4m3fn)
+    scale = jnp.zeros((kvh,)); shift = jnp.zeros((kvh, d))
+    for t in range(page):       # the models/attention.py decode write path
+        old = dequantize_kv_page(codes, scale, shift)
+        cur = jnp.where((sl == t)[:, None, None], raw_j, old)
+        codes, scale, shift = quantize_kv_page(cur, sl <= t, dtype)
+    inc = dequantize_kv_page(codes, scale, shift)
+    one_codes, one_scale, one_shift = quantize_kv_page(
+        raw_j, jnp.ones((page,), bool), dtype
+    )
+    one = dequantize_kv_page(one_codes, one_scale, one_shift)
+    err_inc = float(jnp.max(jnp.abs(inc - raw_j)))
+    err_one = float(jnp.max(jnp.abs(one - raw_j)))
+    # each re-round adds at most half an LSB; the observed worst element
+    # random-walks to a few LSBs over the 15 rewrites of a 16-row page -
+    # bounded by page/2 one-shot errors, NOT proportional to total steps
+    assert err_inc <= (page / 2) * err_one + 1e-6, (err_inc, err_one)
+
+
+# ----------------------------------------------------- engine contracts --
+
+@pytest.fixture(scope="module")
+def tiny_bundle():
+    from repro.configs import get_config
+    from repro.models.model_zoo import build
+
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_cache_hit_and_chunk_schedule_bit_identical_quant(tiny_bundle, dtype):
+    """Engine-level bit-contracts at quantized pool dtypes: a prefix-cache
+    hit reproduces the cold serve bitwise (tokens AND page bytes, codes
+    AND sidecars), and a different chunk schedule produces the same
+    tokens - page-granular write quantization is a pure function of the
+    token prefix."""
+    bundle, params = tiny_bundle
+    rng = np.random.default_rng(5)
+    vocab = bundle.cfg.vocab_size
+    prompt = list(rng.integers(0, vocab, 37))
+
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=16, page_size=8,
+        max_seq_len=64, prefix_cache=True, cache_dtype=dtype,
+    )
+    r1 = eng.submit(prompt, 6)
+    eng.run_to_completion()
+    pool_after_cold = jax.tree.map(np.asarray, eng.pool)
+    n_cached = eng.prefix_cache.cached_pages
+    assert n_cached == len(prompt) // 8
+
+    r2 = eng.submit(prompt, 6)
+    eng.run_to_completion()
+    assert r2.generated == r1.generated
+    assert r2.cached_len == (len(prompt) - 1) // 8 * 8
+    # a different chunk schedule reproduces the same serve exactly
+    assert r1.generated == chunked_cold_reference(
+        bundle, params, prompt, 6, page_size=8, prefill_chunk=32,
+        cache_dtype=dtype,
+    )
+    # cached page codes AND quantization sidecars survived bit-for-bit
+    pool_now = jax.tree.map(np.asarray, eng.pool)
+    for a, b_ in zip(jax.tree.leaves(pool_after_cold),
+                     jax.tree.leaves(pool_now)):
+        np.testing.assert_array_equal(a[:, 1:1 + n_cached],
+                                      b_[:, 1:1 + n_cached])
+
+
+def test_quant_page_reuse_is_clean(tiny_bundle):
+    """No-scrub recycling at int8: a request decoded on pages dirty with a
+    previous request's codes/sidecars matches a fresh-pool serve exactly
+    (requantize-on-write statistics only ever read valid rows)."""
+    bundle, params = tiny_bundle
+    rng = np.random.default_rng(6)
+    vocab = bundle.cfg.vocab_size
+    pa = list(rng.integers(0, vocab, 9))
+    pb = list(rng.integers(0, vocab, 6))
+
+    eng = ServeEngine(bundle, params, max_batch=1, num_pages=2,
+                      page_size=16, cache_dtype="int8")
+    eng.submit(pa, 5)
+    eng.run_to_completion()          # dirties the single data page
+    rb = eng.submit(pb, 5)
+    eng.run_to_completion()
+    fresh = ServeEngine(bundle, params, max_batch=1, num_pages=2,
+                        page_size=16, cache_dtype="int8")
+    rf = fresh.submit(pb, 5)
+    fresh.run_to_completion()
+    assert rb.generated == rf.generated
+
+
+# ------------------------------------------- tier-2 adversarial sweep --
+
+def _sweep_bound(case: str, dtype: str) -> float:
+    if case == "heavy_tail" and dtype in QDTYPES:
+        # Documented limitation, asserted so it cannot silently regress
+        # FURTHER: heavy tails are where 8-bit KV degrades.  For int8 a
+        # single hundreds-of-sigma outlier sets the absmax scale and
+        # crushes the unit-variance signal into a few levels; for fp8 the
+        # floating codes keep relative precision (decode stays ~3e-2) but
+        # outlier-PEAKED causal attention rides on near-argmax ties that
+        # any storage rounding can flip.  bf16 keeps its normal bound -
+        # the dtype-choice guidance in runtime/README.md.
+        return 1.0
+    return RMSE_BOUND[dtype] * CASE_MULT[case]
+
+
+@pytest.mark.numerics
+@pytest.mark.parametrize("dtype", QDTYPES + ("bf16",))
+def test_adversarial_decode_sweep(adversarial_case, dtype, rng):
+    """Full cross product of the paper's failure generators x pool dtypes
+    for the decode read path (kernel + fallback vs fp64 gold, fp32
+    statistics; plus finiteness at the all-fp16 serving policy)."""
+    kv_lens = [120, 57]
+    q, kc, vc, kv_len = _decode_case(rng, adversarial_case, kv_lens)
+    kq, vq, table, quant, _ = _pool_from_contiguous(
+        kc, vc, kv_lens, 16, dtype
+    )
+    bound = _sweep_bound(adversarial_case, dtype)
+    for kw in (dict(use_kernel=False), I):
+        out = K.pasa_paged_decode(
+            q, kq, vq, table, kv_len, beta=BETA, policy=FP32, **kw, **quant,
+        )
+        assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+        for bi, gold in enumerate(_gold_decode(q, kc, vc, kv_len)):
+            r = rmse(out[bi:bi + 1], gold)
+            assert r < bound, (adversarial_case, dtype, kw, bi, r)
+    out16 = K.pasa_paged_decode(
+        q, kq, vq, table, kv_len, beta=BETA, policy=FP16,
+        use_kernel=False, **quant,
+    )
+    assert bool(jnp.isfinite(out16.astype(jnp.float32)).all())
+
+
+@pytest.mark.numerics
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_adversarial_prefill_sweep(adversarial_case, dtype, rng):
+    """Failure generators x pool dtypes for the chunked prefill path."""
+    b, h, kvh, cs, d, page = 1, 4, 2, 64, 32, 16
+    key = jax.random.fold_in(rng, 13)
+    q, kc, vc = adv.make_adversarial(
+        adversarial_case, key,
+        q_shape=(b, h, cs, d), kv_shape=(b, kvh, cs, d),
+    )
+    kq, vq, table, quant, _ = _pool_from_contiguous(kc, vc, [cs], page, dtype)
+    start = jnp.zeros((b,), jnp.int32)
+    kv_len = jnp.full((b,), cs, jnp.int32)
+    g = h // kvh
+    gold = naive_attention(
+        q.reshape(b, kvh, g, cs, d).astype(jnp.float64),
+        kc[:, :, None].astype(jnp.float64),
+        vc[:, :, None].astype(jnp.float64),
+        causal=True, dtype=jnp.float64,
+    ).reshape(b, h, cs, d)
+    bound = _sweep_bound(adversarial_case, dtype)
+    for kw in (dict(use_kernel=False), dict(block_q=16, **I)):
+        out = K.pasa_paged_prefill(
+            q, kq, vq, table, start, kv_len, beta=BETA, policy=FP32,
+            **kw, **quant,
+        )
+        assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+        r = rmse(out, gold)
+        assert r < bound, (adversarial_case, dtype, kw, r)

@@ -8,8 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import adversarial_inputs as adv
 import repro.kernels as K
-from repro.core import FP16, F64, blocked_attention, naive_attention
+from adversarial_inputs import adversarial_case  # noqa: F401
+from repro.core import FP16, FP32, F64, blocked_attention, naive_attention
 from repro.core.numerics import rmse
 from repro.runtime import (
     NULL_PAGE,
@@ -238,6 +240,63 @@ def test_tail_shift_conventions_both_exact_and_close(rng):
         **kw,
     )
     assert rmse(full16, masked16.astype(jnp.float32)) < 2e-2
+
+
+def test_paged_layout_is_bit_stable_under_adversarial_inputs(
+    adversarial_case, rng
+):
+    """The paged-vs-contiguous bit contract must survive the paper's
+    failure generators, not just friendly gaussians: same math, different
+    memory layout, identical bits even when the values are resonant /
+    biased / heavy-tailed ('Is Flash Attention Stable?': layout-level
+    divergence only shows under stress inputs)."""
+    b, kvh, g, d, page = 2, 2, 4, 64, 128
+    kv_lens = [300, 77]
+    mp = max(math.ceil(length / page) for length in kv_lens) + 1
+    s2 = mp * page
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    q, kc, vc = adv.make_adversarial(
+        adversarial_case, rng,
+        q_shape=(b, kvh, g, d), kv_shape=(b, kvh, s2, d),
+    )
+    mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
+    kc = jnp.where(mask, kc, 0.0)
+    vc = jnp.where(mask, vc, 0.0)
+    # pack the logical blocks into a shuffled pool (same as _paged_setup)
+    n_pages = 1 + b * mp + 2
+    ids = np.random.default_rng(0).permutation(np.arange(1, n_pages))
+    table = np.full((b, mp), NULL_PAGE, np.int32)
+    k_pool = np.zeros((n_pages, page, kvh, d), np.float32)
+    v_pool = np.zeros((n_pages, page, kvh, d), np.float32)
+    nxt = 0
+    kcn = np.moveaxis(np.asarray(kc), 2, 1)
+    vcn = np.moveaxis(np.asarray(vc), 2, 1)
+    for bi in range(b):
+        for j in range(math.ceil(kv_lens[bi] / page)):
+            pid = int(ids[nxt]); nxt += 1
+            table[bi, j] = pid
+            k_pool[pid] = kcn[bi, j * page:(j + 1) * page]
+            v_pool[pid] = vcn[bi, j * page:(j + 1) * page]
+    got = K.pasa_paged_decode(
+        q, jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(table),
+        kv_len, beta=BETA, policy=FP32, **I,
+    )
+    want = K.pasa_decode(
+        q, kc, vc, kv_len, beta=BETA, policy=FP32, block_kv=page, **I
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # fp32-statistics accuracy holds under stress too (fp16-statistics
+    # accuracy under these inputs is characterized in test_kv_quant.py)
+    if adversarial_case != "resonance_180":   # near-uniform attention
+        for bi in range(b):                   # inflates relative rmse
+            L = int(kv_len[bi])
+            gold = naive_attention(
+                q[bi:bi + 1].astype(jnp.float64),
+                kc[bi:bi + 1, :, :L].astype(jnp.float64),
+                vc[bi:bi + 1, :, :L].astype(jnp.float64),
+                dtype=jnp.float64,
+            )
+            assert rmse(got[bi:bi + 1], gold) < 0.03, (adversarial_case, bi)
 
 
 def test_stale_pages_cannot_leak(rng):

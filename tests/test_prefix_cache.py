@@ -118,6 +118,59 @@ class TestRadixPrefixCache:
         pc.release(nodes[2:])
         assert pc.evict(10) == 3
 
+    def test_evictable_pages_probe_does_no_traversal(self):
+        """The ROADMAP-flagged admission hot path: a page-short admission
+        attempt probes `evictable_pages` every engine step.  The counter
+        is maintained incrementally, so probing traverses NOTHING; only
+        evict() itself walks the trie - one traversal per eviction CALL,
+        not per probe."""
+        alloc, pc = self._cache(page=2)
+        pc.insert([1, 2, 3, 4], alloc.alloc(2))
+        pc.insert([1, 2, 9, 9], alloc.alloc(2))
+        held = pc.match([1, 2, 3, 4])
+        for _ in range(100):                      # 100 page-short probes
+            assert pc.evictable_pages == 1        # only [9,9] reclaimable
+        assert pc.traversals == 0
+        assert pc.evict(1) == 1
+        assert pc.traversals == 1
+        pc.release(held)
+        for _ in range(100):
+            assert pc.evictable_pages == 2
+        assert pc.traversals == 1                 # probes still free
+        assert pc.evict(2) == 2
+        assert pc.traversals == 2
+
+    def test_evictable_counter_matches_dfs_reference(self):
+        """Property check: across a randomized match/release/insert/evict
+        workload the O(1) cached counter always equals the O(nodes) DFS
+        it replaced."""
+        rng = np.random.default_rng(42)
+        alloc, pc = self._cache(num_pages=64, page=2)
+        held = []
+        for step in range(300):
+            op = rng.integers(0, 4)
+            if op == 0 and alloc.free_pages >= 3:
+                toks = list(rng.integers(0, 3, 6))
+                pages = alloc.alloc(3)
+                adopted = pc.insert(toks, pages)
+                alloc.free([p for p in pages if p not in adopted])
+            elif op == 1:
+                toks = list(rng.integers(0, 3, 6))
+                nodes = pc.match(toks)
+                if nodes:
+                    held.append(nodes)
+                else:
+                    pc.release(nodes)
+            elif op == 2 and held:
+                pc.release(held.pop(rng.integers(0, len(held))))
+            elif op == 3:
+                pc.evict(int(rng.integers(1, 3)))
+            assert pc.evictable_pages == pc._evictable_pages_dfs(), step
+        while held:
+            pc.release(held.pop())
+        assert pc.evictable_pages == pc._evictable_pages_dfs()
+        assert pc.evictable_pages == pc.cached_pages
+
 
 # ------------------------------------------------- paged prefill kernel --
 
