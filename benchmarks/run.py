@@ -1,13 +1,28 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 #
-# Also writes benchmarks/BENCH_numerics.json: the machine-diffable RMSE
-# trajectory (per-pool-dtype paged-decode accuracy vs fp64 exact attention),
-# so accuracy regressions across PRs are a JSON diff, not an eyeballed CSV.
+# Also writes two machine-diffable JSON trajectories:
+#   benchmarks/BENCH_numerics.json - per-pool-dtype paged-decode RMSE vs
+#     fp64 exact attention (accuracy regressions are a JSON diff);
+#   benchmarks/BENCH_serving.json - deterministic engine-step latency of
+#     the bursty-arrival scheduler sweep (scheduler_burst.py): mean/worst
+#     TTFT and drain steps per policy x prefill-batch configuration.
 import json
 import os
 import sys
 
 NUMERICS_JSON = os.path.join(os.path.dirname(__file__), "BENCH_numerics.json")
+SERVING_JSON = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
+
+
+def _write_json(path: str, rows, label: str) -> None:
+    # serialize BEFORE opening: a failure mid-evaluation must not
+    # truncate the previous run's trajectory file
+    payload = json.dumps(
+        {"schema": 1, "rows": rows}, indent=1, sort_keys=True
+    )
+    with open(path, "w") as f:
+        f.write(payload)
+    print(f"[{label} trajectory written to {path}]", file=sys.stderr)
 
 
 def main() -> None:
@@ -33,18 +48,9 @@ def main() -> None:
     except Exception as e:  # keep run.py total if the serve workload fails
         print(f"[paged-vs-dense report skipped: {e}]", file=sys.stderr)
     try:
-        # serialize BEFORE opening: a failure mid-evaluation must not
-        # truncate the previous run's trajectory file
         from benchmarks import paged_vs_dense as PD
 
-        payload = json.dumps(
-            {"schema": 1, "rows": PD.numerics_rows()}, indent=1,
-            sort_keys=True,
-        )
-        with open(NUMERICS_JSON, "w") as f:
-            f.write(payload)
-        print(f"[numerics trajectory written to {NUMERICS_JSON}]",
-              file=sys.stderr)
+        _write_json(NUMERICS_JSON, PD.numerics_rows(), "numerics")
     except Exception as e:
         print(f"[numerics trajectory skipped: {e}]", file=sys.stderr)
     try:
@@ -53,6 +59,13 @@ def main() -> None:
         rows += PP.report()
     except Exception as e:  # keep run.py total if the serve workload fails
         print(f"[prefill-prefix report skipped: {e}]", file=sys.stderr)
+    try:
+        from benchmarks import scheduler_burst as SB
+
+        rows += SB.report()
+        _write_json(SERVING_JSON, SB.serving_rows(), "serving")
+    except Exception as e:
+        print(f"[scheduler-burst report skipped: {e}]", file=sys.stderr)
     try:
         rows += R.report()
     except Exception as e:  # dry-run artifacts absent on a fresh checkout

@@ -1,0 +1,170 @@
+"""Bursty-arrival scheduling: TTFT under FCFS / SJF / mixed policies,
+batched vs B=1 multi-request prefill, and preempt-to-page-out.
+
+A staggered burst (one request submitted per engine step, mixed prompt
+lengths, more requests than batch slots) is served through the paged
+engine under each scheduler configuration.  Reported per config:
+
+  * mean / worst time-to-first-token in ENGINE STEPS measured from
+    SUBMIT (so queueing + prefill serialization both count) - step
+    counts are deterministic and hardware-independent, which is what
+    makes the JSON trajectory (benchmarks/BENCH_serving.json) diffable
+    across PRs;
+  * steps to drain the burst and wall-clock tokens/s (CPU gather
+    fallback - indicative only).
+
+The headline comparison: with ``prefill_batch=1`` (the pre-refactor
+schedule) prefill chunks of concurrent requests serialize - one request's
+chunk per step - so TTFT grows linearly down the queue; batched
+multi-request prefill advances every admitted prompt each step and
+strictly reduces mean TTFT under the same arrivals (asserted in
+tests/test_scheduler.py; this benchmark records the trajectory).
+Outputs are bit-identical across every row - scheduling is latency-only.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine
+
+PROMPTS = (96, 32, 96, 64, 32, 64)   # staggered burst, mixed lengths
+GEN = 4
+PAGE = 8
+CHUNK = 32
+BATCH = 4
+ARRIVAL_GAP = 1                      # engine steps between submits
+BUDGET = CHUNK + BATCH               # mixed row: chunk tokens + decode rows
+
+
+def _bundle():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def burst_metrics(bundle, params, prompts, **engine_kwargs):
+    """Serve a staggered burst; returns deterministic step metrics + wall
+    throughput.  ``engine_kwargs`` pass through to :class:`ServeEngine`."""
+    total = max(len(p) for p in prompts) + GEN
+    num_pages = 1 + sum(math.ceil((len(p) + GEN) / PAGE) for p in prompts)
+    eng = ServeEngine(
+        bundle, params, max_batch=BATCH, num_pages=num_pages,
+        page_size=PAGE, max_seq_len=total, prefill_chunk=CHUNK,
+        **engine_kwargs,
+    )
+    # warm both jitted calls outside the timed region (gen=2 so the decode
+    # step compiles too, not just the prefill call)
+    eng.submit(list(prompts[0][:2]), 2)
+    eng.run_to_completion()
+
+    pending = deque(
+        (eng.steps + i * ARRIVAL_GAP, p) for i, p in enumerate(prompts)
+    )
+    reqs = []
+    s0 = eng.steps
+    t0 = time.perf_counter()
+    while pending or not eng.idle:
+        while pending and pending[0][0] <= eng.steps:
+            reqs.append(eng.submit(list(pending.popleft()[1]), GEN))
+        eng.step()
+    dt = time.perf_counter() - t0
+    ttfts = [r.first_token_step - r.submit_step + 1 for r in reqs]
+    toks = sum(len(r.prompt) + r.max_new_tokens - 1 for r in reqs)
+    return {
+        "mean_ttft_steps": float(np.mean(ttfts)),
+        "max_ttft_steps": int(np.max(ttfts)),
+        "drain_steps": eng.steps - s0,
+        "preemptions": eng.preemptions,
+        "tokens_per_s": toks / dt,
+        "generated": [r.generated for r in reqs],
+    }
+
+
+CONFIGS = (
+    ("fcfs_b1", dict(scheduler="fcfs", prefill_batch=1)),
+    ("fcfs_batched", dict(scheduler="fcfs")),
+    ("sjf_batched", dict(scheduler="sjf")),
+    ("mixed_batched", dict(scheduler="mixed", step_token_budget=BUDGET)),
+)
+
+
+def _measure_all():
+    cfg, bundle, params = _bundle()
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in PROMPTS]
+    out = {}
+    for name, kw in CONFIGS:
+        out[name] = burst_metrics(bundle, params, prompts, **kw)
+    # every configuration must produce the same per-request streams -
+    # the bit-preservation contract the refactor rests on
+    base = out["fcfs_b1"]["generated"]
+    for name, m in out.items():
+        assert m["generated"] == base, f"{name} diverged from fcfs_b1"
+    return out
+
+
+_CACHE = None
+
+
+def _metrics():
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = _measure_all()
+    return _CACHE
+
+
+def report():
+    """CSV rows for benchmarks/run.py."""
+    rows = []
+    base = None
+    for name, _ in CONFIGS:
+        m = _metrics()[name]
+        if base is None:
+            base = m["mean_ttft_steps"]
+        rows.append((
+            f"scheduler_burst_{name}", 0.0,
+            f"mean TTFT {m['mean_ttft_steps']:.1f} steps "
+            f"(worst {m['max_ttft_steps']}) | drain {m['drain_steps']} "
+            f"steps | {m['tokens_per_s']:.0f} tok/s | "
+            f"{base / m['mean_ttft_steps']:.2f}x vs fcfs_b1",
+        ))
+    return rows
+
+
+def serving_rows():
+    """Machine-readable latency trajectory (benchmarks/BENCH_serving.json).
+
+    Only deterministic step-count metrics (no wall-clock), so cross-PR
+    diffs are exact."""
+    out = []
+    for name, kw in CONFIGS:
+        m = _metrics()[name]
+        out.append({
+            "name": f"scheduler_burst/{name}",
+            "scheduler": kw.get("scheduler"),
+            "prefill_batch": kw.get("prefill_batch", BATCH),
+            "step_token_budget": kw.get("step_token_budget"),
+            "mean_ttft_steps": m["mean_ttft_steps"],
+            "max_ttft_steps": m["max_ttft_steps"],
+            "drain_steps": m["drain_steps"],
+            "workload": {
+                "prompts": list(PROMPTS), "gen": GEN, "page": PAGE,
+                "chunk": CHUNK, "batch": BATCH,
+                "arrival_gap": ARRIVAL_GAP,
+            },
+        })
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in report():
+        print(f"{name},{us:.1f},{derived}")

@@ -28,6 +28,12 @@ class AttentionConfig:
     # are identically sharded -> no contraction-split all-reduces inside the
     # KV-block scan.  Decode keeps the grouped layout (KV-cache bandwidth).
     expand_kv: bool = True
+    # Scale statistic for quantized KV page pools (runtime/paged_cache.py
+    # quantize_kv_page): "absmax" (exact range; the attention-accuracy
+    # default) or "quantile" (clipped-absmax: finer bulk-signal resolution
+    # but measured WORSE end-to-end attention on outlier-heavy traffic -
+    # softmax attends the clipped outliers; see runtime/README.md).
+    kv_quant_scale: str = "absmax"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -255,9 +255,21 @@ def update_state(
     return AttnState(m=m_new, l=l_new, acc=acc_new, f=f_new, cnt=state.cnt + 1)
 
 
-def finalize_state(state: AttnState, policy: PrecisionPolicy) -> jnp.ndarray:
-    """Algorithm 1 line 22: O_i = O_i / l."""
-    return (state.acc / state.l.astype(policy.acc_dtype)).astype(policy.out_dtype)
+def finalize_state(
+    state: AttnState, policy: PrecisionPolicy, *, zero_empty_rows: bool = False
+) -> jnp.ndarray:
+    """Algorithm 1 line 22: O_i = O_i / l.
+
+    ``zero_empty_rows=True`` (the chunk-exact path) emits 0 instead of 0/0
+    for rows that never folded a live block (l == 0) - dead pad rows of a
+    BATCHED multi-request prefill call (runtime/engine.py grids rows of
+    several requests together and pads the grid with kv_len == 0 rows).
+    This matches the Pallas paged-prefill kernel's safe-divide epilogue
+    bit-for-bit; live rows (l > 0) are untouched in either mode."""
+    l = state.l.astype(policy.acc_dtype)
+    if zero_empty_rows:
+        l = jnp.where(l > 0.0, l, jnp.asarray(1.0, policy.acc_dtype))
+    return (state.acc / l).astype(policy.out_dtype)
 
 
 def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int):
@@ -448,7 +460,9 @@ def blocked_attention(
 
     idx = jnp.arange(n_blocks, dtype=jnp.int32)
     state, _ = jax.lax.scan(body, state, (kb, vb, idx))
-    return finalize_state(state, policy)
+    # chunk-exact: fully-dead rows (kv_len == 0 pad rows of a batched
+    # multi-request prefill) emit 0, matching the Pallas kernel.
+    return finalize_state(state, policy, zero_empty_rows=chunk_exact)
 
 
 def pasa_attention(

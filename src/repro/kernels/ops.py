@@ -239,12 +239,16 @@ def pasa_paged_prefill(
 
     The chunk's K/V must already be scattered into their pages; queries
     attend causally over cached-prefix pages and the in-flight chunk
-    through the page table.  ``use_kernel=True`` runs the Pallas kernel
-    (page-table scalar prefetch; TPU, or CPU via ``interpret=True``);
-    ``use_kernel=False`` takes the XLA gather fallback.  Both use the
-    chunk-exact shift (page-local valid-column mean, causal mask after
-    sbar, per-row dead-page no-ops), so outputs are bit-invariant to the
-    chunk schedule - the prefix cache's exactness contract.
+    through the page table.  The B rows may belong to DIFFERENT requests
+    (the serving engine's batched multi-request prefill): each row
+    carries its own ``chunk_start``, ``kv_len``, and page-table row, and
+    a dead pad row (``kv_len == 0``) emits exact zeros on both paths.
+    ``use_kernel=True`` runs the Pallas kernel (page-table scalar
+    prefetch; TPU, or CPU via ``interpret=True``); ``use_kernel=False``
+    takes the XLA gather fallback.  Both use the chunk-exact shift
+    (page-local valid-column mean, causal mask after sbar, per-row
+    dead-page no-ops), so outputs are bit-invariant to the chunk
+    schedule - the prefix cache's exactness contract.
 
     Passing the four sidecar arrays selects the quantized-pool mode (see
     :func:`pasa_paged_decode`); quantization params are per page, so the

@@ -31,6 +31,15 @@ A q tile skips pages wholly past the valid length AND pages wholly in its
 causal future (tile-level ``pl.when``), mirroring the causal block skip of
 the contiguous prefill kernel.
 
+Multi-request batching (the engine's batched prefill, runtime/engine.py):
+the B rows need not belong to one request - each row's chunk start, valid
+length, and page-table row arrive through the same scalar-prefetch maps,
+so one device call advances chunks of several still-prefilling requests
+at once.  Ragged tails are right-padded to the (B, CS) grid; a fully-dead
+pad row (``kv_len == 0``) folds no page and the final safe-divide emits
+exact zeros for it - the XLA fallback mirrors this via
+``finalize_state(zero_empty_rows=True)``.
+
 Quantized pools: as in the paged decode kernel, per-page scale/shift
 sidecars ride the same page-table index maps and the fp8/int8 codes are
 dequantized in VMEM immediately before the chunk block update

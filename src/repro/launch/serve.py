@@ -12,14 +12,26 @@ Two cache backends:
     :class:`repro.runtime.ServeEngine` - fixed-size KV pages + per-sequence
     page tables + free-list allocator, with continuous batching (requests
     admitted whenever a slot and pages free up).  Prompts are prefetched in
-    ``--prefill-chunk``-token chunks through the chunk-exact paged prefill
-    (Sarathi-style mixing with the batched decode step); pass
+    ``--prefill-chunk``-token chunks through the chunk-exact paged prefill,
+    BATCHED across up to ``--prefill-batch`` still-prefilling requests per
+    device call; ``--scheduler {fcfs,sjf,mixed}`` picks the admission /
+    chunk-allocation / preemption policy, ``--step-token-budget`` caps the
+    per-step token work (Sarathi-style mixing with the batched decode
+    step), and ``--preemption`` lets a page-starved arrival page a running
+    straggler out through the prefix cache.  All of these are
+    latency-only: per-request outputs are bit-identical under every
+    combination (repro/runtime/scheduler.py).  Pass
     ``--no-chunked-prefill`` for the PR-1 token-by-token reference mode.
     ``--prefix-cache`` additionally shares identical prompt-prefix K/V
     pages across requests through the radix prefix cache -
     bit-identically, see repro/runtime/prefix_cache.py.  ssm/hybrid keep
     the dense path: their recurrent state is O(1) per sequence, there is
     nothing to page.
+
+Sampling: ``--temperature`` / ``--top-k`` select per-request PRNG-keyed
+sampling on the paged route (temperature 0 = greedy argmax, the
+bit-exact default); keys derive from (request id, token index), so
+sampled streams are reproducible and scheduling-invariant too.
 
 Example (CPU-friendly):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
@@ -63,14 +75,56 @@ def main(argv=None):
                     help="paged route: token-by-token prompt consumption "
                          "(the PR-1 reference mode)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="per-step prefill token budget; multiple of the "
-                         "page size (default: 8 pages)")
+                    help="per-row chunk width of the batched prefill call; "
+                         "multiple of the page size (default: 8 pages)")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=("fcfs", "sjf", "mixed"),
+                    help="paged route: scheduling policy - fcfs (arrival "
+                         "order, head-of-line blocking; the bit-preserving "
+                         "default), sjf (shortest-job-first prefill, no "
+                         "HOL blocking, aging guard), mixed (Sarathi-style "
+                         "fair-share token-budget mixing).  Outputs are "
+                         "bit-identical across policies")
+    ap.add_argument("--prefill-batch", type=int, default=None,
+                    help="paged route: still-prefilling requests batched "
+                         "into one prefill device call (default: --batch; "
+                         "1 = the sequential baseline)")
+    ap.add_argument("--step-token-budget", type=int, default=None,
+                    help="paged route: global per-step token budget split "
+                         "between decode rows (1 each) and prefill chunk "
+                         "tokens (default: unlimited)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="paged route: allow page-starved admissions to "
+                         "preempt a running request to the prefix cache "
+                         "(resume is bit-identical to an uninterrupted "
+                         "serve)")
+    ap.add_argument("--preempt-patience", type=int, default=4,
+                    help="consecutive page-starved steps before a "
+                         "preemption may trigger")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="paged route: sampling temperature (0 = greedy "
+                         "argmax, bit-exact default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="paged route: top-k truncation for sampling "
+                         "(0 = full distribution; needs --temperature > 0 "
+                         "to matter)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base PRNG seed for per-request sampling keys")
     ap.add_argument("--kv-dtype", default="bf16",
                     choices=("bf16", "fp8_e4m3", "int8"),
                     help="paged route: KV page pool storage dtype; "
                          "fp8_e4m3/int8 store shift-centered quantized "
                          "pages with per-page scale/shift sidecars "
                          "(~2x less pool HBM, RMSE-bounded accuracy)")
+    ap.add_argument("--kv-quant-scale", default="absmax",
+                    choices=("absmax", "quantile"),
+                    help="quantized pools: page scale statistic - absmax "
+                         "(exact range; the default and the attention-"
+                         "accuracy recommendation) or quantile (clipped-"
+                         "absmax: ~5x finer bulk-signal resolution but "
+                         "measured WORSE end-to-end attention on outlier-"
+                         "heavy traffic - see runtime/README.md; prefer "
+                         "--kv-dtype fp8_e4m3 there)")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     action="store_true", default=False,
                     help="share identical prompt-prefix KV pages across "
@@ -94,6 +148,15 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.kv_quant_scale != "absmax":
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg,
+            attention=dataclasses.replace(
+                cfg.attention, kv_quant_scale=args.kv_quant_scale
+            ),
+        )
     if args.mesh == "prod":
         mesh = make_production_mesh()
     else:
@@ -194,6 +257,14 @@ def _serve_paged(args, bundle, params, prompts):
         prefill_chunk=chunk,
         prefix_cache=args.prefix_cache,
         cache_dtype=args.kv_dtype,
+        scheduler=args.scheduler,
+        prefill_batch=args.prefill_batch,
+        step_token_budget=args.step_token_budget,
+        preemption=args.preemption,
+        preempt_patience=args.preempt_patience,
+        temperature=args.temperature,
+        top_k=args.top_k,
+        sample_seed=args.sample_seed,
     )
     reqs = [eng.submit(list(p), args.gen) for p in prompts]
     t0 = time.time()
@@ -203,13 +274,17 @@ def _serve_paged(args, bundle, params, prompts):
         [np.asarray(r.generated, np.int32) for r in reqs], axis=0
     )
     st = eng.stats()
-    ttft_steps = [r.first_token_step - r.admit_step + 1 for r in reqs]
+    # measured from SUBMIT so queueing counts - and so the number stays
+    # meaningful under --preemption (re-admission overwrites admit_step,
+    # while first_token_step keeps the original emission)
+    ttft_steps = [r.first_token_step - r.submit_step + 1 for r in reqs]
     mode = ("chunked" if args.chunked_prefill else "token-by-token")
-    print(f"[paged/{mode}] generated {gen.shape} tokens in {dt:.2f}s "
-          f"({1000*dt/max(st['steps'],1):.1f} ms/step), "
+    print(f"[paged/{mode}/{st['scheduler']}] generated {gen.shape} tokens "
+          f"in {dt:.2f}s ({1000*dt/max(st['steps'],1):.1f} ms/step), "
           f"pool={st['cache_bytes']/1e6:.2f} MB {st['pool_dtype']} "
           f"({num_pages} pages x {page_size} tok), "
-          f"TTFT {np.mean(ttft_steps):.1f} engine steps")
+          f"TTFT {np.mean(ttft_steps):.1f} engine steps, "
+          f"{st['preemptions']} preemptions")
     if args.prefix_cache:
         pc = st["prefix_cache"]
         print(f"[prefix-cache] {pc['cached_pages']} pages cached, "

@@ -187,6 +187,11 @@ def attention(
         # granularity == page size, so every full page's contents are a
         # function of the token prefix alone and prefix-cache hits are
         # bit-identical to cold prefill (see kernels/pasa_paged_prefill.py).
+        # The B rows may belong to DIFFERENT requests (the engine's batched
+        # multi-request prefill): each row carries its own chunk start,
+        # valid limit, and page-table row, so the per-row scatters and the
+        # per-row gather+attend below are independent; dead pad rows
+        # (prefill_len == 0) write only to the null sink and emit zeros.
         if pos is None or prefill_len is None:
             raise ValueError(
                 "paged prefill needs pos (chunk start) and prefill_len"
@@ -228,13 +233,14 @@ def attention(
             # whole-page codes into the wrong physical pages.
             n_cp = s // page
             validp = valid.reshape(b, n_cp, page)
+            qmode = cfg.attention.kv_quant_scale
             kcodes, ksc, ksh = quantize_kv_page(
                 k.astype(jnp.float32).reshape(b, n_cp, page, kvh, hd),
-                validp, ck.dtype,
+                validp, ck.dtype, scale_mode=qmode,
             )
             vcodes, vsc, vsh = quantize_kv_page(
                 v.astype(jnp.float32).reshape(b, n_cp, page, kvh, hd),
-                validp, cv.dtype,
+                validp, cv.dtype, scale_mode=qmode,
             )
             page_idx = (
                 pos.astype(jnp.int32)[:, None] // page
@@ -323,7 +329,10 @@ def attention(
                     sc[phys], sh[phys].reshape(b, kvh, hd),
                 )                                             # f32
                 raw = jnp.where(is_new, new_vec[:, None], old)
-                qc, qs, qh = quantize_kv_page(raw, valid_rows, codes.dtype)
+                qc, qs, qh = quantize_kv_page(
+                    raw, valid_rows, codes.dtype,
+                    scale_mode=cfg.attention.kv_quant_scale,
+                )
                 return (
                     codes.at[phys].set(qc.reshape(b, page, kvh * hd)),
                     sc.at[phys].set(qs),

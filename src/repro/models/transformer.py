@@ -211,8 +211,12 @@ def prefill_step_paged(
 ):
     """One chunked-prefill step against the paged pool.
 
-    tokens (B, CS) - one prompt chunk, right-padded to the static chunk
-    size (pad positions write K/V to the null page);
+    tokens (B, CS) - one prompt chunk PER ROW, right-padded to the static
+    chunk size (pad positions write K/V to the null page).  Rows may
+    belong to different requests (the engine's batched multi-request
+    prefill); a fully-dead pad row carries kv_len == 0 and an all-null
+    page-table row, writes only to the null sink, and its logits row is
+    discarded by the caller;
     start (B,) - absolute position of the chunk's first token; with a
     QUANTIZED pool this must be page-aligned and CS a page multiple
     (quantize-on-write is page-granular; see models/attention.py);

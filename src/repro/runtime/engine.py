@@ -1,61 +1,79 @@
 """Continuous-batching serving engine over the paged KV cache.
 
-The engine owns the *host-side* control plane (request queue, admission,
-page accounting, prefix-cache references, per-request cursors) around at
-most two *device-side* jitted calls per step - one chunked-prefill call and
-one fully-batched decode call - both shape-static, so there are exactly two
-compilations for the whole serving session.
+The engine owns the *host-side* mechanism (request queue, slots, page
+accounting, prefix-cache references, per-request cursors, preemption
+plumbing) around at most two *device-side* jitted calls per step - one
+BATCHED chunked-prefill call and one fully-batched decode call - both
+shape-static, so there are exactly two compilations for the whole serving
+session.  Every scheduling *decision* - admission order, which requests'
+prefill chunks ride this step's batch and at what size, who gets preempted
+- is delegated to a pluggable :class:`~repro.runtime.scheduler
+.SchedulerPolicy` (``scheduler=`` "fcfs" | "sjf" | "mixed").
 
 Request lifecycle::
 
     submit() -> WAITING --admission--> RUNNING(prefill) -> RUNNING(decode)
-                 |            (slot + pages granted,             |
-                 |             shared prefix pages referenced)   v
-                 +<------- insufficient slot/pages    FINISHED (owned pages
-                                                      freed or donated to the
-                                                      prefix cache, slot
-                                                      reusable next step)
+                 ^  |          (slot + pages granted,            |
+                 |  |           shared prefix pages referenced)  v
+                 |  +<---- insufficient slot/pages     FINISHED (owned pages
+                 |                                     freed or donated to the
+                 +--- preempt-to-page-out              prefix cache, slot
+                      (pages donated/freed,            reusable next step)
+                       request re-queued)
 
-  * **Admission** happens at the top of every :meth:`step`, so new requests
-    join mid-stream whenever a batch slot AND enough pages are free -
-    continuous batching, no draining barrier.  Admission is *conservative*:
-    a request is admitted only if its worst-case page need is coverable at
-    that moment - but with the prefix cache enabled it is charged only for
-    its **non-shared** pages (matched prefix pages are refcounted, not
-    copied), and refcount-0 cache pages are evicted on demand to make room.
-  * **Chunked prefill** (default): each step runs ONE prompt chunk of
-    ``prefill_chunk`` tokens for the oldest still-prefilling request
-    through the chunk-exact paged prefill (kernels/pasa_paged_prefill.py),
-    then the batched decode step for every request past its prompt -
-    Sarathi-style mixing, so decode latency stays bounded while prefill
-    proceeds at O(chunk) tokens/step instead of 1 token/step.  TTFT for a
-    prompt of P tokens is ``ceil((P - cached) / prefill_chunk)`` steps, and
-    prefix-cache hits skip their shared pages' compute entirely.  Chunk
-    boundaries are page-aligned (``prefill_chunk`` is a multiple of
-    ``page_size``), which together with the chunk-exact convention makes
-    the K/V written to every full page - and all downstream logits -
-    bit-identical between cache-hit and cold prefill of the same request
-    (tests/test_prefix_cache.py).
-  * **Token-by-token prefill** (``chunked_prefill=False``): the PR-1
-    behavior - prompts teacher-forced one token per decode step; kept as
-    the reference mode (``dense_greedy_reference`` bit-matches it).
-  * **Pages** are granted at admission; freed pages go straight back to
-    the free list WITHOUT scrubbing - the masked valid-column shift
-    (``shift_mask_valid`` / ``chunk_exact``) guarantees stale page contents
-    beyond ``kv_len`` cannot reach any output.  On finish, the full prompt
-    pages of a request are DONATED to the prefix cache (when enabled)
-    instead of freed; the cache frees them on LRU eviction.
+  * **Admission** happens at the top of every :meth:`step` in the policy's
+    order - continuous batching, no draining barrier.  Admission stays
+    *conservative* (worst-case page need must be coverable) but charges
+    only **non-shared** pages when the prefix cache is enabled; refcount-0
+    cache pages are evicted on demand.  FCFS/mixed keep intentional
+    head-of-line blocking; SJF skips blocked candidates (with an aging
+    guard against starvation).
+  * **Batched chunked prefill** (default): each step runs prompt chunks of
+    up to ``prefill_batch`` still-prefilling requests through ONE call of
+    the chunk-exact paged prefill (kernels/pasa_paged_prefill.py) - each
+    row carries its own position offset, valid length, and page-table row;
+    ragged tails are right-padded to the static ``(prefill_batch,
+    prefill_chunk)`` grid and write to the null page.  The policy splits a
+    per-step token budget (``step_token_budget``; decode rows charge one
+    token each) across the rows - Sarathi-style mixing generalized from
+    the PR-2 one-chunk-per-step loop, which ``prefill_batch=1`` still
+    reproduces exactly.
+  * **Preemption** (``preemption=True``): when the policy's head admission
+    candidate has been page-starved for ``preempt_patience`` consecutive
+    steps, the policy picks a running victim to page out: its
+    prefill-written full prompt pages are DONATED to the prefix cache
+    (their bytes are a pure function of the token prefix - the chunk-exact
+    property), everything else is freed, and the request re-queues with
+    its generated-so-far tokens recorded for replay.  Resume is a prefix
+    -cache hit + re-prefill of only the private prompt tail + teacher
+    -forced decode replay of the recorded tokens - each decode step is the
+    same pure function of (pool bytes, fed token) as in the uninterrupted
+    serve, so the resumed stream is BIT-IDENTICAL to never having been
+    preempted (tests/test_scheduler.py, bf16 and int8 pools).
+  * **Sampling**: ``temperature > 0`` switches the on-device token choice
+    from argmax to temperature + top-k categorical sampling, keyed per
+    (request id, token index) - so sampled streams are reproducible and,
+    like greedy ones, bit-invariant to scheduling, batching, preemption,
+    and policy swaps.  ``temperature=0`` (default) keeps the exact greedy
+    path.
+  * **Pages** are granted at admission; freed pages recycle WITHOUT
+    scrubbing (masked valid-column shift; see runtime/paged_cache.py).  On
+    finish - as on preemption - full prompt pages are donated to the
+    prefix cache when it is enabled.  With ``trim_high``/``trim_low``
+    watermarks set, the engine also trims refcount-0 cache pages in the
+    background: when pool occupancy exceeds ``trim_high`` it evicts down
+    toward ``trim_low`` at the top of the step, so admission normally
+    finds free pages instead of paying eviction latency inline (the O(1)
+    ``evictable_pages`` counter makes the per-step probe free).
   * **Inactive slots** still execute in the decode call (shape-static
-    batching); their page table rows are nulled in the decode view - so
-    still-prefilling requests' pages cannot be clobbered - and their
-    writes land in null page 0 (the reserved sink, runtime/paged_cache.py).
+    batching); their page-table rows are nulled in the decode view and
+    their writes land in null page 0 (runtime/paged_cache.py).
 
 PASA / page-size interaction: the engine defaults ``page_size`` to the
 model's PASA block length (``cfg.attention.block_kv``), making one page ==
-one PASA shift block.  Both paged kernels compute their per-block key shift
+one PASA shift block; both paged kernels compute their per-block key shift
 page-locally, so page granularity and shift granularity coincide - the
-property that makes raw-K/V page sharing exact (see
-runtime/prefix_cache.py's module doc for the full argument).
+property that makes raw-K/V page sharing exact (runtime/prefix_cache.py).
 """
 
 from __future__ import annotations
@@ -77,6 +95,7 @@ from repro.runtime.paged_cache import (
     resolve_pool_dtype,
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
+from repro.runtime.scheduler import RequestView, get_scheduler
 
 WAITING = "waiting"
 RUNNING = "running"
@@ -113,20 +132,23 @@ def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
 def chunked_cold_reference(
     bundle, params, prompt, max_new_tokens: int, *,
     page_size: int = 16, prefill_chunk: Optional[int] = None,
-    cache_dtype=jnp.bfloat16,
+    cache_dtype=jnp.bfloat16, **engine_kwargs,
 ):
     """Cold (empty-prefix-cache) chunked-prefill serve of one request.
 
     The hit-vs-cold oracle: a prefix-cache-hit serve of the same request
     must match this token-for-token AND page-for-page bit-identically,
     REGARDLESS of the chunk size used by either side (the chunk-exact
-    convention is schedule-invariant)."""
+    convention is schedule-invariant).  Extra ``engine_kwargs`` (scheduler,
+    sampling, budget, ...) pass through to the engine - every one of them
+    is output-bit-preserving for a single request."""
     total = len(prompt) + max_new_tokens
     eng = ServeEngine(
         bundle, params, max_batch=1,
         num_pages=1 + math.ceil(max(total - 1, 1) / page_size),
         page_size=page_size, max_seq_len=total,
         prefill_chunk=prefill_chunk, cache_dtype=cache_dtype,
+        **engine_kwargs,
     )
     r = eng.submit(prompt, max_new_tokens)
     eng.run_to_completion()
@@ -155,6 +177,11 @@ class Request:
     prefill_pos: int = 0     # next prompt position whose K/V is not written
     cached_len: int = 0      # prompt tokens served from the prefix cache
     prefix_nodes: list = dataclasses.field(default_factory=list)
+    # preemption bookkeeping
+    replay: List[int] = dataclasses.field(default_factory=list)
+    blocked_steps: int = 0   # consecutive page-starved admission attempts
+    preempt_count: int = 0
+    preempt_step: int = -1
 
     @property
     def total_len(self) -> int:
@@ -165,6 +192,28 @@ class Request:
         # generated token is returned, never fed back) - so only
         # total_len - 1 positions need page backing.
         return math.ceil(max(self.total_len - 1, 1) / page_size)
+
+
+def _make_sampler(temperature: float, top_k: int, base_key):
+    """(logits (B, V), req_ids (B,), token_idx (B,)) -> tokens (B,) int32.
+
+    The per-row key is ``fold_in(fold_in(base_key, req_id), token_idx)``,
+    derived INSIDE the jitted step from two int32 rows - no per-row eager
+    dispatches on the per-token host path."""
+    temp = float(temperature)
+
+    def keyed(rid, idx):
+        return jax.random.fold_in(jax.random.fold_in(base_key, rid), idx)
+
+    def sample(logits, req_ids, token_idx):
+        lg = logits.astype(jnp.float32) / jnp.asarray(temp, jnp.float32)
+        if top_k > 0:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        keys = jax.vmap(keyed)(req_ids, token_idx)
+        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+    return sample
 
 
 class ServeEngine:
@@ -185,26 +234,47 @@ class ServeEngine:
         submit-time admissibility bound: requests with
         ``len(prompt) + max_new_tokens > max_seq_len`` are rejected at
         :meth:`submit` (they could never be served under the bounded page
-        table, and would otherwise wedge the FCFS queue forever).
+        table, and would otherwise wedge the queue forever).
         Default: the page table's physical capacity,
         ``(num_pages - 1) * page_size``.
-      chunked_prefill: prefill prompts in ``prefill_chunk``-token chunks
-        through the paged prefill path (default) instead of token-by-token
-        through the decode step.
-      prefill_chunk: per-step prefill token budget; must be a multiple of
-        ``page_size`` (chunk boundaries must be page-aligned for the
-        chunk-exact bit-invariance).  Default: ``8 * page_size``.
+      chunked_prefill: prefill prompts in chunks through the paged prefill
+        path (default) instead of token-by-token through the decode step.
+      prefill_chunk: per-row chunk width of the batched prefill call; must
+        be a multiple of ``page_size`` (page-aligned chunk boundaries are
+        what make chunked prefill bit-exact).  Default: ``8 * page_size``.
       prefix_cache: share identical prompt-prefix K/V pages across requests
-        via a radix prefix cache (requires ``chunked_prefill`` - the
-        cache's contents are defined by the chunk-exact convention).
+        via a radix prefix cache (requires ``chunked_prefill``).
       cache_dtype: pool storage dtype - a jnp dtype, or one of the
         ``runtime.paged_cache.POOL_DTYPES`` names ("bf16", "fp8_e4m3",
         "int8").  Quantized dtypes store shift-centered 8-bit codes plus
-        per-page scale/shift sidecars; because the sidecars are pool
-        leaves indexed by physical page id, every engine-side page
-        movement (prefix-cache donation, copy-on-write recompute,
-        eviction, free-list recycling) carries the quantization metadata
-        with the page automatically.
+        per-page scale/shift sidecars carried with the page through every
+        lifecycle operation.
+      scheduler: a policy name ("fcfs" | "sjf" | "mixed") or a
+        :class:`~repro.runtime.scheduler.SchedulerPolicy` instance.  Every
+        policy produces bit-identical per-request outputs (scheduling is
+        latency-only); "fcfs" with ``prefill_batch=1`` reproduces the
+        pre-policy engine schedule exactly.
+      prefill_batch: rows of the batched prefill call (static shape; one
+        compilation).  Default: ``max_batch``.  1 = the sequential
+        one-request-per-step baseline (benchmarks/scheduler_burst.py).
+      step_token_budget: global per-step token budget the policy divides
+        between decode rows (1 token each, charged first) and prefill
+        chunk tokens.  None (default) = unlimited.  Must be at least
+        ``page_size`` so prefill can always eventually progress.
+      preemption: enable preempt-to-page-out (see module doc).
+      preempt_patience: consecutive page-starved steps the head admission
+        candidate tolerates before the policy may pick a victim.
+      trim_high / trim_low: background prefix-cache trimming watermarks as
+        fractions of the allocatable pool (both or neither; requires
+        ``prefix_cache``).  When live pages exceed ``trim_high`` of the
+        pool, refcount-0 cache pages are evicted down toward ``trim_low``
+        at the top of the step.
+      temperature / top_k / sample_seed: serve-path sampling.
+        ``temperature=0`` (default) = greedy argmax, bit-identical to the
+        pre-sampling engine.  ``temperature>0`` samples from the
+        temperature-scaled, optionally top-k-truncated distribution with a
+        per-(request, token index) PRNG key derived from ``sample_seed`` -
+        deterministic, and independent of scheduling.
     """
 
     def __init__(
@@ -220,6 +290,16 @@ class ServeEngine:
         prefill_chunk: Optional[int] = None,
         prefix_cache: bool = False,
         cache_dtype=jnp.bfloat16,
+        scheduler="fcfs",
+        prefill_batch: Optional[int] = None,
+        step_token_budget: Optional[int] = None,
+        preemption: bool = False,
+        preempt_patience: int = 4,
+        trim_high: Optional[float] = None,
+        trim_low: Optional[float] = None,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        sample_seed: int = 0,
     ):
         if not bundle.supports_paged:
             raise ValueError(
@@ -270,6 +350,53 @@ class ServeEngine:
                 "token-by-token decode path does not produce"
             )
 
+        self._policy = get_scheduler(scheduler)
+        if prefill_batch is None:
+            prefill_batch = self.max_batch
+        if prefill_batch < 1:
+            raise ValueError(f"prefill_batch must be >= 1, got {prefill_batch}")
+        self.prefill_batch = min(int(prefill_batch), self.max_batch)
+        if step_token_budget is not None and step_token_budget < self.page_size:
+            raise ValueError(
+                f"step_token_budget ({step_token_budget}) below page_size "
+                f"({self.page_size}) could never grant a page-aligned chunk"
+            )
+        self.step_token_budget = (
+            None if step_token_budget is None else int(step_token_budget)
+        )
+        self.preemption = bool(preemption)
+        if preempt_patience < 1:
+            raise ValueError(
+                f"preempt_patience must be >= 1, got {preempt_patience}"
+            )
+        self.preempt_patience = int(preempt_patience)
+
+        if (trim_high is None) != (trim_low is None):
+            raise ValueError("trim_high and trim_low must be set together")
+        if trim_high is not None:
+            if not prefix_cache:
+                raise ValueError("cache trimming requires prefix_cache=True")
+            if not 0.0 <= trim_low <= trim_high <= 1.0:
+                raise ValueError(
+                    f"need 0 <= trim_low <= trim_high <= 1, got "
+                    f"{trim_low}/{trim_high}"
+                )
+            allocatable = self.num_pages - 1
+            self._trim_high_pages = int(trim_high * allocatable)
+            self._trim_low_pages = int(trim_low * allocatable)
+        else:
+            self._trim_high_pages = None
+            self._trim_low_pages = None
+
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {top_k}")
+        self.temperature = float(temperature)
+        # top_k beyond the vocabulary is "no truncation", not a trace error
+        self.top_k = min(int(top_k), bundle.cfg.vocab_size)
+        self._base_key = jax.random.PRNGKey(sample_seed)
+
         self.cache_dtype = resolve_pool_dtype(cache_dtype)
         self.pool = bundle.init_paged_cache(
             self.num_pages, self.page_size, dtype=self.cache_dtype
@@ -287,14 +414,26 @@ class ServeEngine:
         self.waiting: deque = deque()
         self.finished: Dict[int, Request] = {}
         self.steps = 0
+        self.preemptions = 0
+        self.trimmed_pages = 0
         self._req_counter = 0
 
         step = bundle.paged_serve_step
+        sampled = self.temperature > 0.0
+        sampler = (
+            _make_sampler(self.temperature, self.top_k, self._base_key)
+            if sampled else None
+        )
 
-        def _device_step(params, token, pos, pool, table):
-            logits, new_pool = step(params, token, pos, pool, table)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, new_pool
+        if sampled:
+            def _device_step(params, token, pos, pool, table, rids, idxs):
+                logits, new_pool = step(params, token, pos, pool, table)
+                return sampler(logits, rids, idxs), new_pool
+        else:
+            def _device_step(params, token, pos, pool, table):
+                logits, new_pool = step(params, token, pos, pool, table)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, new_pool
 
         # donate the pool: the update is a scatter of B tokens into a pool
         # that can dwarf device memory if double-buffered.
@@ -303,13 +442,21 @@ class ServeEngine:
         if self.chunked_prefill:
             pstep = bundle.paged_prefill_step
 
-            def _device_prefill(params, tokens, start, kv_len, last, pool,
-                                table):
-                logits, new_pool = pstep(
-                    params, tokens, start, kv_len, last, pool, table
-                )
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return nxt, new_pool
+            if sampled:
+                def _device_prefill(params, tokens, start, kv_len, last, pool,
+                                    table, rids, idxs):
+                    logits, new_pool = pstep(
+                        params, tokens, start, kv_len, last, pool, table
+                    )
+                    return sampler(logits, rids, idxs), new_pool
+            else:
+                def _device_prefill(params, tokens, start, kv_len, last, pool,
+                                    table):
+                    logits, new_pool = pstep(
+                        params, tokens, start, kv_len, last, pool, table
+                    )
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return nxt, new_pool
 
             self._prefill_fn = jax.jit(_device_prefill, donate_argnums=(5,))
 
@@ -323,7 +470,7 @@ class ServeEngine:
         Raises ValueError immediately for requests that could NEVER be
         served - ``len(prompt) + max_new_tokens`` beyond ``max_seq_len`` or
         beyond the pool's page capacity - instead of letting them wedge the
-        FCFS queue behind an unsatisfiable head forever.
+        queue behind an unsatisfiable head forever.
         """
         prompt = [int(t) for t in prompt]
         if not prompt:
@@ -350,93 +497,231 @@ class ServeEngine:
         self.waiting.append(r)
         return r
 
-    def _try_admit(self) -> None:
-        """FCFS admission: grant a free slot + the worst-case page count,
-        charging only NON-SHARED pages when the prefix cache is enabled
-        (matched prefix pages are referenced, not copied; refcount-0 cache
-        pages are evicted on demand to cover the remainder).
+    # ------------------------------------------------------- policy view --
 
-        Head-of-line blocking is intentional (simple fairness): if the head
-        request does not fit, nothing behind it is admitted this step.
-        """
-        while self.waiting:
-            r = self.waiting[0]
-            slot = next(
-                (i for i, s in enumerate(self._slots) if s is None), None
-            )
-            if slot is None:
-                return
-            nodes = []
-            if self.prefix_cache is not None:
-                # cap at len(prompt)-1: the last prompt position is always
-                # computed (its logits are the first generated token), and
-                # the final/partial page stays private (copy-on-write).
-                nodes = self.prefix_cache.match(
-                    r.prompt, max_tokens=len(r.prompt) - 1
-                )
-            need_new = r.pages_needed(self.page_size) - len(nodes)
-            if self.prefix_cache is not None:
-                short = need_new - self.allocator.free_pages
-                # Evict only when eviction actually covers the shortfall:
-                # otherwise admission fails regardless and the cache would
-                # be stripped of resident prefixes for nothing.
-                if 0 < short <= self.prefix_cache.evictable_pages:
-                    self.prefix_cache.evict(short)
-            pages = self.allocator.alloc(need_new)
-            if pages is None:
-                if nodes:
-                    self.prefix_cache.release(nodes)
-                return
-            self.waiting.popleft()
-            if self.prefix_cache is not None:
-                self.prefix_cache.record_match(
-                    r.prompt, nodes, max_tokens=len(r.prompt) - 1
-                )
-            r.state = RUNNING
-            r.slot = slot
-            r.pages = pages
-            r.prefix_nodes = nodes
-            r.cached_len = len(nodes) * self.page_size
-            r.admit_step = self.steps
-            self._slots[slot] = r
-            row = self.page_table[slot]
-            row[:] = NULL_PAGE
-            shared = [n.page for n in nodes]
-            row[: len(shared)] = shared
-            row[len(shared): len(shared) + len(pages)] = pages
-            if self.chunked_prefill:
-                r.prefill_pos = r.cached_len
-                r.cursor = len(r.prompt)     # decode starts after the prompt
-            else:
-                r.prefill_pos = len(r.prompt)  # unused in this mode
-                r.cursor = 0
-                self._next_token[slot] = r.prompt[0]
+    def _view(self, r: Request) -> RequestView:
+        if r.state == RUNNING and self.chunked_prefill:
+            rem_prefill = max(len(r.prompt) - r.prefill_pos, 0)
+        elif r.state == RUNNING:
+            rem_prefill = max(len(r.prompt) - 1 - r.cursor, 0)
+        else:
+            rem_prefill = len(r.prompt)
+        return RequestView(
+            req_id=r.req_id,
+            prompt_len=len(r.prompt),
+            remaining_prefill=rem_prefill,
+            remaining_decode=max(r.max_new_tokens - len(r.generated), 0),
+            submit_step=r.submit_step,
+            admit_step=r.admit_step if r.state == RUNNING else -1,
+            slot=r.slot,
+            pages_needed=r.pages_needed(self.page_size),
+            preempt_count=r.preempt_count,
+        )
 
-    def _finish(self, r: Request) -> None:
+    # --------------------------------------------------------- admission --
+
+    def _admit_one(self, r: Request) -> str:
+        """Try to place one waiting request; returns "admitted",
+        "no_slot", or "no_pages".  Grants a free slot + the worst-case
+        page count, charging only NON-SHARED pages when the prefix cache
+        is enabled (matched prefix pages are referenced, not copied;
+        refcount-0 cache pages are evicted on demand)."""
+        slot = next(
+            (i for i, s in enumerate(self._slots) if s is None), None
+        )
+        if slot is None:
+            return "no_slot"
+        nodes = []
         if self.prefix_cache is not None:
-            # Donate the full prompt pages (prefix-determined contents,
-            # chunk-exact convention) to the cache; keep/free the rest.
-            n_share = len(r.prompt) // self.page_size
-            row = self.page_table[r.slot]
+            # cap at len(prompt)-1: the last prompt position is always
+            # computed (its logits are the first generated token), and
+            # the final/partial page stays private (copy-on-write).
+            nodes = self.prefix_cache.match(
+                r.prompt, max_tokens=len(r.prompt) - 1
+            )
+        need_new = r.pages_needed(self.page_size) - len(nodes)
+        if self.prefix_cache is not None:
+            short = need_new - self.allocator.free_pages
+            # Evict only when eviction actually covers the shortfall:
+            # otherwise admission fails regardless and the cache would
+            # be stripped of resident prefixes for nothing.
+            if 0 < short <= self.prefix_cache.evictable_pages:
+                self.prefix_cache.evict(short)
+        pages = self.allocator.alloc(need_new)
+        if pages is None:
+            if nodes:
+                self.prefix_cache.release(nodes)
+            return "no_pages"
+        self.waiting.remove(r)
+        if self.prefix_cache is not None:
+            self.prefix_cache.record_match(
+                r.prompt, nodes, max_tokens=len(r.prompt) - 1
+            )
+        r.state = RUNNING
+        r.slot = slot
+        r.pages = pages
+        r.prefix_nodes = nodes
+        r.cached_len = len(nodes) * self.page_size
+        r.admit_step = self.steps
+        r.blocked_steps = 0
+        self._slots[slot] = r
+        row = self.page_table[slot]
+        row[:] = NULL_PAGE
+        shared = [n.page for n in nodes]
+        row[: len(shared)] = shared
+        row[len(shared): len(shared) + len(pages)] = pages
+        if self.chunked_prefill:
+            r.prefill_pos = r.cached_len
+            r.cursor = len(r.prompt)     # decode starts after the prompt
+        else:
+            r.prefill_pos = len(r.prompt)  # unused in this mode
+            r.cursor = 0
+            self._next_token[slot] = r.prompt[0]
+        return "admitted"
+
+    def _admit_pass(self) -> Optional[Request]:
+        """Admit everything the policy can place this step; returns the
+        first page-blocked candidate (the preemption trigger) or None.
+
+        Free pages never increase within a pass (admission only consumes;
+        eviction proceeds are immediately allocated), so a candidate that
+        failed on pages is skipped for the rest of the pass instead of
+        re-walking the prefix trie on every rescan."""
+        blocked: Optional[Request] = None
+        page_failed: set = set()
+        while self.waiting:
+            order = self._policy.admission_order(
+                [self._view(r) for r in self.waiting], now=self.steps
+            )
+            by_id = {r.req_id: r for r in self.waiting}
+            admitted = False
+            for v in order:
+                if v.req_id in page_failed:
+                    continue
+                r = by_id[v.req_id]
+                status = self._admit_one(r)
+                if status == "admitted":
+                    admitted = True
+                    break
+                if status == "no_slot":
+                    return blocked
+                page_failed.add(r.req_id)
+                if blocked is None:
+                    blocked = r
+                if self._policy.hol_blocking:
+                    # intentional head-of-line blocking: nothing behind
+                    # the blocked head is admitted this step
+                    return blocked
+            if not admitted:
+                return blocked
+        return blocked
+
+    def _try_admit(self) -> None:
+        blocked = self._admit_pass()
+        if blocked is None:
+            return
+        blocked.blocked_steps += 1
+        if (not self.preemption
+                or blocked.blocked_steps < self.preempt_patience):
+            return
+        if blocked.preempt_count > 0:
+            # Anti-thrash: a request that was itself paged out never
+            # triggers another preemption - it waits for running work to
+            # drain.  Without this, two requests that cannot coexist
+            # ping-pong preempting each other forever.
+            return
+        victim_view = self._policy.choose_victim(
+            [self._view(r) for r in self._slots if r is not None],
+            now=self.steps,
+        )
+        if victim_view is None:
+            return
+        victim = next(
+            (s for s in self._slots
+             if s is not None and s.req_id == victim_view.req_id), None
+        )
+        if victim is None:
+            return
+        # Preempt only when paging the victim out can actually unblock the
+        # starved candidate: its owned pages are freed or become
+        # refcount-0 cache pages, both reclaimable by admission.
+        avail = self.allocator.free_pages + len(victim.pages)
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable_pages
+        if avail < blocked.pages_needed(self.page_size):
+            return
+        self._preempt(victim)
+        blocked.blocked_steps = 0
+        self._admit_pass()
+
+    # -------------------------------------------------- page-out / finish --
+
+    def _release_slot(self, r: Request) -> None:
+        """Free the request's slot and pages.  With the prefix cache
+        enabled, its prefill-written FULL prompt pages are donated (their
+        contents are a pure function of the token prefix - the chunk-exact
+        convention; decode-written pages never qualify and are freed)."""
+        row = self.page_table[r.slot]
+        if self.prefix_cache is not None:
+            n_share = min(r.prefill_pos, len(r.prompt)) // self.page_size
             adopted = set(
                 self.prefix_cache.insert(
-                    r.prompt[: n_share * self.page_size], list(row[:n_share])
+                    r.prompt[: n_share * self.page_size],
+                    list(row[:n_share]),
                 )
             )
             if r.prefix_nodes:
                 self.prefix_cache.release(r.prefix_nodes)
-            leftover = [p for p in r.pages if p not in adopted]
-            self.allocator.free(leftover)
+            self.allocator.free([p for p in r.pages if p not in adopted])
         else:
             self.allocator.free(r.pages)
-        self.page_table[r.slot][:] = NULL_PAGE
+        row[:] = NULL_PAGE
         self._slots[r.slot] = None
         r.pages = []
         r.prefix_nodes = []
         r.slot = -1
+
+    def _preempt(self, r: Request) -> None:
+        """Page a running request out: donate/free its pages, record its
+        generated tokens for replay, and re-queue it at the BACK of the
+        waiting queue (a paged-out straggler yields its seniority)."""
+        self._release_slot(r)
+        # A twice-preempted request may be preempted mid-replay: keep the
+        # not-yet-replayed recorded suffix (generated[i] == replay[i]
+        # bitwise while replaying, so this is a pure extension).
+        r.replay = r.generated + r.replay[len(r.generated):]
+        r.generated = []
+        r.state = WAITING
+        r.preempt_count += 1
+        r.preempt_step = self.steps
+        r.prefill_pos = 0
+        r.cursor = 0
+        r.cached_len = 0
+        r.blocked_steps = 0
+        self.preemptions += 1
+        self.waiting.append(r)
+
+    def _finish(self, r: Request) -> None:
+        self._release_slot(r)
         r.state = FINISHED
         r.finish_step = self.steps
         self.finished[r.req_id] = r
+
+    # ---------------------------------------------------------- trimming --
+
+    def _maybe_trim(self) -> None:
+        """Background watermark trim: when live pages exceed the high
+        watermark, evict refcount-0 cache pages down toward the low one.
+        The probe is O(1) (allocator counter + the cached
+        ``evictable_pages``), so this runs every step for free."""
+        if self._trim_high_pages is None or self.prefix_cache is None:
+            return
+        if self.allocator.live_pages <= self._trim_high_pages:
+            return
+        excess = self.allocator.live_pages - self._trim_low_pages
+        n = min(excess, self.prefix_cache.evictable_pages)
+        if n > 0:
+            self.trimmed_pages += self.prefix_cache.evict(n)
 
     # -------------------------------------------------------------- step --
 
@@ -448,50 +733,86 @@ class ServeEngine:
     def idle(self) -> bool:
         return not self.waiting and self.num_running == 0
 
-    def _run_prefill_chunk(self) -> Optional[Request]:
-        """One chunk of the oldest still-prefilling request (FCFS)."""
-        cands = [
-            r for r in self._slots
+    @staticmethod
+    def _sample_rows(pairs, n: int):
+        """(req_id, token index) int32 rows for the jitted sampler; rows
+        with ``pairs[i] is None`` (dead) get zeros - their samples are
+        never read."""
+        rids = np.zeros((n,), np.int32)
+        idxs = np.zeros((n,), np.int32)
+        for i in range(min(len(pairs), n)):
+            if pairs[i] is not None:
+                rids[i], idxs[i] = pairs[i]
+        return jnp.asarray(rids), jnp.asarray(idxs)
+
+    def _run_prefill(self, plan) -> None:
+        """One BATCHED prefill call: each planned request contributes one
+        chunk row (its own start offset, valid length, and page-table
+        row); rows and tails are padded to the static (prefill_batch,
+        prefill_chunk) grid and pad positions write to the null page."""
+        by_id = {
+            r.req_id: r for r in self._slots
             if r is not None and r.prefill_pos < len(r.prompt)
-        ]
-        if not cands:
-            return None
-        r = min(cands, key=lambda x: (x.admit_step, x.req_id))
-        c0 = r.prefill_pos
-        real = min(self.prefill_chunk, len(r.prompt) - c0)
-        chunk = r.prompt[c0: c0 + real]
-        chunk = chunk + [0] * (self.prefill_chunk - real)  # pad -> null page
-        first, self.pool = self._prefill_fn(
+        }
+        rows = []
+        for rid, grant in plan:
+            r = by_id.get(rid)
+            if r is None or grant < 1 or len(rows) >= self.prefill_batch:
+                continue
+            rows.append((r, min(grant, len(r.prompt) - r.prefill_pos)))
+        if not rows:
+            return
+        pb, cs = self.prefill_batch, self.prefill_chunk
+        tokens = np.zeros((pb, cs), np.int32)
+        start = np.zeros((pb,), np.int32)
+        kv_len = np.zeros((pb,), np.int32)
+        last = np.zeros((pb,), np.int32)
+        table = np.full((pb, self.max_pages_per_seq), NULL_PAGE, np.int32)
+        for i, (r, real) in enumerate(rows):
+            c0 = r.prefill_pos
+            tokens[i, :real] = r.prompt[c0: c0 + real]
+            start[i] = c0
+            kv_len[i] = c0 + real
+            last[i] = real - 1
+            table[i] = self.page_table[r.slot]
+        args = [
             self.params,
-            jnp.asarray([chunk], jnp.int32),
-            jnp.asarray([c0], jnp.int32),
-            jnp.asarray([c0 + real], jnp.int32),
-            jnp.asarray([real - 1], jnp.int32),
-            self.pool,
-            jnp.asarray(self.page_table[r.slot: r.slot + 1]),
-        )
-        r.prefill_pos = c0 + real
-        if r.prefill_pos >= len(r.prompt):
-            # this chunk contained the last prompt token; its logits row is
-            # the first generated token - TTFT is now, not after the prompt
-            # has been teacher-forced token-by-token.
-            tok = int(np.asarray(first)[0])
-            r.generated.append(tok)
-            r.first_token_step = self.steps
-            self._next_token[r.slot] = tok
-            if len(r.generated) >= r.max_new_tokens:
-                self._finish(r)
-        return r
+            jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(kv_len),
+            jnp.asarray(last), self.pool, jnp.asarray(table),
+        ]
+        if self.temperature > 0.0:
+            args.extend(self._sample_rows(
+                [(r.req_id, len(r.generated)) for r, _ in rows], pb
+            ))
+        first, self.pool = self._prefill_fn(*args)
+        first = np.asarray(first)
+        for i, (r, real) in enumerate(rows):
+            r.prefill_pos += real
+            if r.prefill_pos >= len(r.prompt):
+                # this chunk contained the last prompt token; its logits
+                # row is the first generated token - TTFT is now.
+                tok = int(first[i])
+                r.generated.append(tok)
+                if r.first_token_step < 0:
+                    r.first_token_step = self.steps
+                # resume replay: feed the recorded emission (bit-equal to
+                # the recomputed token) so the stream stays consistent.
+                self._next_token[r.slot] = (
+                    r.replay[0] if r.replay else tok
+                )
+                if len(r.generated) >= r.max_new_tokens:
+                    self._finish(r)
 
     def step(self) -> int:
-        """Admit what fits, run one prefill chunk + ONE batched decode
-        step, advance cursors.
+        """Trim, admit what the policy places, run the policy's batched
+        prefill plan + ONE batched decode step, advance cursors.
 
         Returns the number of requests that were live this step.  ``steps``
         advances on every call (it is the engine's scheduling clock, used
         for arrival/admission timestamps); the device calls are skipped
         when no request needs them.
         """
+        self._maybe_trim()
         self._try_admit()
         live = [r for r in self._slots if r is not None]
         if not live:
@@ -500,7 +821,22 @@ class ServeEngine:
         n_live = len(live)
 
         if self.chunked_prefill:
-            self._run_prefill_chunk()
+            prefilling = [
+                r for r in self._slots
+                if r is not None and r.prefill_pos < len(r.prompt)
+            ]
+            n_decode = n_live - len(prefilling)
+            if prefilling:
+                plan = self._policy.plan_prefill(
+                    [self._view(r) for r in prefilling],
+                    n_decode=n_decode,
+                    budget=self.step_token_budget,
+                    chunk=self.prefill_chunk,
+                    page_size=self.page_size,
+                    max_rows=self.prefill_batch,
+                )
+                if plan:
+                    self._run_prefill(plan)
             dec = [
                 r for r in self._slots
                 if r is not None and r.prefill_pos >= len(r.prompt)
@@ -523,28 +859,35 @@ class ServeEngine:
         for r in dec:
             pos[r.slot] = r.cursor
 
-        nxt, self.pool = self._step_fn(
-            self.params,
-            jnp.asarray(tokens),
-            jnp.asarray(pos),
-            self.pool,
+        args = [
+            self.params, jnp.asarray(tokens), jnp.asarray(pos), self.pool,
             jnp.asarray(table),
-        )
+        ]
+        if self.temperature > 0.0:
+            pairs = [None] * self.max_batch
+            for r in dec:
+                pairs[r.slot] = (r.req_id, len(r.generated))
+            args.extend(self._sample_rows(pairs, self.max_batch))
+        nxt, self.pool = self._step_fn(*args)
         nxt = np.asarray(nxt)
 
-        self.steps += 1
         for r in dec:
             p = r.cursor
             r.cursor += 1
             if not self.chunked_prefill and p + 1 < len(r.prompt):
                 self._next_token[r.slot] = r.prompt[p + 1]   # teacher forcing
                 continue
-            r.generated.append(int(nxt[r.slot]))
+            gen_idx = len(r.generated)
+            tok = int(nxt[r.slot])
+            r.generated.append(tok)
             if r.first_token_step < 0:
-                r.first_token_step = self.steps - 1
-            self._next_token[r.slot] = nxt[r.slot]
+                r.first_token_step = self.steps
+            self._next_token[r.slot] = (
+                r.replay[gen_idx] if gen_idx < len(r.replay) else tok
+            )
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
+        self.steps += 1
         return n_live
 
     def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, Request]:
@@ -573,6 +916,12 @@ class ServeEngine:
             "page_size": self.page_size,
             "pool_dtype": pool_dtype_name(self.cache_dtype),
             "chunked_prefill": self.chunked_prefill,
+            "scheduler": self._policy.name,
+            "prefill_batch": self.prefill_batch,
+            "step_token_budget": self.step_token_budget,
+            "preemptions": self.preemptions,
+            "trimmed_pages": self.trimmed_pages,
+            "temperature": self.temperature,
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

@@ -1,0 +1,280 @@
+"""Scheduling policies for the paged-KV serving engine.
+
+The :class:`~repro.runtime.engine.ServeEngine` owns the *mechanism* -
+slots, pages, the two shape-static device calls, preemption plumbing -
+and delegates every *decision* to a :class:`SchedulerPolicy`:
+
+  * **admission order**: which waiting requests to try to place, and
+    whether a request that does not fit blocks everything behind it
+    (head-of-line blocking) or is skipped;
+  * **prefill plan**: which still-prefilling requests' prompt chunks enter
+    this step's batched prefill call, and how many tokens each gets,
+    under a global per-step token budget (decode rows are charged first -
+    one token per decode-ready request - and the remainder is the prefill
+    budget);
+  * **preemption victim**: which running request to page out when an
+    admission has been page-starved past the engine's patience.
+
+Policies are **pure host-side functions over immutable views**
+(:class:`RequestView`), never over live engine state - which is what makes
+them unit-testable in isolation (tests/test_scheduler.py exercises
+ordering, budget arithmetic, starvation and fairness without building a
+model or touching a device).
+
+Why swapping policies is safe: the chunk-exact prefill convention
+(``core.pasa.blocked_attention(chunk_exact=True)``) makes every request's
+prefill output - and the K/V bytes written to its pages - bit-invariant to
+the chunk schedule, and a decode step reads only the request's own page
+-table row, so per-request token streams are **bit-identical under any
+policy, any chunk interleaving, any preemption point** (asserted across
+pool dtypes in tests/test_scheduler.py).  Scheduling here changes latency
+distribution, never output bits - the numerical-reproducibility-under-
+batching property arXiv:2405.02803 shows mainstream attention stacks lack.
+
+Three concrete policies:
+
+  * :class:`FCFSPolicy` (``"fcfs"``, default): strict arrival order with
+    intentional head-of-line blocking; prefill chunks granted greedily to
+    the oldest-admitted requests first.  With ``prefill_batch=1`` and no
+    token budget this reproduces the pre-refactor engine schedule exactly.
+  * :class:`SJFPolicy` (``"sjf"``): shortest-job-first - admission skips
+    blocked candidates (no head-of-line blocking) and prefers short
+    prompts; prefill chunks go to the requests closest to finishing their
+    prompt.  An aging guard promotes any request that has waited longer
+    than ``patience`` steps to strict FIFO, bounding starvation.
+  * :class:`MixedPolicy` (``"mixed"``): Sarathi-style token-budget mixing -
+    FCFS admission, but the per-step prefill budget is dealt round-robin
+    in page-size quanta across ALL prefilling requests, so a burst of
+    long prompts makes progress in parallel instead of serially.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestView:
+    """Immutable scheduling-relevant snapshot of one request.
+
+    ``remaining_prefill`` counts prompt tokens whose K/V is not yet
+    written (0 == decode phase); ``remaining_decode`` counts tokens still
+    to generate.  ``slot``/``admit_step`` are -1 while waiting.
+    """
+
+    req_id: int
+    prompt_len: int
+    remaining_prefill: int
+    remaining_decode: int
+    submit_step: int
+    admit_step: int = -1
+    slot: int = -1
+    pages_needed: int = 0
+    preempt_count: int = 0
+
+
+# (req_id, token allowance this step).  Allowances are page multiples
+# unless they cover the request's prompt tail - the alignment rule that
+# keeps chunk starts page-aligned (the quantized-pool write contract,
+# models/attention.py).
+PrefillGrant = Tuple[int, int]
+
+
+def _aligned(allow: int, remaining: int, page_size: int) -> int:
+    """Clip an allowance to the page-alignment rule."""
+    if allow >= remaining:
+        return remaining          # the tail may be ragged; it ends the prompt
+    return allow - allow % page_size
+
+
+class SchedulerPolicy:
+    """Decision interface; subclasses override the three ordering hooks.
+
+    The shared :meth:`plan_prefill` implements greedy full-chunk grants in
+    :meth:`prefill_order`; :class:`MixedPolicy` replaces it with fair
+    round-robin quanta.
+    """
+
+    name = "base"
+    #: True: the first waiting request that fails admission blocks every
+    #: request behind it this step (simple FIFO fairness).  False: skip it
+    #: and try the next candidate.
+    hol_blocking = True
+
+    # ------------------------------------------------------------ hooks --
+
+    def admission_order(
+        self, waiting: Sequence[RequestView], now: int = 0
+    ) -> List[RequestView]:
+        """Waiting requests in the order admission should try them.
+
+        The default preserves the given (queue) order - NOT submit_step
+        order, so a preempted request re-queued at the back stays at the
+        back despite its old submit timestamp."""
+        return list(waiting)
+
+    def prefill_order(
+        self, prefilling: Sequence[RequestView]
+    ) -> List[RequestView]:
+        """Still-prefilling requests in chunk-grant priority order."""
+        return sorted(prefilling, key=lambda v: (v.admit_step, v.req_id))
+
+    def choose_victim(
+        self, running: Sequence[RequestView], now: int = 0
+    ) -> Optional[RequestView]:
+        """Preemption victim among RUNNING requests (None = do not
+        preempt).  Default: the youngest-admitted request - FCFS
+        seniority; the newest arrival is the one paged out."""
+        cands = [v for v in running if v.admit_step < now]
+        if not cands:
+            return None
+        return max(cands, key=lambda v: (v.admit_step, v.req_id))
+
+    # ------------------------------------------------------------- plan --
+
+    def plan_prefill(
+        self,
+        prefilling: Sequence[RequestView],
+        *,
+        n_decode: int,
+        budget: Optional[int],
+        chunk: int,
+        page_size: int,
+        max_rows: int,
+    ) -> List[PrefillGrant]:
+        """Token grants for this step's batched prefill call.
+
+        Greedy: walk :meth:`prefill_order`, give each request
+        ``min(chunk, remaining)`` tokens until the budget (minus the
+        decode rows' one token each) or the row cap runs out.  ``budget``
+        None = unlimited.
+        """
+        left = None if budget is None else max(budget - n_decode, 0)
+        plan: List[PrefillGrant] = []
+        for v in self.prefill_order(prefilling):
+            if len(plan) >= max_rows or (left is not None and left <= 0):
+                break
+            allow = min(chunk, v.remaining_prefill)
+            if left is not None and allow > left:
+                allow = _aligned(left, v.remaining_prefill, page_size)
+            if allow <= 0:
+                continue
+            plan.append((v.req_id, allow))
+            if left is not None:
+                left -= allow
+        return plan
+
+
+class FCFSPolicy(SchedulerPolicy):
+    """First-come-first-served with head-of-line blocking (the
+    bit-preserving default: ``prefill_batch=1`` + no budget reproduces the
+    pre-refactor one-chunk-per-step schedule)."""
+
+    name = "fcfs"
+    hol_blocking = True
+
+
+class SJFPolicy(SchedulerPolicy):
+    """Shortest-job-first prefill, with an anti-starvation aging guard.
+
+    Admission prefers short prompts and skips candidates that do not fit
+    (no head-of-line blocking); requests that have waited longer than
+    ``patience`` steps are promoted to strict FIFO ahead of every
+    non-starved candidate, so a long prompt is delayed, never starved
+    (tests/test_scheduler.py::test_sjf_aging_prevents_starvation).
+    """
+
+    name = "sjf"
+    hol_blocking = False
+
+    def __init__(self, patience: int = 64):
+        if patience < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
+        self.patience = int(patience)
+
+    def admission_order(self, waiting, now: int = 0):
+        starved = [v for v in waiting if now - v.submit_step >= self.patience]
+        fresh = [v for v in waiting if now - v.submit_step < self.patience]
+        starved.sort(key=lambda v: (v.submit_step, v.req_id))
+        fresh.sort(key=lambda v: (v.prompt_len, v.req_id))
+        return starved + fresh
+
+    def prefill_order(self, prefilling):
+        return sorted(
+            prefilling, key=lambda v: (v.remaining_prefill, v.req_id)
+        )
+
+    def choose_victim(self, running, now: int = 0):
+        """The straggler: most total work remaining."""
+        cands = [v for v in running if v.admit_step < now]
+        if not cands:
+            return None
+        return max(
+            cands,
+            key=lambda v: (
+                v.remaining_prefill + v.remaining_decode, v.req_id
+            ),
+        )
+
+
+class MixedPolicy(SchedulerPolicy):
+    """Sarathi-style token-budget mixing: FCFS admission, fair-share
+    prefill.  The per-step prefill budget (global budget minus one token
+    per decode row) is dealt round-robin in ``page_size`` quanta across
+    every prefilling request, so concurrent long prompts advance together
+    - each step still issues ONE batched prefill call; the fairness is in
+    how the chunk tokens are split across its rows."""
+
+    name = "mixed"
+    hol_blocking = True
+
+    def plan_prefill(
+        self, prefilling, *, n_decode, budget, chunk, page_size, max_rows
+    ):
+        order = self.prefill_order(prefilling)[:max_rows]
+        if not order:
+            return []
+        left = None if budget is None else max(budget - n_decode, 0)
+        alloc = {v.req_id: 0 for v in order}
+        remaining = {v.req_id: v.remaining_prefill for v in order}
+        progress = True
+        while progress and (left is None or left > 0):
+            progress = False
+            for v in order:
+                rid = v.req_id
+                cap = min(remaining[rid], chunk - alloc[rid])
+                if cap <= 0:
+                    continue
+                quantum = min(page_size, cap)
+                # a sub-page grant is legal only as the prompt tail
+                if quantum < page_size and quantum < remaining[rid]:
+                    continue
+                if left is not None and quantum > left:
+                    continue
+                alloc[rid] += quantum
+                remaining[rid] -= quantum
+                if left is not None:
+                    left -= quantum
+                progress = True
+        return [(v.req_id, alloc[v.req_id]) for v in order
+                if alloc[v.req_id] > 0]
+
+
+POLICIES = {"fcfs": FCFSPolicy, "sjf": SJFPolicy, "mixed": MixedPolicy}
+
+
+def get_scheduler(policy) -> SchedulerPolicy:
+    """Accept a policy name, class, or instance; return an instance."""
+    if isinstance(policy, SchedulerPolicy):
+        return policy
+    if isinstance(policy, type) and issubclass(policy, SchedulerPolicy):
+        return policy()
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError as e:
+            raise ValueError(
+                f"unknown scheduler {policy!r}; have {sorted(POLICIES)}"
+            ) from e
+    raise TypeError(f"scheduler must be a name or SchedulerPolicy: {policy!r}")

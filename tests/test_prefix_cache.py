@@ -303,6 +303,43 @@ def test_prefill_stale_pages_cannot_leak(rng):
         np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
 
 
+def test_batched_rows_and_dead_pads_match_single_request(rng):
+    """The engine's batched multi-request prefill contract at the kernel
+    level: rows of one (B, CS) call belonging to DIFFERENT requests (own
+    start / kv_len / page-table row) reproduce their B=1 single-request
+    calls bit-for-bit, and a fully-dead pad row (kv_len == 0, all-null
+    table) emits exact zeros - on the Pallas kernel AND the XLA fallback
+    (``finalize_state(zero_empty_rows=True)`` aligns the latter)."""
+    b, h, kvh, cs, d, page, mp = 2, 4, 2, 32, 32, 16, 6
+    q = jax.random.normal(jax.random.fold_in(rng, 9),
+                          (b + 1, h, cs, d), jnp.float32) + 1.0
+    kc, vc, kp, vp, table, start, kv_len = _prefill_setup(
+        rng, b, kvh, cs, d, page, mp, [16, 0]
+    )
+    table3 = jnp.concatenate(
+        [table, jnp.full((1, mp), NULL_PAGE, jnp.int32)]
+    )
+    start3 = jnp.concatenate([start, jnp.zeros((1,), jnp.int32)])
+    kvl3 = jnp.concatenate([kv_len, jnp.zeros((1,), jnp.int32)])
+    for kw in (dict(use_kernel=False), dict(block_q=16, **I)):
+        batched = K.pasa_paged_prefill(
+            q, kp, vp, table3, start3, kvl3, beta=BETA, policy=FP16, **kw
+        )
+        np.testing.assert_array_equal(
+            np.asarray(batched[b], np.float32), 0.0, err_msg=str(kw)
+        )
+        for bi in range(b):
+            solo = K.pasa_paged_prefill(
+                q[bi:bi + 1], kp, vp, table[bi:bi + 1],
+                start[bi:bi + 1], kv_len[bi:bi + 1],
+                beta=BETA, policy=FP16, **kw
+            )
+            np.testing.assert_array_equal(
+                np.asarray(batched[bi]), np.asarray(solo[0]),
+                err_msg=str((kw, bi)),
+            )
+
+
 # ---------------------------------------------------------- engine-level --
 
 @pytest.fixture(scope="module")
