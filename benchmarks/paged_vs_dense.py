@@ -44,6 +44,7 @@ from repro.runtime import (
     init_paged_pool,
     paged_bytes,
     quantize_kv_page,
+    sharded_pool_device_bytes,
 )
 
 PROMPTS = (32, 8, 16, 4)    # ragged arrival mix
@@ -341,6 +342,40 @@ def numerics_rows():
     return out
 
 
+def per_device_hbm_report():
+    """Per-device pool HBM under the kv-head-sharded model-axis layout
+    (runtime/paged_cache.pool_shardings), evaluated ANALYTICALLY at the
+    qwen2-7b full-config pool geometry so the row is meaningful on a
+    single-host CPU run.  The measured counterpart (real 8-device pool,
+    ``paged_bytes_per_device``) lives in the scheduler_burst multidev row
+    (benchmarks/BENCH_serving.json)."""
+    cfg = get_config("qwen2-7b")
+    num_pages, page = 512, cfg.attention.block_kv
+    rows = []
+    for dtype in ("bf16", "int8"):
+        base = sharded_pool_device_bytes(
+            cfg.n_layers, num_pages, page, cfg.kv_dim, dtype,
+            cfg.n_kv_heads, 1,
+        )
+        per = {
+            m: sharded_pool_device_bytes(
+                cfg.n_layers, num_pages, page, cfg.kv_dim, dtype,
+                cfg.n_kv_heads, m,
+            )
+            for m in (1, 2, 4)
+        }
+        scaling = " | ".join(
+            f"model={m}: {b / 1e6:.1f} MB/dev ({base / b:.1f}x)"
+            for m, b in per.items()
+        )
+        rows.append((
+            f"paged_pool_per_device_hbm_{dtype}", 0.0,
+            f"{scaling} (qwen2-7b, {num_pages} pages x {page} tok, "
+            f"kv heads {cfg.n_kv_heads} shard over the model axis)",
+        ))
+    return rows
+
+
 def report():
     cfg = get_config("qwen3-4b").reduced()
     bundle = build(cfg)
@@ -361,7 +396,7 @@ def report():
         ("paged_hbm_saving", 0.0,
          f"dense/paged cache bytes = {ratio:.2f}x "
          f"(ragged prompts {PROMPTS}, gen {GEN}, page {PAGE})"),
-    ] + kv_dtype_report()
+    ] + per_device_hbm_report() + kv_dtype_report()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Bursty-arrival scheduling: TTFT under FCFS / SJF / mixed policies,
-batched vs B=1 multi-request prefill, and preempt-to-page-out.
+batched vs B=1 multi-request prefill, preempt-to-page-out, and the
+model-axis-sharded multi-device serve.
 
 A staggered burst (one request submitted per engine step, mixed prompt
 lengths, more requests than batch slots) is served through the paged
@@ -20,11 +21,26 @@ multi-request prefill advances every admitted prompt each step and
 strictly reduces mean TTFT under the same arrivals (asserted in
 tests/test_scheduler.py; this benchmark records the trajectory).
 Outputs are bit-identical across every row - scheduling is latency-only.
+
+The multi-device row (``scheduler_burst/multidev_2x4``) re-runs the same
+staggered burst through :class:`repro.runtime.EngineReplicaGroup` on a
+``2x4`` host-device mesh - 2 data-parallel engine replicas, each pool
+kv-head-sharded over 4 model devices - in a SUBPROCESS (XLA pins the
+host device count at backend init, so the 8-device run cannot share this
+interpreter).  It records mean/worst TTFT, drain steps, and the
+measured per-device pool HBM vs the replica's global pool (the
+~1/model-axis-size acceptance metric), and asserts inside the subprocess
+that the sharded streams are bit-identical to a 1-device serve of the
+same burst.
 """
 
 from __future__ import annotations
 
+import json
 import math
+import os
+import subprocess
+import sys
 import time
 from collections import deque
 
@@ -122,6 +138,122 @@ def _metrics():
     return _CACHE
 
 
+# --------------------------------------------------- multi-device burst --
+
+MULTIDEV_MESH = (2, 4)               # (data replicas, model pool shards)
+
+
+def _multidev_main():
+    """Subprocess body (runs with 8 forced host devices): the staggered
+    burst on a 2x4 mesh vs 1 device, bit-equality asserted, JSON metrics
+    on stdout."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.models.model_zoo import build
+    from repro.runtime import (
+        EngineReplicaGroup, ServeEngine, paged_bytes, paged_bytes_per_device,
+    )
+
+    n_data, n_model = MULTIDEV_MESH
+    cfg = get_config("qwen2-7b").reduced()
+    # the reduced() preset caps kv heads at 2; the sharding row needs a
+    # model-axis-divisible head count (4 kv heads over model=4)
+    cfg = dataclasses.replace(cfg, n_heads=8, n_kv_heads=n_model)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in PROMPTS]
+    total = max(len(p) for p in prompts) + GEN
+    per_replica = math.ceil(len(prompts) / n_data)
+    num_pages = 1 + per_replica * math.ceil(total / PAGE)
+    kw = dict(
+        max_batch=BATCH, num_pages=num_pages, page_size=PAGE,
+        max_seq_len=total, prefill_chunk=CHUNK,
+    )
+
+    def burst(eng):
+        pending = deque(
+            (eng_steps0 + i * ARRIVAL_GAP, p)
+            for i, p in enumerate(prompts)
+        )
+        reqs = []
+        while pending or not eng.idle:
+            now = max(
+                e.steps for e in getattr(eng, "engines", [eng])
+            )
+            while pending and pending[0][0] <= now:
+                reqs.append(eng.submit(list(pending.popleft()[1]), GEN))
+            eng.step()
+        return reqs
+
+    eng_steps0 = 0
+    single = ServeEngine(bundle, params, **kw)
+    ref = [r.generated for r in burst(single)]
+
+    mesh = make_mesh(MULTIDEV_MESH, ("data", "model"))
+    grp = EngineReplicaGroup(bundle, params, mesh, **kw)
+    reqs = burst(grp)
+    got = [r.generated for r in reqs]
+    assert got == ref, "sharded burst diverged from the 1-device serve"
+
+    ttfts = [r.first_token_step - r.submit_step + 1 for r in reqs]
+    pool = grp.engines[0].pool
+    print(json.dumps({
+        "mean_ttft_steps": float(np.mean(ttfts)),
+        "max_ttft_steps": int(np.max(ttfts)),
+        "drain_steps": int(max(e.steps for e in grp.engines)),
+        "replicas": n_data,
+        "model_shards": n_model,
+        "pool_bytes_per_replica": paged_bytes(pool),
+        "pool_bytes_per_device": paged_bytes_per_device(pool),
+        "bit_identical_to_1dev": True,
+    }))
+
+
+_MULTIDEV_CACHE = "unset"
+
+
+def multidev_metrics():
+    """Run :func:`_multidev_main` in an 8-host-device subprocess; None if
+    the run fails (keeps run.py total on constrained hosts)."""
+    global _MULTIDEV_CACHE
+    if _MULTIDEV_CACHE != "unset":
+        return _MULTIDEV_CACHE
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             os.path.join(os.path.dirname(__file__), "..")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)
+        ),
+    )
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.scheduler_burst",
+             "--multidev"],
+            env=env, capture_output=True, text=True, timeout=1800,
+        )
+        if proc.returncode == 0:
+            _MULTIDEV_CACHE = json.loads(proc.stdout.strip().splitlines()[-1])
+        else:
+            # surface the failure: a broken bit-identity assertion must
+            # not be indistinguishable from a constrained host
+            print(
+                "[scheduler_burst multidev subprocess failed "
+                f"(rc {proc.returncode})]\n" + proc.stderr[-2000:],
+                file=sys.stderr,
+            )
+            _MULTIDEV_CACHE = None
+    except Exception as e:
+        print(f"[scheduler_burst multidev subprocess error: {e}]",
+              file=sys.stderr)
+        _MULTIDEV_CACHE = None
+    return _MULTIDEV_CACHE
+
+
 def report():
     """CSV rows for benchmarks/run.py."""
     rows = []
@@ -136,6 +268,18 @@ def report():
             f"(worst {m['max_ttft_steps']}) | drain {m['drain_steps']} "
             f"steps | {m['tokens_per_s']:.0f} tok/s | "
             f"{base / m['mean_ttft_steps']:.2f}x vs fcfs_b1",
+        ))
+    md = multidev_metrics()
+    if md is not None:
+        ratio = md["pool_bytes_per_replica"] / md["pool_bytes_per_device"]
+        rows.append((
+            "scheduler_burst_multidev_2x4", 0.0,
+            f"mean TTFT {md['mean_ttft_steps']:.1f} steps "
+            f"(worst {md['max_ttft_steps']}) | "
+            f"{md['replicas']} replicas x model={md['model_shards']} | "
+            f"per-device pool {md['pool_bytes_per_device'] / 1e3:.1f} kB = "
+            f"1/{ratio:.1f} of the replica pool | streams bit-identical "
+            "to the 1-device serve",
         ))
     return rows
 
@@ -162,9 +306,29 @@ def serving_rows():
                 "arrival_gap": ARRIVAL_GAP,
             },
         })
+    md = multidev_metrics()
+    if md is not None:
+        out.append({
+            "name": "scheduler_burst/multidev_2x4",
+            "mesh": {"data": md["replicas"], "model": md["model_shards"]},
+            "mean_ttft_steps": md["mean_ttft_steps"],
+            "max_ttft_steps": md["max_ttft_steps"],
+            "drain_steps": md["drain_steps"],
+            "pool_bytes_per_replica": md["pool_bytes_per_replica"],
+            "pool_bytes_per_device": md["pool_bytes_per_device"],
+            "bit_identical_to_1dev": md["bit_identical_to_1dev"],
+            "workload": {
+                "prompts": list(PROMPTS), "gen": GEN, "page": PAGE,
+                "chunk": CHUNK, "batch": BATCH,
+                "arrival_gap": ARRIVAL_GAP,
+            },
+        })
     return out
 
 
 if __name__ == "__main__":
-    for name, us, derived in report():
-        print(f"{name},{us:.1f},{derived}")
+    if "--multidev" in sys.argv:
+        _multidev_main()
+    else:
+        for name, us, derived in report():
+            print(f"{name},{us:.1f},{derived}")

@@ -41,6 +41,8 @@ def ring_pasa_attention(
     policy: PrecisionPolicy = FP16,
     block_kv: int = 128,
     causal: bool = False,
+    kv_len: Optional[jnp.ndarray] = None,
+    q_offset: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Sequence-parallel blocked attention inside shard_map.
 
@@ -50,6 +52,21 @@ def ring_pasa_attention(
       axis_name: mesh axis the sequence is sharded over.
       causal: causal over *global* positions; shard r owns rows
         [r*S1_local, (r+1)*S1_local) and cols [r*S2_local, ...).
+      kv_len: optional per-batch valid GLOBAL column count (columns at or
+        beyond it are masked out on every device) - the ragged-tail
+        convention of the paged serving stack, where gathered pages run
+        past the live sequence.  Shape: broadcastable against the lead
+        dims of q/k with trailing (S1, s2) added, e.g. ``(B, 1, 1, 1)``
+        for (B, H, S, D) inputs (callers with a flat (B,) pass
+        ``kv_len[:, None, None, None]``).  Masked columns are excluded
+        from both the softmax and the ring blocks' pseudo-averages: K/V
+        garbage past kv_len must be zeroed by the caller so the GEMM-form
+        shift stays finite (the recovery identity holds for any shift
+        vector, so the zeros only alter rounding, not the exact softmax).
+      q_offset: optional per-batch GLOBAL row offset of the local query
+        shard's row 0 (same broadcast contract, trailing (S1, s2)); used
+        with ``causal=True`` when the query block sits at a dynamic
+        position - the chunked-prefill case.
 
     Must be called under shard_map with q/k/v sharded on the seq dim of
     ``axis_name`` and replicated output semantics handled by the caller.
@@ -84,7 +101,14 @@ def ring_pasa_attention(
     state = pasa_lib.init_state(qs.shape[:-1], d, policy)
     perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
 
-    q_rows = jnp.arange(s1, dtype=jnp.int32) + my * s1 if causal else None
+    masked = causal or kv_len is not None
+    q_rows = None
+    if masked:
+        q_rows = jnp.arange(s1, dtype=jnp.int32) + my * s1
+        if q_offset is not None:
+            q_rows = q_offset + q_rows[:, None]        # (..., S1, 1)
+        else:
+            q_rows = q_rows[:, None]
 
     def ring_step(step, carry):
         state, k_cur, v_cur = carry
@@ -98,7 +122,9 @@ def ring_pasa_attention(
         state_new = _ring_sweep(
             state, qs, k_cur, v_cur, inva=inva, policy=policy,
             block_kv=block_kv, post_scale=post_scale,
-            q_rows=q_rows, col_base=src * s2_loc if causal else None,
+            q_rows=q_rows if masked else None,
+            col_base=src * s2_loc if masked else None,
+            causal=causal, kv_len=kv_len,
         )
         return (state_new, k_nxt, v_nxt)
 
@@ -107,7 +133,7 @@ def ring_pasa_attention(
 
 
 def _ring_sweep(state, q, k_sh, v, *, inva, policy, block_kv, post_scale,
-                q_rows, col_base):
+                q_rows, col_base, causal=True, kv_len=None):
     d = q.shape[-1]
     n_blocks = k_sh.shape[-2] // block_kv
     kb = jnp.moveaxis(k_sh.reshape(*k_sh.shape[:-2], n_blocks, block_kv, d), -3, 0)
@@ -119,7 +145,11 @@ def _ring_sweep(state, q, k_sh, v, *, inva, policy, block_kv, post_scale,
         mask = None
         if q_rows is not None:
             cols = col_base + j * block_kv + jnp.arange(block_kv, dtype=jnp.int32)
-            mask = q_rows[:, None] >= cols[None, :]
+            if causal:
+                mask = q_rows >= cols[None, :]
+            if kv_len is not None:
+                valid = cols[None, :] < kv_len
+                mask = valid if mask is None else jnp.logical_and(mask, valid)
         st = pasa_lib.update_state(
             st, q, kj, vj, inva=inva, policy=policy, mask=mask,
             post_scale=post_scale,

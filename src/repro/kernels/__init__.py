@@ -5,7 +5,9 @@ from repro.kernels.ops import (
     pasa_attention,
     pasa_decode,
     pasa_paged_decode,
+    pasa_paged_decode_sharded,
     pasa_paged_prefill,
+    pasa_paged_prefill_sharded,
     shift_kv,
 )
 
@@ -14,6 +16,8 @@ __all__ = [
     "pasa_attention",
     "pasa_decode",
     "pasa_paged_decode",
+    "pasa_paged_decode_sharded",
     "pasa_paged_prefill",
+    "pasa_paged_prefill_sharded",
     "shift_kv",
 ]

@@ -288,6 +288,255 @@ def pasa_paged_prefill(
     )
 
 
+# ---------------------------------------------------------------------------
+# Model-axis sharded entry points (tensor-parallel paged serving)
+# ---------------------------------------------------------------------------
+#
+# Both paged kernels are PER-KV-HEAD-LOCAL computations: the page shift,
+# softmax statistics, and PV contraction never cross the KVH axis.  When
+# the mesh's model axis divides the kv heads, the whole call therefore
+# splits under shard_map along KVH with zero collectives - each device
+# runs the SAME kernel (Pallas on TPU, the XLA gather fallback elsewhere -
+# the GSPMD path) on its head shard of the page pool, and the concatenated
+# output is BIT-IDENTICAL to the single-device call (asserted on the
+# adversarial generators in tests/test_sharded_serving.py).  When the kv
+# heads do NOT divide the model axis, the prefill entry falls back to
+# core/ring.py ring-PASA: the pool stays replicated and the chunk's query
+# rows + gathered KV shard over the model axis sequence-parallel instead.
+# The ring fold order depends on the device count, so that path is
+# EXACT-softmax but only RMSE-close to the one-device call, not
+# bit-identical - which is why the serving engine only shards pools at
+# kv-head granularity (runtime/README.md).  Decode has a single query
+# token (nothing to sequence-shard), so its non-divisible fallback is the
+# plain replicated call.
+
+
+def _axis_size_of(mesh, axis: str) -> int:
+    from repro.runtime.paged_cache import model_axis_size
+
+    return model_axis_size(mesh, axis)
+
+
+def pasa_paged_decode_sharded(
+    q: jnp.ndarray,          # (B, KVH, G, D)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *,
+    mesh,
+    axis: str = "model",
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    k_scale: Optional[jnp.ndarray] = None,
+    k_shift: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    v_shift: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """:func:`pasa_paged_decode` kv-head-split over ``mesh``'s ``axis``.
+
+    Page table and kv_len replicate; q and the page pool (plus quantized
+    sidecars) split on their KVH dims.  Bit-identical to the unsharded
+    call when ``KVH % axis_size == 0``; otherwise falls back to the
+    replicated single-call path (see the section comment).
+    """
+    msize = _axis_size_of(mesh, axis)
+    kvh = q.shape[1]
+    kw = dict(
+        beta=beta, policy=policy, interpret=interpret, use_kernel=use_kernel,
+        k_scale=k_scale, k_shift=k_shift, v_scale=v_scale, v_shift=v_shift,
+    )
+    if msize <= 1 or kvh % msize:
+        return pasa_paged_decode(q, k_pages, v_pages, page_table, kv_len, **kw)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    qspec = P(None, axis, None, None)
+    pspec = P(None, None, axis, None)
+    in_specs = [qspec, pspec, pspec, P(None, None), P(None)]
+    args = [q, k_pages, v_pages, page_table, kv_len]
+    names = ("k_scale", "k_shift", "v_scale", "v_shift")
+    if k_scale is not None:
+        in_specs += [P(None, axis), P(None, axis, None)] * 2
+        args += [k_scale, k_shift, v_scale, v_shift]
+
+    def local(q_, kp, vp, pt, kl, *quant):
+        return pasa_paged_decode(
+            q_, kp, vp, pt, kl, beta=beta, policy=policy,
+            interpret=interpret, use_kernel=use_kernel,
+            **dict(zip(names, quant)),
+        )
+
+    fn = shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs), out_specs=qspec,
+        check_vma=False,
+    )
+    return fn(*args)
+
+
+def pasa_paged_prefill_sharded(
+    q: jnp.ndarray,          # (B, H, CS, D)
+    k_pages: jnp.ndarray,    # (P, page, KVH, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    chunk_start: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *,
+    mesh,
+    axis: str = "model",
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    k_scale: Optional[jnp.ndarray] = None,
+    k_shift: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    v_shift: Optional[jnp.ndarray] = None,
+    block_q: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """:func:`pasa_paged_prefill` sharded over ``mesh``'s ``axis``.
+
+    ``KVH % axis_size == 0``: kv-head split (queries split along their
+    kv-head-major H axis so each device keeps whole GQA groups) -
+    bit-identical to the unsharded call.  Otherwise: the core/ring.py
+    ring-PASA sequence-parallel fallback - the replicated pool's pages
+    are gathered/dequantized to the contiguous KV view, garbage beyond
+    ``kv_len`` is zeroed, and query rows + KV columns ring over the axis
+    (exact softmax; NOT bit-identical - the fold order is device-count
+    -dependent).  The ring path needs ``CS % axis_size == 0``,
+    ``S2 % axis_size == 0`` and a page-aligned local KV shard; anything
+    else takes the plain replicated call.
+    """
+    msize = _axis_size_of(mesh, axis)
+    h = q.shape[1]
+    kvh = k_pages.shape[2]
+    kw = dict(
+        beta=beta, policy=policy, block_q=block_q, interpret=interpret,
+        use_kernel=use_kernel,
+        k_scale=k_scale, k_shift=k_shift, v_scale=v_scale, v_shift=v_shift,
+    )
+    if msize <= 1:
+        return pasa_paged_prefill(
+            q, k_pages, v_pages, page_table, chunk_start, kv_len, **kw
+        )
+    if kvh % msize == 0 and h % msize == 0:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        qspec = P(None, axis, None, None)
+        pspec = P(None, None, axis, None)
+        in_specs = [qspec, pspec, pspec, P(None, None), P(None), P(None)]
+        args = [q, k_pages, v_pages, page_table, chunk_start, kv_len]
+        names = ("k_scale", "k_shift", "v_scale", "v_shift")
+        if k_scale is not None:
+            in_specs += [P(None, axis), P(None, axis, None)] * 2
+            args += [k_scale, k_shift, v_scale, v_shift]
+
+        def local(q_, kp, vp, pt, cs, kl, *quant):
+            return pasa_paged_prefill(
+                q_, kp, vp, pt, cs, kl, beta=beta, policy=policy,
+                block_q=block_q, interpret=interpret, use_kernel=use_kernel,
+                **dict(zip(names, quant)),
+            )
+
+        fn = shard_map(
+            local, mesh=mesh, in_specs=tuple(in_specs), out_specs=qspec,
+            check_vma=False,
+        )
+        return fn(*args)
+    return _paged_prefill_ring(
+        q, k_pages, v_pages, page_table, chunk_start, kv_len,
+        mesh=mesh, axis=axis, msize=msize, beta=beta, policy=policy,
+        k_scale=k_scale, k_shift=k_shift, v_scale=v_scale, v_shift=v_shift,
+        block_q=block_q, interpret=interpret, use_kernel=use_kernel,
+    )
+
+
+def _paged_prefill_ring(
+    q, k_pages, v_pages, page_table, chunk_start, kv_len, *,
+    mesh, axis, msize, beta, policy,
+    k_scale, k_shift, v_scale, v_shift,
+    block_q, interpret, use_kernel,
+):
+    """Ring-PASA sequence-parallel fallback for the non-kv-head-divisible
+    regime: gather the (replicated) pool to the contiguous KV view, zero
+    the garbage tail, and ring q-rows/KV-columns over the model axis with
+    causal + valid-column masking (core/ring.py grew both masks for this
+    path).  Exact softmax; fold order differs from one device, so this is
+    the RMSE-class member of the family."""
+    from repro.runtime.paged_cache import gather_pages, gather_pages_dequant
+
+    b, h, cs, d = q.shape
+    n_p, page, kvh, _ = k_pages.shape
+    g = h // kvh
+    s2 = page_table.shape[1] * page
+    loc = s2 // msize if s2 % msize == 0 else 0
+    if cs % msize or not loc or loc % page:
+        # ring needs even, page-aligned shards on both sequence axes;
+        # anything else takes the plain replicated call at the CALLER'S
+        # kernel/interpret settings
+        return pasa_paged_prefill(
+            q, k_pages, v_pages, page_table, chunk_start, kv_len,
+            beta=beta, policy=policy, block_q=block_q,
+            interpret=interpret, use_kernel=use_kernel,
+            k_scale=k_scale, k_shift=k_shift, v_scale=v_scale,
+            v_shift=v_shift,
+        )
+    kp2 = k_pages.reshape(n_p, page, kvh * d)
+    vp2 = v_pages.reshape(n_p, page, kvh * d)
+    if k_scale is not None:
+        kseq = gather_pages_dequant(
+            kp2, k_scale, k_shift.reshape(n_p, kvh * d), page_table
+        )
+        vseq = gather_pages_dequant(
+            vp2, v_scale, v_shift.reshape(n_p, kvh * d), page_table
+        )
+    else:
+        kseq = gather_pages(kp2.astype(policy.input_dtype), page_table)
+        vseq = gather_pages(vp2.astype(policy.input_dtype), page_table)
+    # (B, S2, KVH*D) -> (B, KVH, 1, S2, D); zero the invalid tail so the
+    # ring's GEMM-form block shift cannot fold stale Inf/NaN debris
+    valid = (
+        jnp.arange(s2, dtype=jnp.int32)[None, :] < kv_len[:, None]
+    )[:, None, None, :, None]
+    k5 = jnp.where(
+        valid, jnp.moveaxis(kseq.reshape(b, s2, kvh, d), 1, 2)[:, :, None], 0.0
+    )
+    v5 = jnp.where(
+        valid, jnp.moveaxis(vseq.reshape(b, s2, kvh, d), 1, 2)[:, :, None], 0.0
+    )
+    q5 = q.reshape(b, kvh, g, cs, d)
+    roff = chunk_start.astype(jnp.int32).reshape(b, 1, 1, 1, 1)
+    klen = kv_len.astype(jnp.int32).reshape(b, 1, 1, 1, 1)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.ring import ring_pasa_attention
+
+    seq_spec = P(None, None, None, axis, None)
+    rep = P(None, None, None, None, None)
+
+    def local(q_, k_, v_, ro, kl):
+        return ring_pasa_attention(
+            q_, k_, v_, axis_name=axis, beta=beta, policy=policy,
+            block_kv=page, causal=True, kv_len=kl, q_offset=ro,
+        )
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(seq_spec, seq_spec, seq_spec, rep, rep),
+        out_specs=seq_spec, check_vma=False,
+    )
+    out = fn(q5, k5, v5, roff, klen)
+    return out.reshape(b, h, cs, d)
+
+
 def shift_kv(
     k: jnp.ndarray,
     *,

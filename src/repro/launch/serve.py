@@ -33,12 +33,25 @@ sampling on the paged route (temperature 0 = greedy argmax, the
 bit-exact default); keys derive from (request id, token index), so
 sampled streams are reproducible and scheduling-invariant too.
 
+Sharded paged serving: ``--mesh DxM --paged`` actually USES the mesh -
+the ``data`` axis runs D engine replicas round-robin from one queue and
+the ``model`` axis shards every replica's page pool (and its two jitted
+step calls) kv-head-split across M devices, per-device pool HBM ~= 1/M
+(repro/runtime/engine.py ``mesh`` doc).  Like every scheduling knob this
+is bit-preserving: the DxM token streams match the 1x1 serve exactly
+(tests/test_sharded_serving.py pins tokens AND page bytes at bf16 and
+int8).  When the model's kv heads don't divide M the pool falls back to
+replication (runtime/README.md documents the ring-PASA fallback rule).
+
 Example (CPU-friendly):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 16 --gen 16 --mesh 1x1
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 64 --gen 16 --mesh 1x1 --paged \
       --num-pages 64 --prefix-cache
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --batch 8 --prompt-len 64 --gen 16 --mesh 2x4 --paged
 """
 
 from __future__ import annotations
@@ -55,7 +68,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM device mesh; on the paged route the data "
+                         "axis runs D engine replicas and the model axis "
+                         "shards each pool kv-head-split over M devices "
+                         "(bit-identical to 1x1; see runtime/README.md)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged-KV continuous-batching "
@@ -174,7 +191,7 @@ def main(argv=None):
         )
 
         if args.paged:
-            return _serve_paged(args, bundle, params, prompts)
+            return _serve_paged(args, bundle, params, prompts, mesh)
 
         cache = bundle.init_cache(args.batch, max_len)
         step = jax.jit(make_serve_step(bundle))
@@ -226,13 +243,20 @@ def main(argv=None):
         return gen
 
 
-def _serve_paged(args, bundle, params, prompts):
-    """Serve the same workload through the paged-KV engine."""
+def _serve_paged(args, bundle, params, prompts, mesh=None):
+    """Serve the same workload through the paged-KV engine.
+
+    The mesh is USED here (not just activated): with ``--mesh DxM``,
+    the ``data`` axis becomes D engine replicas fed round-robin from one
+    queue (:class:`repro.runtime.EngineReplicaGroup`) and the ``model``
+    axis shards each replica's page pool kv-head-split across its M
+    devices (``ServeEngine(mesh=...)``) - both bit-preserving, so the
+    DxM serve's streams match the 1x1 serve token for token."""
     import math
 
     import numpy as np
 
-    from repro.runtime import ServeEngine
+    from repro.runtime import EngineReplicaGroup, ServeEngine
 
     page_size = (
         args.page_size if args.page_size is not None
@@ -241,17 +265,20 @@ def _serve_paged(args, bundle, params, prompts):
     if page_size < 1:
         raise ValueError(f"--page-size must be >= 1, got {page_size}")
     total = args.prompt_len + args.gen
-    need = math.ceil(total / page_size) * args.batch
-    num_pages = args.num_pages or need + 1  # +1: reserved null page
     chunk = args.prefill_chunk
     if chunk is not None and chunk % page_size:
         raise ValueError(
             f"--prefill-chunk {chunk} must be a multiple of the page size "
             f"{page_size}"
         )
-    eng = ServeEngine(
-        bundle, params,
-        max_batch=args.batch, num_pages=num_pages, page_size=page_size,
+    shape = dict(mesh.shape) if mesh is not None else {}
+    n_data = int(shape.get("data", 1))
+    n_model = int(shape.get("model", 1))
+    batch_per = math.ceil(args.batch / n_data)
+    need = math.ceil(total / page_size) * batch_per
+    num_pages = args.num_pages or need + 1  # +1: reserved null page
+    engine_kwargs = dict(
+        max_batch=batch_per, num_pages=num_pages, page_size=page_size,
         max_seq_len=total,
         chunked_prefill=args.chunked_prefill,
         prefill_chunk=chunk,
@@ -266,6 +293,12 @@ def _serve_paged(args, bundle, params, prompts):
         top_k=args.top_k,
         sample_seed=args.sample_seed,
     )
+    if mesh is not None and (n_data > 1 or n_model > 1):
+        eng = EngineReplicaGroup(bundle, params, mesh, **engine_kwargs)
+        placement = f"{n_data} replicas x model={n_model} pool shards"
+    else:
+        eng = ServeEngine(bundle, params, **engine_kwargs)
+        placement = "1 device"
     reqs = [eng.submit(list(p), args.gen) for p in prompts]
     t0 = time.time()
     eng.run_to_completion()
@@ -279,14 +312,32 @@ def _serve_paged(args, bundle, params, prompts):
     # while first_token_step keeps the original emission)
     ttft_steps = [r.first_token_step - r.submit_step + 1 for r in reqs]
     mode = ("chunked" if args.chunked_prefill else "token-by-token")
-    print(f"[paged/{mode}/{st['scheduler']}] generated {gen.shape} tokens "
+    sched = (
+        st["scheduler"] if "scheduler" in st
+        else st["engines"][0]["scheduler"]
+    )
+    dtype_name = (
+        st["pool_dtype"] if "pool_dtype" in st
+        else st["engines"][0]["pool_dtype"]
+    )
+    print(f"[paged/{mode}/{sched}] generated {gen.shape} tokens "
           f"in {dt:.2f}s ({1000*dt/max(st['steps'],1):.1f} ms/step), "
-          f"pool={st['cache_bytes']/1e6:.2f} MB {st['pool_dtype']} "
-          f"({num_pages} pages x {page_size} tok), "
+          f"pool={st['cache_bytes']/1e6:.2f} MB total {dtype_name} "
+          f"({st['cache_bytes_per_device']/1e6:.2f} MB/device; {placement}; "
+          f"{num_pages} pages x {page_size} tok per replica), "
           f"TTFT {np.mean(ttft_steps):.1f} engine steps, "
           f"{st['preemptions']} preemptions")
     if args.prefix_cache:
-        pc = st["prefix_cache"]
+        # single engine: top-level stats; replica group: sum per engine
+        pcs = (
+            [st["prefix_cache"]] if "prefix_cache" in st
+            else [s["prefix_cache"] for s in st.get("engines", ())
+                  if "prefix_cache" in s]
+        )
+        pc = {
+            key: sum(p[key] for p in pcs)
+            for key in ("cached_pages", "hits", "misses", "evictions")
+        }
         print(f"[prefix-cache] {pc['cached_pages']} pages cached, "
               f"{pc['hits']} page hits / {pc['misses']} misses, "
               f"{pc['evictions']} evictions")

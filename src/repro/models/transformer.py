@@ -130,6 +130,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def init_paged_cache(
     cfg: ModelConfig, num_pages: int, page_size: int, dtype=jnp.bfloat16,
+    mesh=None,
 ):
     """Physical page pool for all layers: (L, num_pages, page_size, kv_dim).
 
@@ -142,12 +143,16 @@ def init_paged_cache(
     dtypes): the pool then carries per-page, per-kv-head scale/shift
     sidecar leaves and the attention layer quantizes on write /
     dequantizes in-kernel on read.
+
+    ``mesh`` shards every leaf over the mesh's ``model`` axis along the
+    kv-head dimension (runtime/paged_cache.pool_shardings) - the
+    tensor-parallel pool layout the sharded ServeEngine serves from.
     """
     from repro.runtime.paged_cache import init_paged_pool
 
     return init_paged_pool(
         cfg.n_layers, num_pages, page_size, cfg.kv_dim, dtype,
-        n_kv_heads=cfg.n_kv_heads,
+        n_kv_heads=cfg.n_kv_heads, mesh=mesh,
     )
 
 

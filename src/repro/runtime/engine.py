@@ -91,7 +91,9 @@ from repro.runtime.paged_cache import (
     NULL_PAGE,
     PageAllocator,
     paged_bytes,
+    paged_bytes_per_device,
     pool_dtype_name,
+    pool_shardings,
     resolve_pool_dtype,
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
@@ -275,6 +277,28 @@ class ServeEngine:
         temperature-scaled, optionally top-k-truncated distribution with a
         per-(request, token index) PRNG key derived from ``sample_seed`` -
         deterministic, and independent of scheduling.
+      mesh: optional ``jax.sharding.Mesh`` with a ``model`` axis.  The
+        page pool's leaves are laid out kv-head-split over that axis
+        (runtime/paged_cache.pool_shardings) and BOTH jitted device calls
+        run under a fully-MANUAL shard_map with explicit jit-boundary
+        NamedShardings - tokens, positions, and page tables replicated,
+        the pool at its kv-head sharding on input AND output (pool
+        donation preserved), params replicated.  Inside the manual
+        region no SPMD partitioner runs, and the pool boundary
+        (:meth:`_make_pool_io`) is the ONLY distributed code: sharded
+        leaves are all-gathered to full width on entry and the updated
+        pool is sliced back to this device's shard on exit, so the
+        interior is the UNMODIFIED 1-device step computation and the
+        sharded serve's token streams AND page bytes are BIT-IDENTICAL
+        to the single-device serve at every pool dtype, with per-device
+        pool RESIDENCY ~= 1/model-axis-size
+        (tests/test_sharded_serving.py).  When ``n_kv_heads`` does not
+        divide the model-axis size the pool falls back to replication
+        (see runtime/README.md for the ring-PASA compute fallback at the
+        kernel entry points).  Host-side state (allocator, page tables,
+        prefix cache, scheduling) is sharding-oblivious.  Data-parallel
+        replicas over a 2-D mesh are built by
+        :class:`EngineReplicaGroup`.
     """
 
     def __init__(
@@ -300,6 +324,7 @@ class ServeEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         sample_seed: int = 0,
+        mesh=None,
     ):
         if not bundle.supports_paged:
             raise ValueError(
@@ -398,8 +423,10 @@ class ServeEngine:
         self._base_key = jax.random.PRNGKey(sample_seed)
 
         self.cache_dtype = resolve_pool_dtype(cache_dtype)
+        self.mesh = mesh
+        pool_kw = {} if mesh is None else {"mesh": mesh}
         self.pool = bundle.init_paged_cache(
-            self.num_pages, self.page_size, dtype=self.cache_dtype
+            self.num_pages, self.page_size, dtype=self.cache_dtype, **pool_kw
         )
         self.allocator = PageAllocator(self.num_pages)
         self.prefix_cache = (
@@ -416,6 +443,11 @@ class ServeEngine:
         self.steps = 0
         self.preemptions = 0
         self.trimmed_pages = 0
+        # per-step token-spend accounting (decode rows + real prefill
+        # tokens): the observable the step_token_budget contract is
+        # asserted against (tests/test_scheduler.py)
+        self.last_step_tokens = 0
+        self.max_step_tokens = 0
         self._req_counter = 0
 
         step = bundle.paged_serve_step
@@ -435,9 +467,58 @@ class ServeEngine:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 return nxt, new_pool
 
+        # Sharded serving (mesh given): the device bodies run under a
+        # fully-MANUAL shard_map - no SPMD partitioner ever touches them.
+        # The body's pool boundary is the ONLY distributed code: every
+        # kv-head-sharded leaf is all-gathered to full width on entry and
+        # the updated pool is sliced back to this device's shard on exit
+        # (``_wrap_pool_io``), so the interior is the UNMODIFIED 1-device
+        # step computation - verbatim, with parameter-like inputs - and
+        # its outputs (tokens AND page bytes) are bitwise those of the
+        # 1-device serve.  Annotation-based GSPMD cannot make that
+        # promise: its partitioner re-splits even replicated-annotated
+        # contractions (partial sums + all-reduce change summation
+        # order), and module-dependent fusion drifts near-zero values by
+        # an ulp - both observed and bisected on this backend.  jit
+        # in/out NamedShardings place the pool at its kv-head sharding on
+        # both sides so donation survives; everything host-produced
+        # (tokens/pos/tables/sample rows) and params stay replicated.
+        # kwargs stay empty on the 1-device path.
+        step_jit, prefill_jit = {}, {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.compat import shard_map as _shard_map
+            from repro.runtime.paged_cache import pool_pspecs
+
+            repl = NamedSharding(mesh, P())
+            pshard = pool_shardings(mesh, self.pool, bundle.cfg.n_kv_heads)
+            prepl = jax.tree.map(lambda _: repl, self.params)
+            extra = (repl, repl) if sampled else ()
+            step_jit = dict(
+                in_shardings=(prepl, repl, repl, pshard, repl) + extra,
+                out_shardings=(repl, pshard),
+            )
+            prefill_jit = dict(
+                in_shardings=(
+                    (prepl, repl, repl, repl, repl, pshard, repl) + extra
+                ),
+                out_shardings=(repl, pshard),
+            )
+            rp = P()
+            pspec = pool_pspecs(mesh, self.pool, bundle.cfg.n_kv_heads)
+            pr_spec = jax.tree.map(lambda _: rp, self.params)
+            extra_sp = (rp, rp) if sampled else ()
+            wrap = self._make_pool_io(mesh, pspec)
+            _device_step = _shard_map(
+                wrap(_device_step, 3), mesh=mesh,
+                in_specs=(pr_spec, rp, rp, pspec, rp) + extra_sp,
+                out_specs=(rp, pspec), check_vma=False,
+            )
+
         # donate the pool: the update is a scatter of B tokens into a pool
         # that can dwarf device memory if double-buffered.
-        self._step_fn = jax.jit(_device_step, donate_argnums=(3,))
+        self._step_fn = jax.jit(_device_step, donate_argnums=(3,), **step_jit)
 
         if self.chunked_prefill:
             pstep = bundle.paged_prefill_step
@@ -458,7 +539,92 @@ class ServeEngine:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                     return nxt, new_pool
 
-            self._prefill_fn = jax.jit(_device_prefill, donate_argnums=(5,))
+            if mesh is not None:
+                _device_prefill = _shard_map(
+                    wrap(_device_prefill, 5), mesh=mesh,
+                    in_specs=(
+                        (pr_spec, rp, rp, rp, rp, pspec, rp) + extra_sp
+                    ),
+                    out_specs=(rp, pspec), check_vma=False,
+                )
+            self._prefill_fn = jax.jit(
+                _device_prefill, donate_argnums=(5,), **prefill_jit
+            )
+
+    # ------------------------------------------------------- device calls --
+
+    @staticmethod
+    def _make_pool_io(mesh, pspec):
+        """Build the manual-TP pool boundary for a shard_map body: every
+        leaf whose PartitionSpec trails in ``"model"`` is all-gathered to
+        full width on entry (tiled, device order == kv-head order - pure
+        data movement) and the updated pool is sliced back to this
+        device's shard on exit.  Optimization barriers at both boundaries
+        keep the interior an isolated fusion island, so it compiles
+        exactly like the 1-device program whose subgraph it is.  With a
+        replicated-fallback pool (no "model" entries) the wrapper is the
+        identity and the body IS the 1-device program."""
+        from repro.runtime.paged_cache import model_axis_size
+
+        msize = model_axis_size(mesh)
+        sharded = {name for name, s in pspec.items() if s[-1] == "model"}
+
+        def expand(pool):
+            if not sharded:
+                return pool
+            pool = {
+                name: (
+                    jax.lax.all_gather(
+                        x, "model", axis=x.ndim - 1, tiled=True
+                    ) if name in sharded else x
+                )
+                for name, x in pool.items()
+            }
+            return jax.lax.optimization_barrier(pool)
+
+        def contract(pool):
+            if not sharded:
+                return pool
+            pool = jax.lax.optimization_barrier(pool)
+            out = {}
+            for name, x in pool.items():
+                if name in sharded:
+                    size = x.shape[-1] // msize
+                    idx = jax.lax.axis_index("model") * size
+                    x = jax.lax.dynamic_slice_in_dim(
+                        x, idx, size, x.ndim - 1
+                    )
+                out[name] = x
+            return out
+
+        def wrap(fn, pool_argnum):
+            def wrapped(*args):
+                args = list(args)
+                args[pool_argnum] = expand(args[pool_argnum])
+                out, new_pool = fn(*args)
+                return out, contract(new_pool)
+            return wrapped
+
+        return wrap
+
+    def _device_call(self, fn, *args):
+        """Invoke a jitted step.  With a mesh, the (first-call) trace runs
+        with the launch-sharding thread-local mesh CLEARED: the body sits
+        inside a fully-manual shard_map, where the generic GSPMD hooks
+        (``shard()`` constraints, the row-parallel psum matmul) must not
+        fire - the model code then traces exactly as it does on one
+        device, which is the point (see the ``mesh`` arg doc).
+        Steady-state calls just hit the jit cache."""
+        if self.mesh is None:
+            return fn(*args)
+        from repro.launch.sharding import get_mesh, set_mesh
+
+        prev_mesh = get_mesh()
+        set_mesh(None)
+        try:
+            return fn(*args)
+        finally:
+            set_mesh(prev_mesh)
 
     # ------------------------------------------------------------- queue --
 
@@ -516,6 +682,7 @@ class ServeEngine:
             slot=r.slot,
             pages_needed=r.pages_needed(self.page_size),
             preempt_count=r.preempt_count,
+            preempt_step=r.preempt_step,
         )
 
     # --------------------------------------------------------- admission --
@@ -707,6 +874,11 @@ class ServeEngine:
         r.finish_step = self.steps
         self.finished[r.req_id] = r
 
+    def _account_step_tokens(self, n: int) -> None:
+        self.last_step_tokens = int(n)
+        if n > self.max_step_tokens:
+            self.max_step_tokens = int(n)
+
     # ---------------------------------------------------------- trimming --
 
     def _maybe_trim(self) -> None:
@@ -745,11 +917,16 @@ class ServeEngine:
                 rids[i], idxs[i] = pairs[i]
         return jnp.asarray(rids), jnp.asarray(idxs)
 
-    def _run_prefill(self, plan) -> None:
+    def _run_prefill(self, plan):
         """One BATCHED prefill call: each planned request contributes one
         chunk row (its own start offset, valid length, and page-table
         row); rows and tails are padded to the static (prefill_batch,
-        prefill_chunk) grid and pad positions write to the null page."""
+        prefill_chunk) grid and pad positions write to the null page.
+
+        Returns ``(tokens_spent, completed)``: the total REAL prefill
+        tokens advanced (the spend the policy budgeted for) and the
+        requests whose prompt finished inside this call - the budget
+        accounting in :meth:`step` needs both."""
         by_id = {
             r.req_id: r for r in self._slots
             if r is not None and r.prefill_pos < len(r.prompt)
@@ -761,7 +938,7 @@ class ServeEngine:
                 continue
             rows.append((r, min(grant, len(r.prompt) - r.prefill_pos)))
         if not rows:
-            return
+            return 0, []
         pb, cs = self.prefill_batch, self.prefill_chunk
         tokens = np.zeros((pb, cs), np.int32)
         start = np.zeros((pb,), np.int32)
@@ -784,8 +961,9 @@ class ServeEngine:
             args.extend(self._sample_rows(
                 [(r.req_id, len(r.generated)) for r, _ in rows], pb
             ))
-        first, self.pool = self._prefill_fn(*args)
+        first, self.pool = self._device_call(self._prefill_fn, *args)
         first = np.asarray(first)
+        completed = []
         for i, (r, real) in enumerate(rows):
             r.prefill_pos += real
             if r.prefill_pos >= len(r.prompt):
@@ -800,8 +978,10 @@ class ServeEngine:
                 self._next_token[r.slot] = (
                     r.replay[0] if r.replay else tok
                 )
+                completed.append(r)
                 if len(r.generated) >= r.max_new_tokens:
                     self._finish(r)
+        return sum(real for _, real in rows), completed
 
     def step(self) -> int:
         """Trim, admit what the policy places, run the policy's batched
@@ -816,6 +996,7 @@ class ServeEngine:
         self._try_admit()
         live = [r for r in self._slots if r is not None]
         if not live:
+            self._account_step_tokens(0)   # idle tick spends nothing
             self.steps += 1
             return 0
         n_live = len(live)
@@ -826,6 +1007,7 @@ class ServeEngine:
                 if r is not None and r.prefill_pos < len(r.prompt)
             ]
             n_decode = n_live - len(prefilling)
+            prefill_spent, completed = 0, []
             if prefilling:
                 plan = self._policy.plan_prefill(
                     [self._view(r) for r in prefilling],
@@ -836,23 +1018,47 @@ class ServeEngine:
                     max_rows=self.prefill_batch,
                 )
                 if plan:
-                    self._run_prefill(plan)
+                    prefill_spent, completed = self._run_prefill(plan)
             dec = [
                 r for r in self._slots
                 if r is not None and r.prefill_pos >= len(r.prompt)
             ]
+            if self.step_token_budget is not None:
+                # Budget accounting for prefill-COMPLETING rows: the policy
+                # charged n_decode (counted BEFORE the prefill call) plus
+                # the prefill grants, but a row whose prompt finished
+                # inside this step's prefill call has just joined ``dec``
+                # and would decode an extra, never-budgeted token this same
+                # step.  Defer the first decode of just enough of them
+                # (latest grants first) to the next step - bit-preserving,
+                # since scheduling is latency-only; decode rows counted by
+                # the plan are never deferred (decode latency stays the
+                # protected quantity).
+                over = len(dec) + prefill_spent - self.step_token_budget
+                if over > 0:
+                    in_dec = {r.req_id for r in dec}
+                    deferrable = [
+                        r.req_id for r in completed if r.req_id in in_dec
+                    ]
+                    defer = set(deferrable[max(len(deferrable) - over, 0):])
+                    if defer:
+                        dec = [r for r in dec if r.req_id not in defer]
+            self._account_step_tokens(len(dec) + prefill_spent)
             if not dec:
                 self.steps += 1
                 return n_live
-            # decode view of the table: still-prefilling rows are nulled so
+            # decode view of the table: slots not decoding THIS step
+            # (empty, still-prefilling, or budget-deferred) are nulled so
             # the batched scatter cannot touch their pages.
+            dec_slots = {r.slot for r in dec}
             table = np.array(self.page_table)
-            for i, s in enumerate(self._slots):
-                if s is None or s.prefill_pos < len(s.prompt):
+            for i in range(self.max_batch):
+                if i not in dec_slots:
                     table[i, :] = NULL_PAGE
         else:
             dec = live
             table = self.page_table
+            self._account_step_tokens(len(dec))
 
         tokens = np.array(self._next_token)     # copy: stable under updates
         pos = np.zeros((self.max_batch,), np.int32)
@@ -868,7 +1074,7 @@ class ServeEngine:
             for r in dec:
                 pairs[r.slot] = (r.req_id, len(r.generated))
             args.extend(self._sample_rows(pairs, self.max_batch))
-        nxt, self.pool = self._step_fn(*args)
+        nxt, self.pool = self._device_call(self._step_fn, *args)
         nxt = np.asarray(nxt)
 
         for r in dec:
@@ -913,6 +1119,7 @@ class ServeEngine:
             "free_pages": self.allocator.free_pages,
             "live_pages": self.allocator.live_pages,
             "cache_bytes": paged_bytes(self.pool),
+            "cache_bytes_per_device": paged_bytes_per_device(self.pool),
             "page_size": self.page_size,
             "pool_dtype": pool_dtype_name(self.cache_dtype),
             "chunked_prefill": self.chunked_prefill,
@@ -922,7 +1129,107 @@ class ServeEngine:
             "preemptions": self.preemptions,
             "trimmed_pages": self.trimmed_pages,
             "temperature": self.temperature,
+            "last_step_tokens": self.last_step_tokens,
+            "max_step_tokens": self.max_step_tokens,
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out
+
+
+class EngineReplicaGroup:
+    """Data-parallel paged serving over a 2-D ``(data, model)`` mesh.
+
+    One :class:`ServeEngine` replica per ``data``-axis row, each serving
+    from its OWN page pool sharded over that row's ``model`` devices
+    (``ServeEngine(mesh=...)``); requests from one logical queue are dealt
+    round-robin across replicas.  Replicas share nothing on device -
+    sharding the pools over ``model`` is the tensor-parallel dimension,
+    replicas over ``data`` the throughput dimension - so per-request
+    streams stay bit-identical to a single-engine serve (round-robin only
+    changes which pool a request's pages live in, and decode reads only
+    the request's own page-table row).
+
+    The group exposes the subset of the engine surface the launcher needs
+    (submit / step / run_to_completion / stats); per-request bookkeeping
+    stays on the underlying :class:`Request` objects.
+    """
+
+    def __init__(self, bundle, params, mesh, **engine_kwargs):
+        from jax.sharding import Mesh
+
+        names = mesh.axis_names
+        if not set(names) <= {"data", "model"}:
+            raise ValueError(
+                f"EngineReplicaGroup needs a (data, model) mesh; got axes "
+                f"{names}"
+            )
+        shape = dict(mesh.shape)
+        n_data = int(shape.get("data", 1))
+        n_model = int(shape.get("model", 1))
+        # row-major (data, model) device grid regardless of axis order
+        devs = np.asarray(mesh.devices)
+        if names and names[0] == "model" and "data" in names:
+            devs = devs.T
+        devs = devs.reshape(n_data, n_model)
+        self.meshes = [
+            Mesh(devs[i].reshape(n_model), ("model",)) for i in range(n_data)
+        ]
+        self.engines = [
+            ServeEngine(bundle, params, mesh=m, **engine_kwargs)
+            for m in self.meshes
+        ]
+        self._rr = 0
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        """Round-robin deal from the one logical queue."""
+        eng = self.engines[self._rr % len(self.engines)]
+        self._rr += 1
+        return eng.submit(prompt, max_new_tokens)
+
+    @property
+    def idle(self) -> bool:
+        return all(e.idle for e in self.engines)
+
+    def step(self) -> int:
+        """Advance EVERY replica one engine step - idle ones included, so
+        each replica's scheduling clock keeps the per-engine invariant
+        (``steps`` advances on every call) and arrival-paced drivers that
+        poll ``steps`` never stall on an early-drained replica."""
+        return sum(e.step() for e in self.engines)
+
+    def run_to_completion(self, max_steps: int = 100_000):
+        """Drive all replicas INTERLEAVED until every queue drains (the
+        data-parallel dimension overlaps; wall-clock ~= the slowest
+        replica, not the sum).  ``max_steps`` bounds this call per
+        replica clock."""
+        start = max(e.steps for e in self.engines)
+        while not self.idle:
+            if max(e.steps for e in self.engines) - start >= max_steps:
+                raise RuntimeError(
+                    f"replica group did not drain in {max_steps} steps"
+                )
+            self.step()
+        out: Dict[tuple, Request] = {}
+        for i, e in enumerate(self.engines):
+            for rid, r in e.finished.items():
+                out[(i, rid)] = r
+        return out
+
+    def stats(self) -> dict:
+        per = [e.stats() for e in self.engines]
+        return {
+            "replicas": len(per),
+            "cache_bytes": sum(s["cache_bytes"] for s in per),
+            "cache_bytes_per_device": max(
+                s["cache_bytes_per_device"] for s in per
+            ),
+            "steps": max(s["steps"] for s in per),
+            "finished": sum(s["finished"] for s in per),
+            "preemptions": sum(s["preemptions"] for s in per),
+            "engines": per,
+        }

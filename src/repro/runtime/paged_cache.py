@@ -50,12 +50,36 @@ page-lifecycle operation (copy-on-write recompute, donation to the prefix
 cache, LRU eviction, recycling through the free list) carries them
 automatically: scale/shift ARE page metadata, not separate state the engine
 could forget to move.
+
+Model-axis sharding (``init_paged_pool(mesh=...)``): the pool's big leaves
+lay out over the mesh's ``model`` axis along the **kv-head** dimension -
+``k``/``v`` split their trailing ``kv_dim = KVH * head_dim`` axis and the
+quantized sidecars split their ``KVH``-granular trailing axes, so each
+device stores ``1/model``-th of every page (the per-device HBM headline
+the ROADMAP's sharded-serving item asks for).  The split is legal only at
+kv-head granularity: a head's ``head_dim`` vector must live on one device
+so the per-page shift/scale sidecars - per-(page, kv-head) statistics -
+shard alongside their codes, and so the kernels' kv-head-split shard_map
+path stays collective-free (kernels/ops.py).  The serving engine reads
+and writes this layout through an explicit manual pool boundary
+(runtime/engine.ServeEngine._make_pool_io: all-gather on entry, local
+slice on exit of its shard_map'd device steps), which is what keeps the
+sharded serve bit-identical to the single-device serve.  When
+``n_kv_heads`` does not divide the model-axis size the leaves fall back
+to replication (the engine still runs; the kernels' ring-PASA
+sequence-parallel fallback in kernels/ops.py covers the compute side -
+see runtime/README.md).  Page-id-indexed bookkeeping (allocator, page
+tables, prefix cache, donation, COW, eviction) is sharding-OBLIVIOUS: a
+physical page id addresses the same logical page on every device, each
+holding its head shard of it.
 """
 
 from __future__ import annotations
 
+import math
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 
 NULL_PAGE = 0
@@ -141,9 +165,57 @@ class PageAllocator:
             self._free.append(p)
 
 
+def model_axis_size(mesh, axis: str = "model") -> int:
+    """Size of a mesh axis (1 when the axis is absent or mesh is None)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def pool_model_sharded(mesh, n_kv_heads: Optional[int]) -> bool:
+    """True when the pool's leaves can split over the mesh's model axis:
+    the split must land on kv-head boundaries (see module doc)."""
+    m = model_axis_size(mesh)
+    return m > 1 and n_kv_heads is not None and n_kv_heads % m == 0
+
+
+def pool_pspecs(mesh, pool: dict, n_kv_heads: Optional[int]) -> dict:
+    """PartitionSpecs for every pool leaf: kv-head-split over ``model``
+    when legal, replicated otherwise.
+
+    ``k``/``v`` (L, P, page, kv_dim) split the trailing ``kv_dim`` axis;
+    ``*_scale`` (L, P, KVH) and ``*_shift`` (L, P, kv_dim) split their
+    trailing axes - all three are kv-head-major, so one rule covers raw
+    and quantized pools.  The serving engine uses these BOTH as the
+    shard_map in/out specs of its manual-TP device calls and (wrapped in
+    NamedShardings, :func:`pool_shardings`) as the jit-boundary placement
+    of the pool."""
+    from jax.sharding import PartitionSpec as P
+
+    axis = "model" if pool_model_sharded(mesh, n_kv_heads) else None
+    trailing = {
+        "k": P(None, None, None, axis), "v": P(None, None, None, axis),
+        "k_scale": P(None, None, axis), "v_scale": P(None, None, axis),
+        "k_shift": P(None, None, axis), "v_shift": P(None, None, axis),
+    }
+    return {name: trailing[name] for name in pool}
+
+
+def pool_shardings(mesh, pool: dict, n_kv_heads: Optional[int]) -> dict:
+    """:func:`pool_pspecs` as NamedShardings - used by
+    :func:`init_paged_pool` for placement and by the serving engine as
+    the explicit jit in/out shardings of its two device calls (donation
+    needs in == out)."""
+    from jax.sharding import NamedSharding
+
+    specs = pool_pspecs(mesh, pool, n_kv_heads)
+    return {name: NamedSharding(mesh, s) for name, s in specs.items()}
+
+
 def init_paged_pool(
     n_layers: int, num_pages: int, page_size: int, kv_dim: int,
     dtype=jnp.bfloat16, n_kv_heads: Optional[int] = None,
+    mesh=None,
 ) -> dict:
     """Zero-initialized paged KV pool; every leaf keeps the leading
     ``n_layers`` dim so ``lax.scan`` over layers treats dense and paged
@@ -151,7 +223,12 @@ def init_paged_pool(
 
     ``dtype`` may be a ``POOL_DTYPES`` name or a jnp dtype.  Quantized
     dtypes add per-page sidecar leaves (see module doc) and require
-    ``n_kv_heads`` (the scale granularity)."""
+    ``n_kv_heads`` (the scale granularity).
+
+    ``mesh`` (optional): lay the pool out over the mesh's ``model`` axis
+    along the kv-head dimension (:func:`pool_shardings`); requires
+    ``n_kv_heads``.  Leaves fall back to replication when the kv heads do
+    not divide the model-axis size."""
     dtype = resolve_pool_dtype(dtype)
     shape = (n_layers, num_pages, page_size, kv_dim)
     pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
@@ -166,6 +243,11 @@ def init_paged_pool(
         for side in ("k", "v"):
             pool[f"{side}_scale"] = jnp.zeros(sc, jnp.float32)
             pool[f"{side}_shift"] = jnp.zeros(sh, jnp.float32)
+    if mesh is not None:
+        if n_kv_heads is None:
+            raise ValueError("mesh-sharded pool needs n_kv_heads")
+        sh = pool_shardings(mesh, pool, n_kv_heads)
+        pool = {name: jax.device_put(x, sh[name]) for name, x in pool.items()}
     return pool
 
 
@@ -317,5 +399,37 @@ def gather_pages(pool_layer: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarra
 
 
 def paged_bytes(pool: dict) -> int:
-    """HBM footprint of the pool (benchmark reporting)."""
+    """GLOBAL HBM footprint of the pool (benchmark reporting)."""
     return sum(int(x.size) * x.dtype.itemsize for x in pool.values())
+
+
+def paged_bytes_per_device(pool: dict) -> int:
+    """MEASURED per-device HBM footprint: each leaf's addressable shard
+    shape times its itemsize.  Equals :func:`paged_bytes` for a
+    single-device or replicated pool; ~``1/model`` of it for the
+    kv-head-sharded layout (the sharded-serving acceptance metric)."""
+    total = 0
+    for x in pool.values():
+        shard = x.sharding.shard_shape(x.shape)
+        total += int(math.prod(shard)) * x.dtype.itemsize
+    return total
+
+
+def sharded_pool_device_bytes(
+    n_layers: int, num_pages: int, page_size: int, kv_dim: int,
+    dtype, n_kv_heads: int, model_size: int,
+) -> int:
+    """ANALYTIC per-device pool bytes under the :func:`pool_shardings`
+    layout for a hypothetical ``model``-axis size - usable without
+    devices (benchmarks/paged_vs_dense.py reports the scaling row on a
+    single-host CPU run).  Mirrors the placement rule exactly: all leaves
+    split their kv-head-granular trailing axis when ``n_kv_heads %
+    model_size == 0``, otherwise everything is replicated."""
+    dtype = resolve_pool_dtype(dtype)
+    div = model_size if (model_size > 1 and n_kv_heads % model_size == 0) else 1
+    kv_bytes = n_layers * num_pages * page_size * (kv_dim // div)
+    total = 2 * kv_bytes * jnp.dtype(dtype).itemsize
+    if is_quantized_dtype(dtype):
+        total += 2 * n_layers * num_pages * (n_kv_heads // div) * 4
+        total += 2 * n_layers * num_pages * (kv_dim // div) * 4
+    return total

@@ -72,6 +72,17 @@ class RequestView:
     slot: int = -1
     pages_needed: int = 0
     preempt_count: int = 0
+    #: engine step of the most recent page-out (-1 = never preempted).
+    #: Aging anchors on max(submit_step, preempt_step): a paged-out request
+    #: forfeits its original seniority (it re-queues at the back), so its
+    #: wait clock restarts at the page-out, not at submission.
+    preempt_step: int = -1
+
+    @property
+    def wait_anchor(self) -> int:
+        """The step this request's *current* wait began: submission, or the
+        most recent page-out if later (forfeited seniority)."""
+        return max(self.submit_step, self.preempt_step)
 
 
 # (req_id, token allowance this step).  Allowances are page multiples
@@ -125,11 +136,19 @@ class SchedulerPolicy:
     ) -> Optional[RequestView]:
         """Preemption victim among RUNNING requests (None = do not
         preempt).  Default: the youngest-admitted request - FCFS
-        seniority; the newest arrival is the one paged out."""
+        seniority; the newest arrival is the one paged out.
+
+        Victim-side anti-thrash: candidates that have NEVER been paged out
+        are strictly preferred - a just-resumed request must not be the
+        first pick again, or two requests that cannot coexist ping-pong
+        (the trigger-side guard in the engine only stops a once-preempted
+        request from *initiating* preemption).  A once-preempted request
+        is still eligible when it is the only candidate."""
         cands = [v for v in running if v.admit_step < now]
         if not cands:
             return None
-        return max(cands, key=lambda v: (v.admit_step, v.req_id))
+        fresh = [v for v in cands if v.preempt_count == 0]
+        return max(fresh or cands, key=lambda v: (v.admit_step, v.req_id))
 
     # ------------------------------------------------------------- plan --
 
@@ -182,7 +201,10 @@ class SJFPolicy(SchedulerPolicy):
     (no head-of-line blocking); requests that have waited longer than
     ``patience`` steps are promoted to strict FIFO ahead of every
     non-starved candidate, so a long prompt is delayed, never starved
-    (tests/test_scheduler.py::test_sjf_aging_prevents_starvation).
+    (tests/test_scheduler.py::test_sjf_aging_prevents_starvation).  The
+    wait clock anchors on ``RequestView.wait_anchor``
+    (max(submit_step, preempt_step)): a paged-out request re-queued at the
+    back does not get its forfeited seniority back through the aging guard.
     """
 
     name = "sjf"
@@ -194,9 +216,15 @@ class SJFPolicy(SchedulerPolicy):
         self.patience = int(patience)
 
     def admission_order(self, waiting, now: int = 0):
-        starved = [v for v in waiting if now - v.submit_step >= self.patience]
-        fresh = [v for v in waiting if now - v.submit_step < self.patience]
-        starved.sort(key=lambda v: (v.submit_step, v.req_id))
+        # Age from the wait ANCHOR (max of submit_step and the last
+        # preempt_step), not raw submit_step: a preempted request re-queued
+        # at the back forfeited its seniority, and aging it from its
+        # original submission would instantly promote it back to strict
+        # -FIFO head - resurrecting exactly the seniority the page-out
+        # policy took away (the base policy's queue-order default).
+        starved = [v for v in waiting if now - v.wait_anchor >= self.patience]
+        fresh = [v for v in waiting if now - v.wait_anchor < self.patience]
+        starved.sort(key=lambda v: (v.wait_anchor, v.req_id))
         fresh.sort(key=lambda v: (v.prompt_len, v.req_id))
         return starved + fresh
 
@@ -206,12 +234,15 @@ class SJFPolicy(SchedulerPolicy):
         )
 
     def choose_victim(self, running, now: int = 0):
-        """The straggler: most total work remaining."""
+        """The straggler: most total work remaining - among the
+        never-preempted candidates first (same victim-side anti-thrash
+        rule as the base policy)."""
         cands = [v for v in running if v.admit_step < now]
         if not cands:
             return None
+        fresh = [v for v in cands if v.preempt_count == 0]
         return max(
-            cands,
+            fresh or cands,
             key=lambda v: (
                 v.remaining_prefill + v.remaining_decode, v.req_id
             ),

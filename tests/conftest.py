@@ -23,6 +23,28 @@ import pytest
 jax.config.update("jax_enable_x64", True)
 
 
+def pytest_collection_modifyitems(config, items):
+    """``multidevice``-marked tests need forced host devices, and XLA pins
+    the device count at first backend init - so they only run for real in
+    an interpreter launched with XLA_FLAGS set (REPRO_MULTIDEV=1 marks
+    such an interpreter).  In a plain run they are skipped HERE, visibly,
+    and exercised through the tests/test_multidevice.py subprocess
+    launcher - which IS part of the default tier-1 suite, so the sharded
+    serving contracts run on CPU in every `pytest -q`, never silently
+    dropped."""
+    if os.environ.get("REPRO_MULTIDEV") == "1":
+        return
+    skip = pytest.mark.skip(
+        reason="multi-device suite; runs in-suite via "
+               "tests/test_multidevice.py (directly: "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+               "REPRO_MULTIDEV=1 pytest -m multidevice)"
+    )
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -2,13 +2,11 @@
 
 Multi-device tests need placeholder host devices, and XLA_FLAGS must be set
 before jax initializes - which must NOT happen globally (smoke tests see one
-device, per the brief).  tests/test_multidevice.py re-runs this module in a
-subprocess with REPRO_MULTIDEV=1 and 8 host devices; under a plain
-``pytest tests/`` the device-bound tests here are skipped in-process and
-exercised through that launcher instead.
+device, per the brief).  The module is ``multidevice``-marked:
+tests/conftest.py skips it in-process and tests/test_multidevice.py re-runs
+it in a subprocess with REPRO_MULTIDEV=1 and 8 host devices (the same
+mechanism as tests/test_sharded_serving.py).
 """
-
-import os
 
 import jax
 import jax.numpy as jnp
@@ -16,10 +14,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-if os.environ.get("REPRO_MULTIDEV") != "1":
-    pytestmark = pytest.mark.skip(
-        reason="multi-device suite; exercised via tests/test_multidevice.py"
-    )
+pytestmark = pytest.mark.multidevice
 
 from repro.launch import params as LP
 from repro.launch.hlo_analysis import analyze

@@ -1,14 +1,19 @@
 """Launcher for the multi-device test suite.
 
 XLA locks the host device count at first backend initialization, so the
-8-device tests (sharding rules over a real mesh, mini dry-run, ring PASA)
-must run in a fresh interpreter with XLA_FLAGS set before jax import.  This
-test spawns that interpreter; see tests/test_launch.py for the suite body.
+8-device tests (sharding rules over a real mesh, mini dry-run, ring PASA,
+and the sharded paged-serving bit-identity contract) must run in a fresh
+interpreter with XLA_FLAGS set before jax import.  This test spawns that
+interpreter over every ``multidevice``-marked module (tests/conftest.py
+skips them in-process); suite bodies live in tests/test_launch.py and
+tests/test_sharded_serving.py.
 """
 
 import os
 import subprocess
 import sys
+
+TARGETS = ("test_launch.py", "test_sharded_serving.py")
 
 
 def test_multidevice_suite():
@@ -21,14 +26,16 @@ def test_multidevice_suite():
             + os.environ.get("PYTHONPATH", "").split(os.pathsep)
         ),
     )
-    target = os.path.join(os.path.dirname(__file__), "test_launch.py")
+    targets = [
+        os.path.join(os.path.dirname(__file__), t) for t in TARGETS
+    ]
     proc = subprocess.run(
-        [sys.executable, "-m", "pytest", target, "-q", "--no-header", "-p",
+        [sys.executable, "-m", "pytest", *targets, "-q", "--no-header", "-p",
          "no:cacheprovider"],
         env=env,
         capture_output=True,
         text=True,
-        timeout=1800,
+        timeout=2700,
     )
     if proc.returncode != 0:
         raise AssertionError(

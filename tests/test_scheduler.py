@@ -37,7 +37,7 @@ from repro.runtime import (
 
 def _v(req_id, *, prompt_len=64, remaining_prefill=None, remaining_decode=8,
        submit_step=0, admit_step=-1, slot=-1, pages_needed=4,
-       preempt_count=0):
+       preempt_count=0, preempt_step=-1):
     return RequestView(
         req_id=req_id, prompt_len=prompt_len,
         remaining_prefill=(
@@ -45,7 +45,7 @@ def _v(req_id, *, prompt_len=64, remaining_prefill=None, remaining_decode=8,
         ),
         remaining_decode=remaining_decode, submit_step=submit_step,
         admit_step=admit_step, slot=slot, pages_needed=pages_needed,
-        preempt_count=preempt_count,
+        preempt_count=preempt_count, preempt_step=preempt_step,
     )
 
 
@@ -166,6 +166,45 @@ class TestPolicyLayer:
         vs = [_v(1, submit_step=5), _v(2, submit_step=0)]
         assert [v.req_id for v in SchedulerPolicy().admission_order(vs)] \
             == [1, 2]
+
+    def test_choose_victim_prefers_never_preempted(self):
+        """Regression (PR 5, victim-side ping-pong): a just-resumed
+        request (largest admit_step / most remaining work) used to be the
+        FIRST pick for the next page-out, so the same request got kicked
+        over and over while never-preempted peers kept their pages.  Both
+        built-in rules must prefer preempt_count == 0 candidates."""
+        running = [
+            _v(1, admit_step=8, slot=0, remaining_prefill=90,
+               remaining_decode=50, preempt_count=1, preempt_step=5),
+            _v(2, admit_step=3, slot=1, remaining_prefill=0,
+               remaining_decode=2),
+        ]
+        # pre-fix: FCFS picked 1 (youngest admitted), SJF picked 1 (the
+        # straggler); both must now pick the never-preempted 2
+        assert FCFSPolicy().choose_victim(running, now=9).req_id == 2
+        assert SJFPolicy().choose_victim(running, now=9).req_id == 2
+        # a once-preempted request stays ELIGIBLE when it is all there is
+        only = [running[0]]
+        assert FCFSPolicy().choose_victim(only, now=9).req_id == 1
+        assert SJFPolicy().choose_victim(only, now=9).req_id == 1
+
+    def test_sjf_aging_anchors_on_preempt_step(self):
+        """Regression (PR 5): a preempted request re-queued at the back
+        kept its original submit_step, so the SJF aging guard instantly
+        promoted it back to strict-FIFO head - resurfacing exactly the
+        seniority the documented page-out rule forfeits.  Aging now runs
+        from max(submit_step, preempt_step)."""
+        pol = SJFPolicy(patience=64)
+        ws = [
+            _v(1, prompt_len=500, submit_step=0,
+               preempt_count=1, preempt_step=95),   # paged out 5 steps ago
+            _v(2, prompt_len=5, submit_step=90),
+            _v(3, prompt_len=400, submit_step=10),  # genuinely starved
+        ]
+        order = [v.req_id for v in pol.admission_order(ws, now=100)]
+        # pre-fix: [1, 3, 2] (req 1 "starved" from its stale submit_step);
+        # post-fix req 1's wait restarted at step 95 -> fresh, SJF order
+        assert order == [3, 2, 1]
 
 
 # ------------------------------------------------ engine-level contracts --
@@ -348,6 +387,102 @@ def test_preemption_does_not_thrash(tiny_bundle, workload):
     eng.run_to_completion(max_steps=500)
     assert eng.preemptions == 1
     assert ra.state == "finished" and rb.state == "finished"
+
+
+@pytest.mark.parametrize("scheduler", ["fcfs", "mixed"])
+def test_step_token_budget_never_overrun(tiny_bundle, scheduler):
+    """Regression (PR 5): rows that finish their prompt inside a step's
+    batched prefill call joined the SAME step's decode batch, spending up
+    to prefill_batch tokens beyond step_token_budget (n_decode was counted
+    before the prefill ran).  Staged at the budget edge: A (12-token
+    prompt) decodes - charging 1 token - while B's 24-token prompt drains
+    in 8-token grants under budget 9; the step where B's tail grant
+    completes the prompt used to also decode B, spending 1 + 8 + 1 = 10.
+    The spend is measured INDEPENDENTLY of the engine's accounting, from
+    per-request cursor deltas (a prompt-completing row's first token
+    comes out of the prefill grant, so it is not double-counted)."""
+    bundle, params = tiny_bundle
+    budget = 9
+    rng = np.random.default_rng(11)
+    vocab = bundle.cfg.vocab_size
+    pa = list(rng.integers(0, vocab, 12))
+    pb = list(rng.integers(0, vocab, 24))
+
+    def serve(**kw):
+        eng = ServeEngine(
+            bundle, params, max_batch=4, num_pages=16, page_size=8,
+            max_seq_len=48, prefill_chunk=16, scheduler=scheduler, **kw,
+        )
+        reqs = [eng.submit(pa, 8), eng.submit(pb, 4)]
+        overran = False
+        max_spend = 0
+        while not eng.idle:
+            before = [(r.prefill_pos, len(r.generated)) for r in reqs]
+            eng.step()
+            spend = 0
+            for (p0, g0), r in zip(before, reqs):
+                pd = max(r.prefill_pos - p0, 0)
+                gd = len(r.generated) - g0
+                completed_now = p0 < len(r.prompt) <= r.prefill_pos
+                spend += pd + max(gd - (1 if completed_now else 0), 0)
+            if "step_token_budget" in kw:
+                assert spend <= budget, f"spent {spend} > {budget}"
+                assert spend == eng.last_step_tokens   # honest accounting
+                # the edge actually gets exercised: B's prompt completes
+                # in a step whose plan already fills the budget, so the
+                # pre-fix engine would have spent budget + 1 here
+                overran = overran or (
+                    spend == budget
+                    and any(p0 < len(r.prompt) <= r.prefill_pos
+                            for (p0, _), r in zip(before, reqs))
+                )
+            max_spend = max(max_spend, spend)
+        return [r.generated for r in reqs], overran, max_spend, eng
+
+    budgeted, edge_hit, max_spend, eng = serve(step_token_budget=budget)
+    assert edge_hit, "workload failed to exercise the overrun edge"
+    assert eng.max_step_tokens == max_spend <= budget
+    # deferring a completed row's first decode moves latency, never bits
+    unlimited, _, _, _ = serve()
+    assert budgeted == unlimited
+
+
+def test_victim_side_ping_pong_regression(tiny_bundle, workload):
+    """Regression (PR 5): nothing stopped choose_victim from picking the
+    already-preempted, just-resumed request AGAIN while a never-preempted
+    peer kept its pages.  Staged here end to end: A is paged out for B,
+    resumes, and then a THIRD page-starved arrival triggers another
+    preemption - the victim must be the never-preempted D, leaving A's
+    preempt_count at 1 (pre-fix it reached 2)."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=3, num_pages=12, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        preemption=True, preempt_patience=1,
+    )
+    rd = eng.submit(workload[3], 20)     # 12 + 20 -> 4 pages, long decode
+    eng.step()
+    ra = eng.submit(workload[0], 6)      # 37 + 6 -> 6 pages (10/11 used)
+    for _ in range(3):
+        eng.step()
+    assert ra.state == "running"
+    rb = eng.submit(workload[3], 4)      # 2 pages: page-blocked -> preempt
+    while ra.state == "running":
+        eng.step()
+    assert ra.preempt_count == 1 and rb.state in ("waiting", "running")
+    # drain B, let A resume next to the still-running D
+    while not (rb.state == "finished" and ra.state == "running"):
+        eng.step()
+    rc = eng.submit(workload[1], 4)      # 3 pages, no shared prefix:
+    eng.run_to_completion(max_steps=500)  # page-blocked again
+    assert eng.preemptions == 2
+    assert ra.preempt_count == 1, "resumed request was victimized again"
+    assert rd.preempt_count == 1         # the never-preempted peer paid
+    for r, (w, g) in ((ra, (0, 6)), (rb, (3, 4)), (rc, (1, 4)),
+                      (rd, (3, 20))):
+        assert r.generated == chunked_cold_reference(
+            bundle, params, workload[w], g, page_size=8, prefill_chunk=16,
+        )
 
 
 def test_sjf_skips_blocked_head(tiny_bundle, workload):

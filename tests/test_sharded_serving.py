@@ -1,0 +1,388 @@
+"""Model-axis sharded paged serving: the bit-identity contract.
+
+The tentpole claim of the sharded refactor (PR 5): sharding the page pool
+kv-head-split over the ``model`` mesh axis and running the engine's two
+jitted calls device-placed moves BYTES and COMPUTE, never bits - an
+8-device ``2x4`` (data x model) serve produces token streams and physical
+page bytes bit-identical to the 1-device serve, at bf16 AND int8 pool
+dtypes, with per-device pool HBM ~= 1/model-axis-size.  This is exactly
+the reproducibility-under-layout property arXiv:2405.02803 shows
+mainstream attention stacks lose; PASA's page-local shift blocks are what
+let the sharded pool keep sharing raw pages exactly (arXiv:2503.01873).
+
+Also here: the kernel-family sharded entry points
+(``pasa_paged_{decode,prefill}_sharded``) proven bit-identical on the
+paper's adversarial generators, the ring-PASA fallback for
+non-kv-head-divisible meshes, the replicated-pool fallback, and the
+sharded run of the strictest existing scheduling contract -
+preempt-resume bit-identity.
+
+Marked ``multidevice``: needs >= 8 forced host devices, so the default
+(tier-1) suite runs this module through the tests/test_multidevice.py
+subprocess launcher; direct invocation:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 REPRO_MULTIDEV=1 \
+        PYTHONPATH=src python -m pytest tests/test_sharded_serving.py -q
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import adversarial_inputs as adv
+from adversarial_inputs import adversarial_case  # noqa: F401
+
+pytestmark = pytest.mark.multidevice
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models.model_zoo import build
+from repro.runtime import (
+    EngineReplicaGroup,
+    ServeEngine,
+    chunked_cold_reference,
+    paged_bytes,
+    paged_bytes_per_device,
+    pool_shardings,
+    sharded_pool_device_bytes,
+)
+
+GEN = 4
+PROMPT_LENS = (37, 21, 45, 12, 30, 9)
+
+
+@pytest.fixture(scope="module")
+def shard_bundle():
+    """qwen2-7b reduced, kv heads restored to the real config's 4 so the
+    model axis of a 2x4 mesh divides them (the reduced() preset caps kv
+    heads at 2, which would force the replicated fallback)."""
+    cfg = get_config("qwen2-7b").reduced()
+    cfg = dataclasses.replace(cfg, n_heads=8, n_kv_heads=4)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+@pytest.fixture(scope="module")
+def workload(shard_bundle):
+    rng = np.random.default_rng(0)
+    vocab = shard_bundle[0].cfg.vocab_size
+    return [list(rng.integers(0, vocab, n)) for n in PROMPT_LENS]
+
+
+def _mesh_2x4():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 host devices (XLA_FLAGS in the launcher)")
+    return make_mesh((2, 4), ("data", "model"))
+
+
+def _model_mesh(m):
+    if jax.device_count() < m:
+        pytest.skip(f"needs {m} host devices")
+    return make_mesh((1, m), ("data", "model"))
+
+
+def _serve_single(bundle, params, prompts, mesh=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("num_pages", 48)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq_len", 64)
+    kw.setdefault("prefill_chunk", 16)
+    eng = ServeEngine(bundle, params, mesh=mesh, **kw)
+    reqs = [eng.submit(p, GEN) for p in prompts]
+    eng.run_to_completion()
+    return [r.generated for r in reqs], eng
+
+
+def _assert_pools_bit_equal(pool_a, pool_b):
+    """Every physical page's bytes (codes AND sidecars) must match
+    bitwise; page 0 is the shared write sink (pad rows land there in
+    schedule-dependent order) and is excluded."""
+    assert set(pool_a) == set(pool_b)
+    for name in pool_a:
+        a, b = np.asarray(pool_a[name]), np.asarray(pool_b[name])
+        np.testing.assert_array_equal(a[:, 1:], b[:, 1:], err_msg=name)
+
+
+# ------------------------------------------------- engine bit-identity --
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_model_sharded_serve_bit_identity(shard_bundle, workload, dtype):
+    """THE sharded-serving contract, model axis: a pool kv-head-sharded
+    over 4 devices serves the ragged workload with token streams AND page
+    bytes bit-identical to the 1-device serve, at raw and quantized pool
+    dtypes, with per-device pool HBM == 1/4 of the global pool."""
+    bundle, params = shard_bundle
+    mesh = _model_mesh(4)
+    ref, ref_eng = _serve_single(bundle, params, workload, cache_dtype=dtype)
+    got, eng = _serve_single(
+        bundle, params, workload, mesh=mesh, cache_dtype=dtype,
+    )
+    assert got == ref
+    _assert_pools_bit_equal(ref_eng.pool, eng.pool)
+    total = paged_bytes(eng.pool)
+    per_dev = paged_bytes_per_device(eng.pool)
+    assert per_dev * 4 == total
+    # the analytic helper (benchmarks) mirrors the measured layout
+    cfg = bundle.cfg
+    assert per_dev == sharded_pool_device_bytes(
+        cfg.n_layers, eng.num_pages, eng.page_size, cfg.kv_dim,
+        dtype, cfg.n_kv_heads, 4,
+    )
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_2x4_replica_serve_bit_identity(shard_bundle, workload, dtype):
+    """The acceptance serve: 8 devices as 2 data replicas x 4-way
+    kv-head-sharded pools, fed round-robin from one queue.  Token streams
+    match the 1-device serve of the same submissions; each replica's page
+    bytes match a 1-device engine serving that replica's request subset
+    (round-robin admission order => same page assignment)."""
+    bundle, params = shard_bundle
+    mesh = _mesh_2x4()
+    kw = dict(
+        max_batch=3, num_pages=24, page_size=8, max_seq_len=64,
+        prefill_chunk=16, cache_dtype=dtype,
+    )
+    grp = EngineReplicaGroup(bundle, params, mesh, **kw)
+    reqs = [grp.submit(p, GEN) for p in workload]
+    grp.run_to_completion()
+    got = [r.generated for r in reqs]
+
+    # one-device serve of the same workload (single engine, no mesh)
+    ref, _ = _serve_single(
+        bundle, params, workload, max_batch=6, num_pages=48,
+        cache_dtype=dtype,
+    )
+    assert got == ref
+
+    # page-byte contract per replica: round-robin deals requests i::2 to
+    # replica i; a 1-device engine serving exactly that subset in the
+    # same order must leave bit-identical pool bytes
+    for i, eng in enumerate(grp.engines):
+        _, sub_eng = _serve_single(
+            bundle, params, workload[i::2], **kw,
+        )
+        _assert_pools_bit_equal(sub_eng.pool, eng.pool)
+        assert paged_bytes_per_device(eng.pool) * 4 == paged_bytes(eng.pool)
+
+    st = grp.stats()
+    assert st["replicas"] == 2
+    assert st["finished"] == len(workload)
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_sharded_preempt_resume_bit_identity(shard_bundle, workload, dtype):
+    """The strictest existing scheduling contract - preempt-to-page-out
+    and bit-identical resume - run against the kv-head-sharded pool on a
+    2-device model mesh: page-out donates SHARDED pages to the prefix
+    cache and the resumed stream still reproduces the uninterrupted serve
+    exactly (sharding is invisible to the page lifecycle)."""
+    bundle, params = shard_bundle
+    mesh = _model_mesh(2)
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=12, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        preemption=True, preempt_patience=2, cache_dtype=dtype, mesh=mesh,
+    )
+    ra = eng.submit(workload[2], 12)     # long straggler: 45 + 12 = 7 pages
+    for _ in range(3):
+        eng.step()                       # past prefill, into decode
+    assert ra.generated, "straggler should be mid-decode before preemption"
+    rb = eng.submit(workload[0], GEN)    # 37 + 4 -> 6 pages: cannot coexist
+    eng.run_to_completion()
+    assert eng.preemptions >= 1
+    assert ra.preempt_count >= 1
+    for r, prompt, gen in ((ra, workload[2], 12), (rb, workload[0], GEN)):
+        # the oracle serves on ONE unsharded device - cross-layout bitwise
+        assert r.generated == chunked_cold_reference(
+            bundle, params, prompt, gen, page_size=8, prefill_chunk=16,
+            cache_dtype=dtype,
+        )
+
+
+def test_non_divisible_kv_heads_fall_back_replicated(workload):
+    """kv heads (2) don't divide the model axis (4): every pool leaf must
+    fall back to replication - and the serve still matches the 1-device
+    streams (the divisibility rule changes layout, never correctness)."""
+    cfg = get_config("qwen3-4b").reduced()      # kvh = 2
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [
+        list(rng.integers(0, cfg.vocab_size, n)) for n in (37, 21, 12)
+    ]
+    mesh = _model_mesh(4)
+    sh = pool_shardings(
+        mesh, {"k": None, "v": None}, cfg.n_kv_heads
+    )
+    assert all(s.is_fully_replicated for s in sh.values())
+    ref, _ = _serve_single(bundle, params, prompts)
+    got, eng = _serve_single(bundle, params, prompts, mesh=mesh)
+    assert got == ref
+    # replicated leaves: every device stores the full pool
+    assert paged_bytes_per_device(eng.pool) == paged_bytes(eng.pool)
+
+
+def test_replica_group_validation(shard_bundle):
+    bundle, params = shard_bundle
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices")
+    bad = make_mesh((2, 2), ("pod", "model"))
+    with pytest.raises(ValueError):
+        EngineReplicaGroup(bundle, params, bad)
+
+
+# ---------------------------------------------- kernel entry points --
+
+def _paged_case(rng_key, case, *, kvh, g, d=32, page=8, n_pages=9,
+                quantized=False):
+    """Adversarial K/V laid out as physical pages + identity page table."""
+    mp = n_pages - 1
+    s2 = mp * page
+    q, kc, vc = adv.make_adversarial(
+        case, rng_key, q_shape=(1, kvh, g, d), kv_shape=(1, kvh, s2, d),
+    )
+    table = jnp.arange(1, n_pages, dtype=jnp.int32).reshape(1, mp)
+    kv_len = jnp.asarray([s2], jnp.int32)
+    raw_k = jnp.moveaxis(kc, 1, 2).reshape(mp, page, kvh, d)
+    raw_v = jnp.moveaxis(vc, 1, 2).reshape(mp, page, kvh, d)
+    quant = {}
+    if quantized:
+        from repro.runtime import quantize_kv_page
+
+        valid = jnp.ones((mp, page), bool)
+        kcodes, ksc, ksh = quantize_kv_page(raw_k, valid, "int8")
+        vcodes, vsc, vsh = quantize_kv_page(raw_v, valid, "int8")
+        kp = jnp.zeros((n_pages, page, kvh, d), jnp.int8).at[1:].set(kcodes)
+        vp = jnp.zeros((n_pages, page, kvh, d), jnp.int8).at[1:].set(vcodes)
+        quant = dict(
+            k_scale=jnp.zeros((n_pages, kvh)).at[1:].set(ksc),
+            k_shift=jnp.zeros((n_pages, kvh, d)).at[1:].set(ksh),
+            v_scale=jnp.zeros((n_pages, kvh)).at[1:].set(vsc),
+            v_shift=jnp.zeros((n_pages, kvh, d)).at[1:].set(vsh),
+        )
+    else:
+        kp = jnp.zeros((n_pages, page, kvh, d), jnp.float32).at[1:].set(raw_k)
+        vp = jnp.zeros((n_pages, page, kvh, d), jnp.float32).at[1:].set(raw_v)
+    return q, kp, vp, table, kv_len, quant
+
+
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["raw", "int8"])
+def test_sharded_paged_decode_bit_identical(adversarial_case, quantized):
+    """kv-head-split shard_map decode == the unsharded call, BITWISE, on
+    every adversarial generator, raw and quantized pools (the per-head
+    locality argument: nothing in the kernel crosses the KVH axis)."""
+    from repro.core import FP32
+    from repro.kernels import pasa_paged_decode, pasa_paged_decode_sharded
+
+    mesh = _model_mesh(4)
+    q, kp, vp, table, kv_len, quant = _paged_case(
+        jax.random.PRNGKey(3), adversarial_case, kvh=4, g=2,
+        quantized=quantized,
+    )
+    ref = pasa_paged_decode(
+        q, kp, vp, table, kv_len, policy=FP32, use_kernel=False, **quant,
+    )
+    got = pasa_paged_decode_sharded(
+        q, kp, vp, table, kv_len, mesh=mesh, policy=FP32,
+        use_kernel=False, **quant,
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["raw", "int8"])
+def test_sharded_paged_prefill_bit_identical(adversarial_case, quantized):
+    """kv-head-split shard_map prefill == the unsharded call, BITWISE
+    (queries split along their kv-head-major H axis, whole GQA groups per
+    device)."""
+    from repro.core import FP32
+    from repro.kernels import pasa_paged_prefill, pasa_paged_prefill_sharded
+
+    mesh = _model_mesh(4)
+    q1, kp, vp, table, kv_len, quant = _paged_case(
+        jax.random.PRNGKey(5), adversarial_case, kvh=4, g=2,
+        quantized=quantized,
+    )
+    cs, d = 16, q1.shape[-1]
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, 8, cs, d), jnp.float32)
+    start = kv_len - cs
+    ref = pasa_paged_prefill(
+        q, kp, vp, table, start, kv_len, policy=FP32, use_kernel=False,
+        **quant,
+    )
+    got = pasa_paged_prefill_sharded(
+        q, kp, vp, table, start, kv_len, mesh=mesh, policy=FP32,
+        use_kernel=False, **quant,
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_prefill_ring_fallback_exact_softmax():
+    """kv heads (3) don't divide the model axis (4): the prefill entry
+    point takes the core/ring.py sequence-parallel fallback.  The ring
+    fold order is device-count-dependent, so the contract is EXACT
+    SOFTMAX, not bitwise: at fp64 statistics the result must sit within
+    accumulation noise of the unsharded chunk-exact reference."""
+    from repro.core import F64
+    from repro.core.numerics import rmse
+    from repro.kernels import pasa_paged_prefill, pasa_paged_prefill_sharded
+
+    mesh = _model_mesh(4)
+    kvh, g, d, page, n_pages = 3, 2, 32, 8, 9
+    q1, kp, vp, table, kv_len, _ = _paged_case(
+        jax.random.PRNGKey(11), "seq_bias", kvh=kvh, g=g, d=d, page=page,
+        n_pages=n_pages,
+    )
+    cs = 16
+    q = jax.random.normal(
+        jax.random.PRNGKey(13), (1, kvh * g, cs, d), jnp.float32
+    )
+    start = kv_len - cs
+    ref = pasa_paged_prefill(
+        q, kp, vp, table, start, kv_len, policy=F64, use_kernel=False,
+    )
+    got = pasa_paged_prefill_sharded(
+        q, kp, vp, table, start, kv_len, mesh=mesh, policy=F64,
+        use_kernel=False,
+    )
+    assert got.shape == ref.shape
+    assert rmse(got, ref) < 1e-10
+
+
+def test_ring_kv_len_masks_stale_debris():
+    """The ring fallback zeroes + masks columns past kv_len: poisoning
+    the dead tail pages with Inf/NaN must not perturb the output."""
+    from repro.core import F64
+    from repro.core.numerics import rmse
+    from repro.kernels import pasa_paged_prefill_sharded
+
+    mesh = _model_mesh(4)
+    kvh, g, d, page, n_pages = 3, 2, 32, 8, 9
+    q1, kp, vp, table, kv_len, _ = _paged_case(
+        jax.random.PRNGKey(17), "seq_bias", kvh=kvh, g=g, d=d, page=page,
+        n_pages=n_pages,
+    )
+    cs = 16
+    q = jax.random.normal(
+        jax.random.PRNGKey(19), (1, kvh * g, cs, d), jnp.float32
+    )
+    live = jnp.asarray([40], jnp.int32)       # 5 of 8 pages live
+    start = live - cs
+    clean = pasa_paged_prefill_sharded(
+        q, kp, vp, table, start, live, mesh=mesh, policy=F64,
+        use_kernel=False,
+    )
+    poison = kp.at[6:].set(jnp.inf).at[7].set(jnp.nan)
+    vpois = vp.at[6:].set(-jnp.inf)
+    dirty = pasa_paged_prefill_sharded(
+        q, poison, vpois, table, start, live, mesh=mesh, policy=F64,
+        use_kernel=False,
+    )
+    assert bool(jnp.all(jnp.isfinite(dirty)))
+    assert rmse(dirty, clean) < 1e-12
