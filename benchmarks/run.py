@@ -3,9 +3,11 @@
 # Also writes two machine-diffable JSON trajectories:
 #   benchmarks/BENCH_numerics.json - per-pool-dtype paged-decode RMSE vs
 #     fp64 exact attention (accuracy regressions are a JSON diff);
-#   benchmarks/BENCH_serving.json - deterministic engine-step latency of
-#     the bursty-arrival scheduler sweep (scheduler_burst.py): mean/worst
-#     TTFT and drain steps per policy x prefill-batch configuration.
+#   benchmarks/BENCH_serving.json - engine-step latency of the bursty-
+#     arrival scheduler sweep (scheduler_burst.py): deterministic
+#     mean/worst TTFT and drain steps per policy x prefill-batch
+#     configuration, plus the wall-clock sync-vs-async pipelining pair
+#     (real tokens/sec and TTFT-seconds; streams asserted bit-identical).
 import json
 import os
 import sys

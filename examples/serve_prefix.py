@@ -13,6 +13,10 @@ the attention kernel at read time, so cached pages hold RAW K/V whose
 contents are a function of the token prefix alone (the chunk-exact
 convention) - cache-hit serving is therefore BIT-IDENTICAL to cold
 serving, verified below against a fresh cacheless engine per request.
+The serving engine here runs ASYNC (``pipeline_depth=1``, one step kept
+in flight): donation, cache hits, and streams are unchanged by
+host/device overlap, so the same cold oracle gates both properties at
+once.
 
 Run:  PYTHONPATH=src python examples/serve_prefix.py
 (CPU-friendly: reduced config, XLA gather fallback for the paged paths.)
@@ -45,7 +49,7 @@ def main():
     eng = ServeEngine(
         bundle, params, max_batch=2, num_pages=64, page_size=PAGE,
         max_seq_len=SYSTEM_LEN + 16 + GEN,
-        prefill_chunk=CHUNK, prefix_cache=True,
+        prefill_chunk=CHUNK, prefix_cache=True, pipeline_depth=1,
     )
 
     print(f"system prompt {SYSTEM_LEN} tokens ({SYSTEM_LEN // PAGE} pages), "

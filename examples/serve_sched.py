@@ -2,10 +2,13 @@
 preempt-to-page-out - all without moving a single output bit.
 
 Part 1 - burst: six requests (mixed prompt lengths) arrive one per engine
-step, more than the batch has slots.  The same burst is served under four
-scheduler configurations; per-request TTFT (engine steps from submit) and
-the drain time change, the generated tokens do not - the chunk-exact
-convention makes every schedule produce bit-identical streams.
+step, more than the batch has slots.  The same burst is served under five
+engine configurations - four scheduler policies plus the async pipelined
+engine (``pipeline_depth=1``, one step kept in flight); per-request TTFT
+(engine steps from submit) and the drain time change, the generated
+tokens do not - the chunk-exact convention makes every schedule produce
+bit-identical streams, and count-based planning extends that to
+host/device overlap.
 
 Part 2 - preemption: a long straggler holds most of a deliberately tiny
 page pool when a medium request arrives.  With ``preemption=True`` the
@@ -63,6 +66,7 @@ def main():
         ("fcfs  batched    ", dict(scheduler="fcfs")),
         ("sjf   batched    ", dict(scheduler="sjf")),
         ("mixed budget=36  ", dict(scheduler="mixed", step_token_budget=36)),
+        ("fcfs  async d=1  ", dict(scheduler="fcfs", pipeline_depth=1)),
     ]
     base = None
     for name, kw in configs:
@@ -72,15 +76,19 @@ def main():
         assert out == base, f"{name} changed output bits!"
         print(f"{name}: mean TTFT {np.mean(ttfts):5.1f} steps "
               f"(worst {max(ttfts):2d}) | drain {steps} steps")
-    print("\nall four schedules produced BIT-IDENTICAL token streams\n")
+    print("\nall five configurations (incl. async pipelined) produced "
+          "BIT-IDENTICAL token streams\n")
 
     # ---- part 2: preempt-to-page-out ---------------------------------
     long_p = prompts[0]                   # 96 tokens
     med_p = prompts[3]                    # 64 tokens
+    # pipeline_depth=1: preemption under pipelining takes the
+    # drain-and-replan path (recording replay tokens needs values), and
+    # the resumed stream must still be bit-exact
     eng = ServeEngine(
         bundle, params, max_batch=2, num_pages=18, page_size=PAGE,
         max_seq_len=128, prefill_chunk=CHUNK, prefix_cache=True,
-        preemption=True, preempt_patience=2,
+        preemption=True, preempt_patience=2, pipeline_depth=1,
     )
     ra = eng.submit(long_p, 16)           # 96+16 -> 14 of 17 pages
     for _ in range(5):

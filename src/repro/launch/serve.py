@@ -33,6 +33,19 @@ sampling on the paged route (temperature 0 = greedy argmax, the
 bit-exact default); keys derive from (request id, token index), so
 sampled streams are reproducible and scheduling-invariant too.
 
+Async pipelining: ``--async`` serves with ``pipeline_depth=1`` - the
+engine plans and dispatches step N+1 while step N's tokens are still on
+device, hiding host scheduling behind device execution; ``--sync``
+(default) is the fully synchronous reference.  The two modes emit
+bit-identical streams (tests/test_async_engine.py), so ``--async`` is a
+pure wall-clock knob.  ``--stream`` prints each token as it is
+MATERIALIZED (the engine's ``on_token`` callback - in async mode this
+lags dispatch by one step), and ``--disconnect-after N`` simulates a
+streaming client hanging up after N tokens of request 0: the driver
+calls ``engine.cancel()`` between steps, which drains the pipeline,
+frees the request's private pages, and donates its full prompt pages to
+the prefix cache.
+
 Sharded paged serving: ``--mesh DxM --paged`` actually USES the mesh -
 the ``data`` axis runs D engine replicas round-robin from one queue and
 the ``model`` axis shards every replica's page pool (and its two jitted
@@ -142,6 +155,23 @@ def main(argv=None):
                          "measured WORSE end-to-end attention on outlier-"
                          "heavy traffic - see runtime/README.md; prefer "
                          "--kv-dtype fp8_e4m3 there)")
+    ap.add_argument("--async", dest="pipelined", action="store_true",
+                    default=False,
+                    help="paged route: async pipelined serving "
+                         "(pipeline_depth=1) - overlap host scheduling "
+                         "with device execution; streams stay "
+                         "bit-identical to --sync")
+    ap.add_argument("--sync", dest="pipelined", action="store_false",
+                    help="paged route: fully synchronous stepping "
+                         "(default; the bit-identity reference)")
+    ap.add_argument("--stream", action="store_true",
+                    help="paged route: print each token as it is "
+                         "materialized (the per-token on_token callback)")
+    ap.add_argument("--disconnect-after", type=int, default=0,
+                    help="paged route: simulate request 0's streaming "
+                         "client disconnecting after N tokens - the "
+                         "driver cancels it mid-stream (pages freed, "
+                         "prompt pages donated to the prefix cache)")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     action="store_true", default=False,
                     help="share identical prompt-prefix KV pages across "
@@ -292,7 +322,25 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         temperature=args.temperature,
         top_k=args.top_k,
         sample_seed=args.sample_seed,
+        pipeline_depth=1 if args.pipelined else 0,
     )
+
+    # streaming emission: tokens arrive through on_token as they are
+    # MATERIALIZED (at retirement - one step behind dispatch in --async).
+    # --disconnect-after simulates request 0's client hanging up: the
+    # callback only FLAGS the disconnect; the driver calls cancel()
+    # between steps (never from inside a retirement).
+    hangup: list = []
+    if args.stream or args.disconnect_after:
+        def on_token(r, idx, tok):
+            if args.stream:
+                print(f"[stream] req {r.req_id} #{idx}: {tok}")
+            if (args.disconnect_after and r.req_id == 0
+                    and idx + 1 >= args.disconnect_after
+                    and 0 not in hangup):
+                hangup.append(0)
+        engine_kwargs["on_token"] = on_token
+
     if mesh is not None and (n_data > 1 or n_model > 1):
         eng = EngineReplicaGroup(bundle, params, mesh, **engine_kwargs)
         placement = f"{n_data} replicas x model={n_model} pool shards"
@@ -301,17 +349,39 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         placement = "1 device"
     reqs = [eng.submit(list(p), args.gen) for p in prompts]
     t0 = time.time()
-    eng.run_to_completion()
+    if args.stream or args.disconnect_after:
+        cancelled = set()
+        while not eng.idle:
+            eng.step()
+            while hangup:
+                rid = hangup.pop()
+                if rid not in cancelled and eng.cancel(rid):
+                    cancelled.add(rid)
+                    print(f"[stream] req {rid} client disconnected -> "
+                          "cancelled (pages reclaimed)")
+        eng.drain()       # stream boundary: flush trailing emissions
+    else:
+        eng.run_to_completion()
     dt = time.time() - t0
-    gen = np.stack(
-        [np.asarray(r.generated, np.int32) for r in reqs], axis=0
-    )
+    # a cancelled request's stream is legitimately short: right-pad its
+    # row with -1 so the report keeps one row per submitted request
+    gen = np.stack([
+        np.asarray(
+            list(r.generated) + [-1] * (args.gen - len(r.generated)),
+            np.int32,
+        )
+        for r in reqs
+    ], axis=0)
     st = eng.stats()
     # measured from SUBMIT so queueing counts - and so the number stays
     # meaningful under --preemption (re-admission overwrites admit_step,
     # while first_token_step keeps the original emission)
-    ttft_steps = [r.first_token_step - r.submit_step + 1 for r in reqs]
+    ttft_steps = [
+        r.first_token_step - r.submit_step + 1 for r in reqs
+        if r.first_token_step >= 0    # cancelled before its first token
+    ]
     mode = ("chunked" if args.chunked_prefill else "token-by-token")
+    mode += "/async" if args.pipelined else "/sync"
     sched = (
         st["scheduler"] if "scheduler" in st
         else st["engines"][0]["scheduler"]
@@ -320,13 +390,19 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         st["pool_dtype"] if "pool_dtype" in st
         else st["engines"][0]["pool_dtype"]
     )
+    n_tokens = int(sum(len(r.generated) for r in reqs))
+    n_cancel = (
+        st["cancellations"] if "cancellations" in st
+        else sum(s["cancellations"] for s in st.get("engines", ()))
+    )
     print(f"[paged/{mode}/{sched}] generated {gen.shape} tokens "
-          f"in {dt:.2f}s ({1000*dt/max(st['steps'],1):.1f} ms/step), "
+          f"in {dt:.2f}s ({1000*dt/max(st['steps'],1):.1f} ms/step, "
+          f"{n_tokens/max(dt, 1e-9):.1f} tok/s wall-clock), "
           f"pool={st['cache_bytes']/1e6:.2f} MB total {dtype_name} "
           f"({st['cache_bytes_per_device']/1e6:.2f} MB/device; {placement}; "
           f"{num_pages} pages x {page_size} tok per replica), "
           f"TTFT {np.mean(ttft_steps):.1f} engine steps, "
-          f"{st['preemptions']} preemptions")
+          f"{st['preemptions']} preemptions, {n_cancel} cancellations")
     if args.prefix_cache:
         # single engine: top-level stats; replica group: sum per engine
         pcs = (

@@ -74,6 +74,29 @@ model's PASA block length (``cfg.attention.block_kv``), making one page ==
 one PASA shift block; both paged kernels compute their per-block key shift
 page-locally, so page granularity and shift granularity coincide - the
 property that makes raw-K/V page sharing exact (runtime/prefix_cache.py).
+
+Async pipelining (``pipeline_depth >= 1``): every step is split into a
+host-side PLAN phase (trim, admission, policy decisions, page-table
+assembly - pure host, no device sync) and a device DISPATCH phase (the
+two jitted calls, enqueued asynchronously).  The host never reads a
+sampled token back on the per-step path: the next-token feed lives ON
+DEVICE (``_next_dev``, composed with host-known overrides - teacher
+forcing, replay - by a tiny eager select at dispatch), finish decisions
+are COUNT-based (every decode row emits exactly one token, so
+``len(generated)`` advances deterministically at dispatch), and emitted
+values are materialized lag-``pipeline_depth`` by :meth:`_retire_one` -
+AFTER the next step has been dispatched, so the readback overlaps device
+execution.  The only legal synchronous readbacks are the annotated drain
+points (``@_drain_point``; enforced by tests/test_async_guard.py):
+retirement itself, and :meth:`drain` - called before a plan decision that
+genuinely depends on token VALUES (preemption must record the victim's
+generated tokens for replay; :meth:`cancel` mid-flight).  Because both
+modes run the SAME compiled programs on bit-identical inputs (page
+tables and token vectors are freshly copied per dispatch - double
+-buffered - and the pool is donated through the call chain, which also
+device-orders page reuse and prefix-cache donation across overlapping
+steps), the async engine's token streams and final page bytes are
+BIT-IDENTICAL to the synchronous engine's (tests/test_async_engine.py).
 """
 
 from __future__ import annotations
@@ -81,7 +104,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +125,27 @@ from repro.runtime.scheduler import RequestView, get_scheduler
 WAITING = "waiting"
 RUNNING = "running"
 FINISHED = "finished"
+CANCELLED = "cancelled"
+
+
+#: One fused jitted select for the async hot path (feed composition and
+#: the device-resident ``_next_dev`` update).  An exact int32 lane pick -
+#: jit-vs-eager changes dispatch cost, never a bit - but collapsing the
+#: eager transfer+where chains into a single dispatch matters on the
+#: per-step path: async mode pays this INSTEAD of a readback, so its
+#: overhead bounds how much overlap can show up as wall-clock.
+_select_i32 = jax.jit(lambda known, host, dev: jnp.where(known, host, dev))
+
+
+def _drain_point(fn):
+    """Mark a method as a LEGAL synchronous-readback site of the async
+    pipeline.  tests/test_async_guard.py parses this module and fails if
+    a device readback (``np.asarray``, ``jax.device_get``,
+    ``block_until_ready``, ``.item()``) appears in any engine method NOT
+    carrying this marker - the static guard that keeps host/device
+    overlap from silently regressing."""
+    fn.__drain_point__ = True
+    return fn
 
 
 def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
@@ -184,6 +228,11 @@ class Request:
     blocked_steps: int = 0   # consecutive page-starved admission attempts
     preempt_count: int = 0
     preempt_step: int = -1
+    # async pipelining: entries of ``generated`` whose VALUE is still on
+    # device (None placeholders, filled in dispatch order at retirement).
+    # The COUNT len(generated) is always exact - it advances at dispatch -
+    # so finish/budget/policy decisions never wait on a readback.
+    pending: int = 0
 
     @property
     def total_len(self) -> int:
@@ -194,6 +243,25 @@ class Request:
         # generated token is returned, never fed back) - so only
         # total_len - 1 positions need page backing.
         return math.ceil(max(self.total_len - 1, 1) / page_size)
+
+
+@dataclasses.dataclass
+class _InflightStep:
+    """Device work dispatched for one engine step whose sampled tokens
+    have not been read back yet.  ``*_tok`` hold the (possibly still
+    executing) device outputs; ``*_emits`` record which
+    ``(request, generated-index, output-row)`` each value belongs to -
+    fixed at dispatch, so retirement is a pure fill-in."""
+
+    step_no: int
+    prefill_tok: Optional[jax.Array] = None
+    prefill_emits: List[Tuple[Request, int, int]] = dataclasses.field(
+        default_factory=list
+    )
+    decode_tok: Optional[jax.Array] = None
+    decode_emits: List[Tuple[Request, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
 
 def _make_sampler(temperature: float, top_k: int, base_key):
@@ -271,6 +339,20 @@ class ServeEngine:
         ``prefix_cache``).  When live pages exceed ``trim_high`` of the
         pool, refcount-0 cache pages are evicted down toward ``trim_low``
         at the top of the step.
+      pipeline_depth: device steps allowed in flight AHEAD of token
+        readback.  0 (default) = synchronous: every step's tokens are
+        materialized before :meth:`step` returns, exactly the pre-async
+        engine.  1 = async pipelining: step N+1 is planned and dispatched
+        from optimistically-advanced host state while step N's tokens are
+        still on device; N's values are filled in afterwards by
+        :meth:`_retire_one`, overlapping host work with device execution.
+        Both modes run the SAME compiled programs on bit-identical inputs,
+        so streams and page bytes are mode-invariant (module doc).
+      on_token: optional ``callback(request, token_index, token)`` invoked
+        as each generated token is MATERIALIZED (at retirement, in
+        dispatch order) - the streaming-emission hook.  In async mode the
+        callback for step N fires after step N+1 was dispatched; use
+        :meth:`drain` to force all pending emissions at a stream boundary.
       temperature / top_k / sample_seed: serve-path sampling.
         ``temperature=0`` (default) = greedy argmax, bit-identical to the
         pre-sampling engine.  ``temperature>0`` samples from the
@@ -325,6 +407,8 @@ class ServeEngine:
         top_k: int = 0,
         sample_seed: int = 0,
         mesh=None,
+        pipeline_depth: int = 0,
+        on_token: Optional[Callable[[Request, int, int], None]] = None,
     ):
         if not bundle.supports_paged:
             raise ValueError(
@@ -449,6 +533,24 @@ class ServeEngine:
         self.last_step_tokens = 0
         self.max_step_tokens = 0
         self._req_counter = 0
+
+        if pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth}"
+            )
+        self.pipeline_depth = int(pipeline_depth)
+        self.on_token = on_token
+        self.cancellations = 0
+        # steps dispatched but not yet retired (oldest first); bounded by
+        # pipeline_depth at the end of every step().
+        self._inflight: deque = deque()
+        # The decode-step token feed is split: slots whose next input the
+        # host KNOWS (teacher forcing, replay, prompt starts) read
+        # _next_token under _next_known; the rest read the on-device
+        # _next_dev - the previous step's sampled output, never read back
+        # on the per-step path (see _compose_feed).
+        self._next_known = np.ones((self.max_batch,), bool)
+        self._next_dev = jnp.zeros((self.max_batch,), jnp.int32)
 
         step = bundle.paged_serve_step
         sampled = self.temperature > 0.0
@@ -683,6 +785,7 @@ class ServeEngine:
             pages_needed=r.pages_needed(self.page_size),
             preempt_count=r.preempt_count,
             preempt_step=r.preempt_step,
+            pending_tokens=r.pending,
         )
 
     # --------------------------------------------------------- admission --
@@ -744,6 +847,7 @@ class ServeEngine:
             r.prefill_pos = len(r.prompt)  # unused in this mode
             r.cursor = 0
             self._next_token[slot] = r.prompt[0]
+            self._next_known[slot] = True
         return "admitted"
 
     def _admit_pass(self) -> Optional[Request]:
@@ -817,6 +921,12 @@ class ServeEngine:
             avail += self.prefix_cache.evictable_pages
         if avail < blocked.pages_needed(self.page_size):
             return
+        # Drain-and-replan: preemption must record the victim's generated
+        # tokens for REPLAY - the one plan decision that depends on token
+        # VALUES, not counts - so the pipeline synchronizes here before
+        # the victim is paged out.  (The preempt TRIGGER itself is
+        # count-based and fired without a readback.)
+        self.drain()
         self._preempt(victim)
         blocked.blocked_steps = 0
         self._admit_pass()
@@ -879,6 +989,80 @@ class ServeEngine:
         if n > self.max_step_tokens:
             self.max_step_tokens = int(n)
 
+    # ------------------------------------------------- retire / cancel --
+
+    @_drain_point
+    def _retire_one(self) -> None:
+        """Materialize the OLDEST in-flight step's sampled tokens: fill
+        the placeholder ``generated`` entries recorded at dispatch and
+        fire ``on_token`` in dispatch order (prefill completions first,
+        then decode rows - the synchronous emission order).  This is the
+        ONLY per-token device readback in the engine; in async mode it
+        runs AFTER the next step was dispatched, so the block overlaps
+        device execution instead of serializing with it."""
+        st = self._inflight.popleft()
+        for tok_dev, emits in (
+            (st.prefill_tok, st.prefill_emits),
+            (st.decode_tok, st.decode_emits),
+        ):
+            if not emits:
+                continue
+            vals = np.asarray(tok_dev)
+            for r, gen_idx, row in emits:
+                tok = int(vals[row])
+                r.generated[gen_idx] = tok
+                r.pending -= 1
+                if self.on_token is not None:
+                    self.on_token(r, gen_idx, tok)
+
+    def _retire_backlog(self) -> None:
+        """Retire down to ``pipeline_depth`` steps in flight (the tail of
+        every :meth:`step`; depth 0 = fully synchronous)."""
+        while len(self._inflight) > self.pipeline_depth:
+            self._retire_one()
+
+    @_drain_point
+    def drain(self) -> None:
+        """Retire EVERY in-flight step - the pipeline barrier.  Legal
+        sync points: stream boundaries (:meth:`run_to_completion`,
+        benchmark edges), value-dependent plan decisions (preemption
+        replay recording in :meth:`_try_admit`), and :meth:`cancel`."""
+        while self._inflight:
+            self._retire_one()
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request mid-stream (client disconnect).
+
+        WAITING requests leave the queue; a RUNNING request's slot is
+        released through the same path as preemption/finish - private
+        pages freed, prefill-written full prompt pages DONATED to the
+        prefix cache (their bytes are already valid shared state by the
+        chunk-exact purity argument, whether or not the client stayed to
+        see the stream).  Safe while a step is in flight: the pipeline is
+        drained first, so no in-flight emission can touch the request
+        after it is released, and page recycling stays ordered behind the
+        dispatched pool updates by donation threading.  Returns True if
+        the request was live (waiting or running), False otherwise."""
+        for r in self.waiting:
+            if r.req_id == req_id:
+                self.waiting.remove(r)
+                r.state = CANCELLED
+                r.finish_step = self.steps
+                self.cancellations += 1
+                return True
+        r = next(
+            (s for s in self._slots
+             if s is not None and s.req_id == req_id), None
+        )
+        if r is None:
+            return False
+        self.drain()
+        self._release_slot(r)
+        r.state = CANCELLED
+        r.finish_step = self.steps
+        self.cancellations += 1
+        return True
+
     # ---------------------------------------------------------- trimming --
 
     def _maybe_trim(self) -> None:
@@ -903,7 +1087,15 @@ class ServeEngine:
 
     @property
     def idle(self) -> bool:
-        return not self.waiting and self.num_running == 0
+        """No queued work, no live request, and nothing still in flight.
+
+        Counting ``_inflight`` makes ``while not eng.idle: eng.step()``
+        loops mode-agnostic: once the last live request finishes, the
+        next ``step()`` finds no dispatchable work and fully drains (see
+        :meth:`step`), so the loop exits only after every placeholder
+        has been retired into real tokens."""
+        return (not self.waiting and self.num_running == 0
+                and not self._inflight)
 
     @staticmethod
     def _sample_rows(pairs, n: int):
@@ -917,11 +1109,18 @@ class ServeEngine:
                 rids[i], idxs[i] = pairs[i]
         return jnp.asarray(rids), jnp.asarray(idxs)
 
-    def _run_prefill(self, plan):
+    def _run_prefill(self, plan, st: _InflightStep):
         """One BATCHED prefill call: each planned request contributes one
         chunk row (its own start offset, valid length, and page-table
         row); rows and tails are padded to the static (prefill_batch,
         prefill_chunk) grid and pad positions write to the null page.
+
+        The call is DISPATCHED, never synced: first-token values of
+        prompt-completing rows are recorded into ``st`` as placeholder
+        emissions, and rows without a host-known resume value get their
+        device output scattered into ``_next_dev`` (an eager gather/
+        scatter - data dependence, no readback) so the same step's decode
+        can consume them.
 
         Returns ``(tokens_spent, completed)``: the total REAL prefill
         tokens advanced (the spend the policy budgeted for) and the
@@ -962,30 +1161,64 @@ class ServeEngine:
                 [(r.req_id, len(r.generated)) for r, _ in rows], pb
             ))
         first, self.pool = self._device_call(self._prefill_fn, *args)
-        first = np.asarray(first)
+        st.prefill_tok = first
         completed = []
+        scatter: List[Tuple[int, int]] = []   # (slot, output row)
         for i, (r, real) in enumerate(rows):
             r.prefill_pos += real
             if r.prefill_pos >= len(r.prompt):
                 # this chunk contained the last prompt token; its logits
                 # row is the first generated token - TTFT is now.
-                tok = int(first[i])
-                r.generated.append(tok)
+                slot = r.slot
+                gen_idx = len(r.generated)
+                r.generated.append(None)       # filled at retirement
+                r.pending += 1
                 if r.first_token_step < 0:
                     r.first_token_step = self.steps
-                # resume replay: feed the recorded emission (bit-equal to
-                # the recomputed token) so the stream stays consistent.
-                self._next_token[r.slot] = (
-                    r.replay[0] if r.replay else tok
-                )
+                if r.replay:
+                    # resume replay: feed the recorded emission (bit-equal
+                    # to the recomputed token) so the stream stays
+                    # consistent - a host-KNOWN value.
+                    self._next_token[slot] = r.replay[0]
+                    self._next_known[slot] = True
+                else:
+                    self._next_known[slot] = False
+                    scatter.append((slot, i))
+                st.prefill_emits.append((r, gen_idx, i))
                 completed.append(r)
                 if len(r.generated) >= r.max_new_tokens:
                     self._finish(r)
+        if scatter:
+            slots = jnp.asarray([s for s, _ in scatter], jnp.int32)
+            srcs = jnp.asarray([i for _, i in scatter], jnp.int32)
+            self._next_dev = self._next_dev.at[slots].set(first[srcs])
         return sum(real for _, real in rows), completed
 
+    def _compose_feed(self):
+        """This step's decode token inputs: host-known values (teacher
+        forcing, replay, prompt starts) overriding the on-device sampled
+        tokens from the previous dispatch.  A fused int32 select
+        (:data:`_select_i32`) - exact by construction - so both pipeline
+        modes feed bit-identical vectors through the SAME jitted decode
+        program, and the host never touches a sampled value here.  Host
+        buffers are copied before crossing to device: the backend may
+        alias numpy memory zero-copy, and ``_next_token``/``_next_known``
+        mutate while async steps are still in flight (the page tables get
+        the same fresh-copy treatment at dispatch - the double-buffering
+        that makes overlap safe)."""
+        host = np.array(self._next_token)
+        if self._next_known.all():
+            return jnp.asarray(host)
+        return _select_i32(np.array(self._next_known), host, self._next_dev)
+
     def step(self) -> int:
-        """Trim, admit what the policy places, run the policy's batched
-        prefill plan + ONE batched decode step, advance cursors.
+        """One engine step: host PLAN (trim, admission, policy decisions,
+        page-table assembly), device DISPATCH (the policy's batched
+        prefill plan + ONE batched decode step, both enqueued without a
+        sync), optimistic host advance (cursors and ``generated`` COUNTS
+        - placeholder values), then retirement of any step beyond
+        ``pipeline_depth`` (depth 0 materializes this very step - the
+        synchronous mode).
 
         Returns the number of requests that were live this step.  ``steps``
         advances on every call (it is the engine's scheduling clock, used
@@ -997,10 +1230,15 @@ class ServeEngine:
         live = [r for r in self._slots if r is not None]
         if not live:
             self._account_step_tokens(0)   # idle tick spends nothing
+            # nothing to dispatch means nothing to overlap with: drain
+            # fully so ``while not eng.idle: eng.step()`` terminates with
+            # every placeholder retired (see :meth:`idle`)
+            self.drain()
             self.steps += 1
             return 0
         n_live = len(live)
 
+        st = _InflightStep(step_no=self.steps)
         if self.chunked_prefill:
             prefilling = [
                 r for r in self._slots
@@ -1018,7 +1256,7 @@ class ServeEngine:
                     max_rows=self.prefill_batch,
                 )
                 if plan:
-                    prefill_spent, completed = self._run_prefill(plan)
+                    prefill_spent, completed = self._run_prefill(plan, st)
             dec = [
                 r for r in self._slots
                 if r is not None and r.prefill_pos >= len(r.prompt)
@@ -1045,6 +1283,11 @@ class ServeEngine:
                         dec = [r for r in dec if r.req_id not in defer]
             self._account_step_tokens(len(dec) + prefill_spent)
             if not dec:
+                # prefill-only step: completions (if any, all budget
+                # -deferred) still owe their first-token emissions.
+                if st.prefill_emits:
+                    self._inflight.append(st)
+                self._retire_backlog()
                 self.steps += 1
                 return n_live
             # decode view of the table: slots not decoding THIS step
@@ -1057,42 +1300,57 @@ class ServeEngine:
                     table[i, :] = NULL_PAGE
         else:
             dec = live
-            table = self.page_table
+            # fresh copy per dispatch: the live table mutates under
+            # later admissions while this step may still be in flight
+            table = np.array(self.page_table)
             self._account_step_tokens(len(dec))
 
-        tokens = np.array(self._next_token)     # copy: stable under updates
         pos = np.zeros((self.max_batch,), np.int32)
         for r in dec:
             pos[r.slot] = r.cursor
 
-        args = [
-            self.params, jnp.asarray(tokens), jnp.asarray(pos), self.pool,
-            jnp.asarray(table),
-        ]
+        feed = self._compose_feed()
+        args = [self.params, feed, jnp.asarray(pos), self.pool,
+                jnp.asarray(table)]
         if self.temperature > 0.0:
             pairs = [None] * self.max_batch
             for r in dec:
                 pairs[r.slot] = (r.req_id, len(r.generated))
             args.extend(self._sample_rows(pairs, self.max_batch))
         nxt, self.pool = self._device_call(self._step_fn, *args)
-        nxt = np.asarray(nxt)
+        st.decode_tok = nxt
+        # keep each decoding slot's sampled output resident on device for
+        # the NEXT step's feed; non-decoding slots retain their value.
+        mask = np.zeros((self.max_batch,), bool)
+        for r in dec:
+            mask[r.slot] = True
+        self._next_dev = _select_i32(mask, nxt, feed)
 
+        # optimistic host advance: cursors, COUNTS, finish decisions -
+        # all deterministic at dispatch; values arrive at retirement.
         for r in dec:
             p = r.cursor
             r.cursor += 1
             if not self.chunked_prefill and p + 1 < len(r.prompt):
                 self._next_token[r.slot] = r.prompt[p + 1]   # teacher forcing
+                self._next_known[r.slot] = True
                 continue
+            slot = r.slot
             gen_idx = len(r.generated)
-            tok = int(nxt[r.slot])
-            r.generated.append(tok)
+            r.generated.append(None)           # filled at retirement
+            r.pending += 1
             if r.first_token_step < 0:
                 r.first_token_step = self.steps
-            self._next_token[r.slot] = (
-                r.replay[gen_idx] if gen_idx < len(r.replay) else tok
-            )
+            if gen_idx < len(r.replay):
+                self._next_token[slot] = r.replay[gen_idx]
+                self._next_known[slot] = True
+            else:
+                self._next_known[slot] = False   # value lives in _next_dev
+            st.decode_emits.append((r, gen_idx, slot))
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
+        self._inflight.append(st)
+        self._retire_backlog()
         self.steps += 1
         return n_live
 
@@ -1106,6 +1364,7 @@ class ServeEngine:
             if self.steps - start >= max_steps:
                 raise RuntimeError(f"engine did not drain in {max_steps} steps")
             self.step()
+        self.drain()   # stream boundary: materialize trailing emissions
         return self.finished
 
     # ------------------------------------------------------------- stats --
@@ -1131,6 +1390,9 @@ class ServeEngine:
             "temperature": self.temperature,
             "last_step_tokens": self.last_step_tokens,
             "max_step_tokens": self.max_step_tokens,
+            "pipeline_depth": self.pipeline_depth,
+            "inflight": len(self._inflight),
+            "cancellations": self.cancellations,
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
@@ -1168,7 +1430,9 @@ class EngineReplicaGroup:
         n_data = int(shape.get("data", 1))
         n_model = int(shape.get("model", 1))
         # row-major (data, model) device grid regardless of axis order
-        devs = np.asarray(mesh.devices)
+        # (np.array: a host object grid, not a device readback - the
+        # np.asarray/np.array convention tests/test_async_guard.py keys on)
+        devs = np.array(mesh.devices)
         if names and names[0] == "model" and "data" in names:
             devs = devs.T
         devs = devs.reshape(n_data, n_model)
@@ -1180,16 +1444,38 @@ class EngineReplicaGroup:
             for m in self.meshes
         ]
         self._rr = 0
+        self._req_counter = 0
+        self._owner: Dict[int, ServeEngine] = {}
 
     @property
     def n_replicas(self) -> int:
         return len(self.engines)
 
     def submit(self, prompt, max_new_tokens: int) -> Request:
-        """Round-robin deal from the one logical queue."""
+        """Round-robin deal from the one logical queue.  Request ids are
+        GROUP-global - the ids a single engine serving the same
+        submission order would assign - so per-(req id, token index)
+        sampling keys (and with them sampled streams) are deal-invariant,
+        and :meth:`cancel` can address a request without knowing which
+        replica owns it."""
         eng = self.engines[self._rr % len(self.engines)]
         self._rr += 1
-        return eng.submit(prompt, max_new_tokens)
+        rid = self._req_counter
+        self._req_counter += 1
+        r = eng.submit(prompt, max_new_tokens, req_id=rid)
+        self._owner[r.req_id] = eng
+        return r
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request on whichever replica owns it (see
+        :meth:`ServeEngine.cancel`)."""
+        eng = self._owner.get(req_id)
+        return False if eng is None else eng.cancel(req_id)
+
+    def drain(self) -> None:
+        """Pipeline barrier across every replica (stream boundary)."""
+        for e in self.engines:
+            e.drain()
 
     @property
     def idle(self) -> bool:
@@ -1199,7 +1485,13 @@ class EngineReplicaGroup:
         """Advance EVERY replica one engine step - idle ones included, so
         each replica's scheduling clock keeps the per-engine invariant
         (``steps`` advances on every call) and arrival-paced drivers that
-        poll ``steps`` never stall on an early-drained replica."""
+        poll ``steps`` never stall on an early-drained replica.
+
+        With async engines (``pipeline_depth >= 1``) the replicas advance
+        INDEPENDENTLY rather than lock-step: each per-replica call
+        dispatches without a readback barrier, so one replica's retirement
+        overlaps the others' device execution instead of serializing the
+        round."""
         return sum(e.step() for e in self.engines)
 
     def run_to_completion(self, max_steps: int = 100_000):
@@ -1214,6 +1506,7 @@ class EngineReplicaGroup:
                     f"replica group did not drain in {max_steps} steps"
                 )
             self.step()
+        self.drain()
         out: Dict[tuple, Request] = {}
         for i, e in enumerate(self.engines):
             for rid, r in e.finished.items():

@@ -40,6 +40,14 @@ Ownership / refcounting protocol (the engine side is runtime/engine.py):
 The allocator sees cached pages as *live*; ``evictable_pages`` is the slack
 admission control may reclaim on demand (engine charges a request only for
 its non-shared pages).
+
+Async pipelining (engine ``pipeline_depth >= 1``) needs no donation
+deferral: donation (on finish, preemption page-out, or ``cancel``) moves
+host-side page *ids* only, and the physical bytes of a donated page are
+written by jitted calls whose pool output threads into every later step's
+pool input - device data dependence orders the writes before any reuse or
+re-read, even while a step is still in flight.  The same argument covers
+recycling freed pages without scrubbing.
 """
 
 from __future__ import annotations

@@ -61,6 +61,16 @@ class RequestView:
     ``remaining_prefill`` counts prompt tokens whose K/V is not yet
     written (0 == decode phase); ``remaining_decode`` counts tokens still
     to generate.  ``slot``/``admit_step`` are -1 while waiting.
+
+    Under async pipelining the engine snapshots views from its
+    OPTIMISTICALLY-advanced state: token counts advance at dispatch, so
+    ``remaining_decode`` already reflects steps whose sampled values are
+    still on device - ``pending_tokens`` counts exactly those.  The
+    counts a policy sees at step N are therefore IDENTICAL in sync and
+    async modes (both advance at the same step boundary), which is what
+    makes scheduling decisions - and through them the device schedule -
+    mode-invariant.  Policies may use ``pending_tokens`` for
+    latency-shaping but get bit-identical ordering inputs either way.
     """
 
     req_id: int
@@ -77,6 +87,9 @@ class RequestView:
     #: forfeits its original seniority (it re-queues at the back), so its
     #: wait clock restarts at the page-out, not at submission.
     preempt_step: int = -1
+    #: generated-token entries counted in ``remaining_decode`` whose VALUES
+    #: are still in flight on device (0 in synchronous mode).
+    pending_tokens: int = 0
 
     @property
     def wait_anchor(self) -> int:

@@ -1,0 +1,295 @@
+"""Async pipelined serving: the mode-invariance contract (PR 6).
+
+The tentpole claim: splitting ``ServeEngine.step()`` into host PLAN +
+device DISPATCH and keeping a step in flight (``pipeline_depth=1``)
+moves WALL-CLOCK, never bits - the async engine's emitted token streams
+AND final physical page bytes are bit-identical to the synchronous
+engine's, across all three scheduling policies, all three pool dtypes,
+under preempt-resume (the drain-and-replan path), and with sampling on.
+The argument (runtime/engine.py module doc): both modes run the SAME
+compiled programs; decode inputs are composed by exact eager int32
+selects from the same values; all plan decisions are COUNT-based and
+counts advance at dispatch in both modes.
+
+Also here: the streaming-emission callback (values, order, both modes),
+and per-request cancellation - allocator free-list conservation (no page
+leaks), prompt-page donation to the prefix cache, and safety while a
+step is in flight.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    CANCELLED,
+    ServeEngine,
+    chunked_cold_reference,
+)
+
+PROMPT_LENS = (37, 21, 45, 12)
+GEN = 4
+
+POLICY_KW = {
+    "fcfs": dict(scheduler="fcfs"),
+    "sjf": dict(scheduler="sjf"),
+    "mixed": dict(scheduler="mixed", step_token_budget=24),
+}
+
+
+@pytest.fixture(scope="module")
+def tiny_bundle():
+    from repro.configs import get_config
+    from repro.models.model_zoo import build
+
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+@pytest.fixture(scope="module")
+def workload(tiny_bundle):
+    rng = np.random.default_rng(0)
+    vocab = tiny_bundle[0].cfg.vocab_size
+    return [list(rng.integers(0, vocab, n)) for n in PROMPT_LENS]
+
+
+def _serve(bundle, params, prompts, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("num_pages", 40)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq_len", 64)
+    kw.setdefault("prefill_chunk", 16)
+    eng = ServeEngine(bundle, params, **kw)
+    reqs = [eng.submit(p, GEN) for p in prompts]
+    eng.run_to_completion()
+    return [r.generated for r in reqs], eng
+
+
+def _assert_pools_bit_equal(pool_a, pool_b):
+    """Every physical page's bytes (codes AND sidecars) must match
+    bitwise; page 0 is the shared write sink (pad/dead rows land there in
+    schedule-dependent order) and is excluded."""
+    assert set(pool_a) == set(pool_b)
+    for name in pool_a:
+        a, b = np.asarray(pool_a[name]), np.asarray(pool_b[name])
+        np.testing.assert_array_equal(a[:, 1:], b[:, 1:], err_msg=name)
+
+
+def _assert_retired(eng, reqs):
+    """Every emission materialized: no placeholder survives a drain."""
+    assert eng.stats()["inflight"] == 0
+    for r in reqs:
+        assert r.pending == 0
+        assert all(isinstance(t, int) for t in r.generated)
+
+
+# ------------------------------------------------- headline invariant --
+
+@pytest.mark.parametrize("dtype", ["bf16", "fp8_e4m3", "int8"])
+@pytest.mark.parametrize("policy", ["fcfs", "sjf", "mixed"])
+def test_async_matches_sync_bitwise(tiny_bundle, workload, policy, dtype):
+    """THE acceptance matrix: async streams AND final page bytes ==
+    sync, for every policy x every pool dtype."""
+    bundle, params = tiny_bundle
+    kw = dict(cache_dtype=dtype, **POLICY_KW[policy])
+    ref, ref_eng = _serve(bundle, params, workload, pipeline_depth=0, **kw)
+    got, eng = _serve(bundle, params, workload, pipeline_depth=1, **kw)
+    assert got == ref
+    _assert_pools_bit_equal(ref_eng.pool, eng.pool)
+    assert eng.stats()["pipeline_depth"] == 1
+    assert eng.stats()["inflight"] == 0
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_async_preempt_resume_bit_identity(tiny_bundle, workload, dtype):
+    """Preemption under pipelining exercises drain-and-replan: the replay
+    recording forces the ONE mid-serve synchronization, and the resumed
+    stream must still reproduce the uninterrupted (synchronous, cold)
+    serve exactly."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=12, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        preemption=True, preempt_patience=2, cache_dtype=dtype,
+        pipeline_depth=1,
+    )
+    ra = eng.submit(workload[2], 12)     # long straggler: 45 + 12 = 7 pages
+    for _ in range(3):
+        eng.step()                       # past prefill, into decode
+    rb = eng.submit(workload[0], GEN)    # 37 + 4 -> 6 pages: cannot coexist
+    eng.run_to_completion()
+    assert eng.preemptions >= 1
+    assert ra.preempt_count >= 1
+    for r, prompt, gen in ((ra, workload[2], 12), (rb, workload[0], GEN)):
+        assert r.generated == chunked_cold_reference(
+            bundle, params, prompt, gen, page_size=8, prefill_chunk=16,
+            cache_dtype=dtype,
+        )
+    _assert_retired(eng, [ra, rb])
+
+
+def test_async_sampling_mode_invariant(tiny_bundle, workload):
+    """Sampled streams are keyed by (request id, token index) - counts the
+    host knows at dispatch - so sampling survives pipelining bitwise."""
+    bundle, params = tiny_bundle
+    kw = dict(temperature=0.8, top_k=5, sample_seed=7)
+    ref, _ = _serve(bundle, params, workload, pipeline_depth=0, **kw)
+    got, _ = _serve(bundle, params, workload, pipeline_depth=1, **kw)
+    assert got == ref
+
+
+def test_pipeline_depth_validation(tiny_bundle):
+    bundle, params = tiny_bundle
+    with pytest.raises(ValueError):
+        ServeEngine(
+            bundle, params, max_batch=1, num_pages=8, page_size=8,
+            max_seq_len=32, pipeline_depth=-1,
+        )
+
+
+# -------------------------------------------------- streaming emission --
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_on_token_streams_match_generated(tiny_bundle, workload, depth):
+    """The streaming callback delivers every generated token, with its
+    index, in order - and the per-request streams it assembles are exactly
+    the final ``generated`` lists, in BOTH pipeline modes."""
+    bundle, params = tiny_bundle
+    got = {}
+
+    def on_token(r, idx, tok):
+        stream = got.setdefault(r.req_id, [])
+        assert idx == len(stream)          # in-order, gapless
+        assert isinstance(tok, int)
+        stream.append(tok)
+
+    out, eng = _serve(
+        bundle, params, workload, pipeline_depth=depth, on_token=on_token,
+    )
+    assert [got[i] for i in sorted(got)] == out
+
+
+def test_async_emission_lags_dispatch(tiny_bundle, workload):
+    """In async mode the callback for step N fires only at retirement -
+    AFTER step N+1 was dispatched - and drain() forces the backlog out at
+    a stream boundary."""
+    bundle, params = tiny_bundle
+    seen = []
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=16, page_size=8,
+        max_seq_len=64, prefill_chunk=16, pipeline_depth=1,
+        on_token=lambda r, i, t: seen.append(i),
+    )
+    r = eng.submit(workload[1], 6)
+    while r.prefill_pos < len(r.prompt):
+        eng.step()
+    # prompt completed: the first token is dispatched but NOT yet emitted
+    assert len(r.generated) >= 1 and r.pending >= 1
+    assert not seen
+    eng.step()
+    # one step in flight: emissions stay one step behind the host count
+    assert len(seen) == len(r.generated) - r.pending < len(r.generated)
+    eng.drain()
+    assert r.pending == 0 and len(seen) == len(r.generated)
+
+
+# ------------------------------------------------------- cancellation --
+
+def test_cancel_running_conserves_pages(tiny_bundle, workload):
+    """Mid-stream cancellation while a step is IN FLIGHT: the pipeline
+    drains, the slot frees, and the allocator's free list is conserved -
+    after the survivor finishes and the cache is emptied, every
+    allocatable page is back on the free list (no leaks, no double
+    frees)."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=24, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        pipeline_depth=1,
+    )
+    allocatable = eng.num_pages - 1
+    victim = eng.submit(workload[2], 12)
+    survivor = eng.submit(workload[1], GEN)
+    while not victim.generated and victim.pending == 0:
+        eng.step()
+    assert eng.stats()["inflight"] >= 1      # genuinely mid-flight
+    assert eng.cancel(victim.req_id)
+    assert victim.state == CANCELLED
+    assert eng.stats()["inflight"] == 0      # cancel drained the pipeline
+    assert not eng.cancel(victim.req_id)     # no longer live
+    assert not eng.cancel(10_000)            # unknown id
+    eng.run_to_completion()
+    # the survivor is untouched by its neighbour's cancellation
+    assert survivor.generated == chunked_cold_reference(
+        bundle, params, workload[1], GEN, page_size=8, prefill_chunk=16,
+    )
+    # free-list conservation: free + resident cache pages == allocatable,
+    # and evicting the cache returns every page
+    resident = eng.prefix_cache.cached_pages
+    assert eng.allocator.free_pages + resident == allocatable
+    eng.prefix_cache.evict(resident)
+    assert eng.allocator.free_pages == allocatable
+    assert eng.cancellations == 1
+
+
+def test_cancel_donates_prefix_pages(tiny_bundle, workload):
+    """A cancelled request's prefill-written full prompt pages are donated
+    (the chunk-exact purity argument): a later identical prompt gets them
+    back as prefix-cache hits."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=24, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        pipeline_depth=1,
+    )
+    r = eng.submit(workload[2], 12)          # 45-token prompt
+    while r.prefill_pos < len(r.prompt):
+        eng.step()
+    eng.cancel(r.req_id)
+    assert eng.prefix_cache.cached_pages >= len(workload[2]) // 8
+    r2 = eng.submit(workload[2], GEN)
+    eng.step()
+    assert r2.cached_len > 0                 # served from donated pages
+    eng.run_to_completion()
+    assert r2.generated == chunked_cold_reference(
+        bundle, params, workload[2], GEN, page_size=8, prefill_chunk=16,
+    )
+
+
+def test_cancel_without_prefix_cache_frees_everything(tiny_bundle, workload):
+    """No cache to donate into: cancellation returns every owned page to
+    the allocator immediately."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=16, page_size=8,
+        max_seq_len=64, prefill_chunk=16, pipeline_depth=1,
+    )
+    allocatable = eng.num_pages - 1
+    r = eng.submit(workload[0], 8)
+    for _ in range(4):
+        eng.step()
+    assert eng.cancel(r.req_id)
+    assert eng.allocator.free_pages == allocatable
+    assert eng.idle
+
+
+def test_cancel_waiting_request(tiny_bundle, workload):
+    """A still-queued request cancels without ever owning a slot or a
+    page; the queue unblocks behind it."""
+    bundle, params = tiny_bundle
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=16, page_size=8,
+        max_seq_len=64, prefill_chunk=16, pipeline_depth=1,
+    )
+    ra = eng.submit(workload[0], GEN)
+    rb = eng.submit(workload[1], GEN)        # waits behind ra (one slot)
+    eng.step()
+    assert rb.state == "waiting"
+    assert eng.cancel(rb.req_id)
+    assert rb.state == CANCELLED and not eng.waiting
+    eng.run_to_completion()
+    assert ra.generated == chunked_cold_reference(
+        bundle, params, workload[0], GEN, page_size=8, prefill_chunk=16,
+    )

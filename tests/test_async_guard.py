@@ -1,0 +1,127 @@
+"""Static-analysis guard for the async serving pipeline (PR 6).
+
+The async engine's whole point is that the per-step plan/dispatch path
+never synchronizes with the device; one innocent-looking ``np.asarray``
+on a step output would silently serialize host and device again without
+failing any functional test.  This guard parses ``runtime/engine.py``
+and fails if a synchronous readback - ``np.asarray``, ``jax.device_get``,
+``.block_until_ready()``, ``.item()`` - appears in ANY ``ServeEngine`` /
+``EngineReplicaGroup`` method that is not explicitly annotated as a
+drain point (the ``@_drain_point`` marker).
+
+Module-level oracles (``dense_greedy_reference`` et al.) are host-side
+reference implementations, not the serving hot path, and are exempt.
+"""
+
+import ast
+import inspect
+
+import repro.runtime.engine as engine_mod
+
+GUARDED_CLASSES = ("ServeEngine", "EngineReplicaGroup")
+
+#: (qualifier, attribute) readback forms.  A ``None`` qualifier matches
+#: any receiver - method calls like ``x.block_until_ready()`` sync no
+#: matter what ``x`` is.
+READBACKS = (
+    ("np", "asarray"),
+    ("jax", "device_get"),
+    (None, "block_until_ready"),
+    (None, "item"),
+)
+# NOTE: np.array(...) is deliberately NOT forbidden - the hot path uses it
+# to double-buffer HOST-side numpy state (page tables, token vectors)
+# before crossing to device, which never touches a device value.  The
+# convention the guard rests on: device arrays cross to host ONLY through
+# np.asarray, and host copies ONLY through np.array.
+
+
+def _readback_calls(fn_node):
+    """Names of forbidden readback calls inside one function body."""
+    hits = []
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            continue
+        for qual, attr in READBACKS:
+            if func.attr != attr:
+                continue
+            if qual is None or (
+                isinstance(func.value, ast.Name) and func.value.id == qual
+            ):
+                hits.append(f"{qual or '<any>'}.{attr}")
+    return hits
+
+
+def _is_drain_marked(fn_node):
+    for deco in fn_node.decorator_list:
+        name = deco.id if isinstance(deco, ast.Name) else getattr(
+            deco, "attr", None
+        )
+        if name == "_drain_point":
+            return True
+    return False
+
+
+def _guarded_methods():
+    tree = ast.parse(inspect.getsource(engine_mod))
+    for cls in ast.walk(tree):
+        if not (isinstance(cls, ast.ClassDef)
+                and cls.name in GUARDED_CLASSES):
+            continue
+        for fn in cls.body:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cls.name, fn
+
+
+def test_no_readback_outside_drain_points():
+    """No engine method outside the annotated drain points may contain a
+    synchronous device readback - the static invariant that keeps the
+    plan/dispatch hot path (step, _run_prefill, _compose_feed, admission,
+    release) overlap-safe."""
+    offenders = []
+    for cls_name, fn in _guarded_methods():
+        hits = _readback_calls(fn)
+        if hits and not _is_drain_marked(fn):
+            offenders.append(f"{cls_name}.{fn.name}: {sorted(set(hits))}")
+    assert not offenders, (
+        "synchronous readback outside @_drain_point (wrap the readback in "
+        "a drain point or keep values on device): " + "; ".join(offenders)
+    )
+
+
+def test_guard_actually_detects_readbacks():
+    """Positive control: the matcher must flag the one legal readback
+    site (``_retire_one``'s np.asarray) - otherwise the guard above could
+    rot into vacuous silence."""
+    found = {
+        fn.name: _readback_calls(fn)
+        for cls_name, fn in _guarded_methods()
+        if cls_name == "ServeEngine"
+    }
+    assert any("np.asarray" in h for h in found["_retire_one"])
+    assert _is_drain_marked_by_name("_retire_one")
+    assert _is_drain_marked_by_name("drain")
+
+
+def _is_drain_marked_by_name(name):
+    for cls_name, fn in _guarded_methods():
+        if fn.name == name:
+            return _is_drain_marked(fn)
+    raise AssertionError(f"method {name} not found")
+
+
+def test_runtime_markers_match_source():
+    """The AST view and the live objects agree: methods the guard treats
+    as drain points actually carry the runtime marker attribute."""
+    from repro.runtime.engine import ServeEngine
+
+    assert getattr(ServeEngine._retire_one, "__drain_point__", False)
+    assert getattr(ServeEngine.drain, "__drain_point__", False)
+    # the hot path is NOT quietly allowlisted
+    for name in ("step", "_run_prefill", "_compose_feed", "_try_admit"):
+        assert not getattr(
+            getattr(ServeEngine, name), "__drain_point__", False
+        ), f"{name} must not be a drain point"

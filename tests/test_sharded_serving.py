@@ -10,6 +10,10 @@ the reproducibility-under-layout property arXiv:2405.02803 shows
 mainstream attention stacks lose; PASA's page-local shift blocks are what
 let the sharded pool keep sharing raw pages exactly (arXiv:2503.01873).
 
+Also here (PR 6): the async pipelined engine run against both sharded
+topologies - pipelining composes with layout, streams and page bytes
+stay bit-identical to the synchronous sharded serve.
+
 Also here: the kernel-family sharded entry points
 (``pasa_paged_{decode,prefill}_sharded``) proven bit-identical on the
 paper's adversarial generators, the ring-PASA fallback for
@@ -172,6 +176,50 @@ def test_2x4_replica_serve_bit_identity(shard_bundle, workload, dtype):
     st = grp.stats()
     assert st["replicas"] == 2
     assert st["finished"] == len(workload)
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_model_sharded_async_bit_identity(shard_bundle, workload, dtype):
+    """PR 6 x PR 5 composition: the async pipelined engine
+    (``pipeline_depth=1``) on the kv-head-sharded pool yields token
+    streams AND page bytes bit-identical to the synchronous sharded
+    serve - keeping a step in flight must compose with layout, not just
+    with the 1-device engine (device-placed jitted calls still return
+    futures; the only readbacks are the drain-point retirements)."""
+    bundle, params = shard_bundle
+    mesh = _model_mesh(4)
+    sync, sync_eng = _serve_single(
+        bundle, params, workload, mesh=mesh, cache_dtype=dtype,
+    )
+    got, eng = _serve_single(
+        bundle, params, workload, mesh=mesh, cache_dtype=dtype,
+        pipeline_depth=1,
+    )
+    assert got == sync
+    _assert_pools_bit_equal(sync_eng.pool, eng.pool)
+    st = eng.stats()
+    assert st["pipeline_depth"] == 1 and st["inflight"] == 0
+
+
+def test_2x4_replica_async_streams_match_sync(shard_bundle, workload):
+    """The full acceptance topology under pipelining: 2 data replicas x
+    4-way sharded pools, every engine running with one step in flight,
+    streams identical to the synchronous group serve."""
+    bundle, params = shard_bundle
+    mesh = _mesh_2x4()
+    kw = dict(
+        max_batch=3, num_pages=24, page_size=8, max_seq_len=64,
+        prefill_chunk=16,
+    )
+    grp_s = EngineReplicaGroup(bundle, params, mesh, **kw)
+    rs = [grp_s.submit(p, GEN) for p in workload]
+    grp_s.run_to_completion()
+    grp_a = EngineReplicaGroup(bundle, params, mesh, pipeline_depth=1, **kw)
+    ra = [grp_a.submit(p, GEN) for p in workload]
+    grp_a.run_to_completion()
+    assert [r.generated for r in ra] == [r.generated for r in rs]
+    for eng in grp_a.engines:
+        assert eng.stats()["inflight"] == 0
 
 
 @pytest.mark.parametrize("dtype", ["bf16", "int8"])
