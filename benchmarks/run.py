@@ -15,6 +15,36 @@ import sys
 NUMERICS_JSON = os.path.join(os.path.dirname(__file__), "BENCH_numerics.json")
 SERVING_JSON = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
 
+#: PR-7 acceptance bound: full telemetry (wallclock_traced) may cost at
+#: most this fraction of wallclock_async tokens/sec.
+TELEMETRY_OVERHEAD_BOUND = 0.05
+
+
+def _check_telemetry_overhead(serving_rows) -> None:
+    """Fail the whole run - deliberately NOT behind the benchmark
+    try/except - when observability costs more than the bound; a silent
+    perf regression in a ride-along layer must not survive a green run."""
+    traced = next(
+        (r for r in serving_rows
+         if r["name"] == "scheduler_burst/wallclock_traced"), None,
+    )
+    if traced is None:
+        raise SystemExit(
+            "wallclock_traced row missing from the serving trajectory - "
+            "the telemetry-overhead acceptance bound was not measured"
+        )
+    overhead = traced["overhead_vs_async"]
+    if overhead > TELEMETRY_OVERHEAD_BOUND:
+        raise SystemExit(
+            f"telemetry overhead {overhead:.1%} exceeds the "
+            f"{TELEMETRY_OVERHEAD_BOUND:.0%} bound vs wallclock_async "
+            f"({traced['tokens_per_s_wall']:.0f} tok/s traced)"
+        )
+    print(
+        f"[telemetry overhead {overhead:+.1%} vs async - within the "
+        f"{TELEMETRY_OVERHEAD_BOUND:.0%} bound]", file=sys.stderr,
+    )
+
 
 def _write_json(path: str, rows, label: str) -> None:
     # serialize BEFORE opening: a failure mid-evaluation must not
@@ -61,13 +91,19 @@ def main() -> None:
         rows += PP.report()
     except Exception as e:  # keep run.py total if the serve workload fails
         print(f"[prefill-prefix report skipped: {e}]", file=sys.stderr)
+    serving_rows = None
     try:
         from benchmarks import scheduler_burst as SB
 
         rows += SB.report()
-        _write_json(SERVING_JSON, SB.serving_rows(), "serving")
+        serving_rows = SB.serving_rows()
+        _write_json(SERVING_JSON, serving_rows, "serving")
     except Exception as e:
         print(f"[scheduler-burst report skipped: {e}]", file=sys.stderr)
+    if serving_rows is not None:
+        # acceptance bound, OUTSIDE the try/except: a violation exits
+        # non-zero instead of degrading into a skipped-report note
+        _check_telemetry_overhead(serving_rows)
     try:
         rows += R.report()
     except Exception as e:  # dry-run artifacts absent on a fresh checkout

@@ -1,0 +1,107 @@
+"""Observability demo: serve a burst with full telemetry and write a
+Chrome/Perfetto-loadable trace.
+
+One ``Telemetry`` object threads through the engine: every step emits
+``plan`` / ``dispatch`` / ``retire`` spans plus per-request lifecycle
+instants into a bounded ring buffer, a dependency-free metrics registry
+tallies the serve (TTFT histograms, page-pool occupancy, prefix-cache
+traffic), and the numerics probe samples live K pages every few steps to
+report the paper's overflow drivers (score amplitude vs the fp16
+ceiling, PASA shift magnitude, resonance).
+
+The demo serves the SAME burst twice - telemetry fully on and fully off
+- and asserts the streams are bit-identical: instrumentation observes
+the serve, it never participates in it.  Then it writes
+``/tmp/pasa_trace.json``; open it at https://ui.perfetto.dev (or
+chrome://tracing) - under ``pipeline_depth=1`` you can see step N's
+``retire`` span landing after step N+1's ``dispatch``, i.e. the
+host/device overlap, as geometry.
+
+Run:  PYTHONPATH=src python examples/serve_traced.py
+(CPU-friendly: reduced config, XLA gather fallback for the paged paths.)
+"""
+
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine, Telemetry
+
+PAGE = 8
+CHUNK = 32
+GEN = 8
+BURST = (96, 32, 96, 64, 32, 64)
+TRACE = "/tmp/pasa_trace.json"
+
+
+def serve(bundle, params, prompts, telemetry=None):
+    eng = ServeEngine(
+        bundle, params, max_batch=4, num_pages=128, page_size=PAGE,
+        max_seq_len=max(len(p) for p in prompts) + GEN,
+        prefill_chunk=CHUNK, prefix_cache=True, pipeline_depth=1,
+        telemetry=telemetry,
+    )
+    pending = list(prompts)
+    reqs = []
+    while pending or not eng.idle:
+        if pending:
+            reqs.append(eng.submit(pending.pop(0), GEN))
+        eng.step()
+    return [r.generated for r in reqs], eng
+
+
+def main():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in BURST]
+
+    tel = Telemetry(tracing=True, metrics=True, numerics_every=4)
+    ref, _ = serve(bundle, params, prompts)
+    got, eng = serve(bundle, params, prompts, telemetry=tel)
+    assert got == ref, "telemetry changed output bits!"
+    print(f"served {len(prompts)} requests twice (telemetry off / on): "
+          "streams BIT-IDENTICAL\n")
+
+    snap = eng.metrics_snapshot()
+    c, g, h = snap["counters"], snap["gauges"], snap["histograms"]
+    print("metrics snapshot:")
+    print(f"  tokens emitted        {c['serve.tokens_emitted']['value']}")
+    print(f"  prefix hits/misses    {c['prefix.hits']['value']}"
+          f"/{c['prefix.misses']['value']} pages")
+    print(f"  pages allocated/freed {c['pages.allocated']['value']}"
+          f"/{c['pages.freed']['value']}")
+    ttft = h["serve.ttft_steps"]
+    print(f"  TTFT steps            p50 {ttft['p50']:.0f}  "
+          f"p99 {ttft['p99']:.0f}  (n={ttft['count']})")
+    step_s = h["serve.step_seconds"]
+    print(f"  step seconds          p50 {step_s['p50'] * 1e3:.2f} ms  "
+          f"p99 {step_s['p99'] * 1e3:.2f} ms")
+
+    print("\nnumerics probe (live K pages, every 4th step):")
+    print(f"  samples               {c['numerics.samples']['value']}")
+    for key in ("numerics.score_amp_max", "numerics.fp16_margin",
+                "numerics.shift_mag_max", "numerics.resonance_max"):
+        print(f"  {key:<21} {g[key]['value']:.3g}")
+    margin = g["numerics.fp16_margin"]["value"]
+    print("  -> " + (
+        "fp16 overflow regime (the paper's failure mode)" if margin < 0
+        else "scores comfortably inside the fp16 range"
+    ))
+
+    n = tel.tracer.write_chrome_trace(TRACE)
+    with open(TRACE) as f:
+        doc = json.load(f)
+    print(f"\nwrote {TRACE}: {n} trace events "
+          f"({len(doc['traceEvents'])} incl. metadata, "
+          f"{tel.tracer.dropped} dropped)")
+    print("open it at https://ui.perfetto.dev - pid 0 'engine 0', "
+          "tid 'step' spans, tid 'requests' lifecycle instants")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,16 @@ calls ``engine.cancel()`` between steps, which drains the pipeline,
 frees the request's private pages, and donates its full prompt pages to
 the prefix cache.
 
+Observability: ``--trace FILE`` records every engine step's
+plan/dispatch/retire spans and per-request lifecycle events to a Chrome
+``trace_event`` file (Perfetto-loadable; ``--trace-format jsonl`` for
+JSON-lines), ``--metrics`` prints the serving metrics registry snapshot
+(TTFT histograms, queue/pool gauges, lifecycle counters), and
+``--numerics-probe N`` samples the paper's overflow/resonance monitors
+on live K pages every N steps.  All three are BIT-NEUTRAL - the
+instrumented serve's streams are identical to the bare serve
+(runtime/README.md "Observability").
+
 Sharded paged serving: ``--mesh DxM --paged`` actually USES the mesh -
 the ``data`` axis runs D engine replicas round-robin from one queue and
 the ``model`` axis shards every replica's page pool (and its two jitted
@@ -180,6 +190,28 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false",
                     help="disable prompt-prefix KV page sharing (default)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="paged route: write a structured step trace "
+                         "(plan/dispatch/retire spans + request lifecycle "
+                         "events) to FILE - Chrome trace_event JSON "
+                         "loadable in Perfetto / chrome://tracing, or "
+                         "JSON-lines with --trace-format jsonl.  "
+                         "Bit-neutral: the traced serve's streams are "
+                         "identical to the untraced serve")
+    ap.add_argument("--trace-format", default="chrome",
+                    choices=("chrome", "jsonl"),
+                    help="--trace file format (default: chrome)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="paged route: collect the serving metrics "
+                         "registry (TTFT histograms, queue/pool gauges, "
+                         "lifecycle counters) and print its JSON snapshot "
+                         "after the serve")
+    ap.add_argument("--numerics-probe", type=int, default=0, metavar="N",
+                    help="paged route: sample the online numerics-health "
+                         "probe every N engine steps (0 = off) - "
+                         "score-amplitude vs the fp16 ceiling, per-page "
+                         "PASA shift magnitude, and K resonance on live "
+                         "pages, read only at retirement drain points")
     args = ap.parse_args(argv)
 
     import jax
@@ -286,7 +318,7 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
 
     import numpy as np
 
-    from repro.runtime import EngineReplicaGroup, ServeEngine
+    from repro.runtime import EngineReplicaGroup, ServeEngine, Telemetry
 
     page_size = (
         args.page_size if args.page_size is not None
@@ -324,6 +356,18 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         sample_seed=args.sample_seed,
         pipeline_depth=1 if args.pipelined else 0,
     )
+
+    # observability: one Telemetry per serve, layers switched by flags.
+    # Bit-neutral - every hook reads host state only; the numerics probe
+    # reads pages at retirement drain points (runtime/telemetry.py).
+    telemetry = None
+    if args.trace or args.metrics or args.numerics_probe:
+        telemetry = Telemetry(
+            tracing=args.trace is not None,
+            metrics=args.metrics,
+            numerics_every=args.numerics_probe,
+        )
+        engine_kwargs["telemetry"] = telemetry
 
     # streaming emission: tokens arrive through on_token as they are
     # MATERIALIZED (at retirement - one step behind dispatch in --async).
@@ -382,43 +426,60 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
     ]
     mode = ("chunked" if args.chunked_prefill else "token-by-token")
     mode += "/async" if args.pipelined else "/sync"
-    sched = (
-        st["scheduler"] if "scheduler" in st
-        else st["engines"][0]["scheduler"]
-    )
-    dtype_name = (
-        st["pool_dtype"] if "pool_dtype" in st
-        else st["engines"][0]["pool_dtype"]
-    )
+    # the versioned stats schema shares every key between ServeEngine and
+    # EngineReplicaGroup (the group view is a true aggregation), so no
+    # engine-vs-group branching is needed here
     n_tokens = int(sum(len(r.generated) for r in reqs))
-    n_cancel = (
-        st["cancellations"] if "cancellations" in st
-        else sum(s["cancellations"] for s in st.get("engines", ()))
-    )
-    print(f"[paged/{mode}/{sched}] generated {gen.shape} tokens "
+    print(f"[paged/{mode}/{st['scheduler']}] generated {gen.shape} tokens "
           f"in {dt:.2f}s ({1000*dt/max(st['steps'],1):.1f} ms/step, "
           f"{n_tokens/max(dt, 1e-9):.1f} tok/s wall-clock), "
-          f"pool={st['cache_bytes']/1e6:.2f} MB total {dtype_name} "
+          f"pool={st['cache_bytes']/1e6:.2f} MB total {st['pool_dtype']} "
           f"({st['cache_bytes_per_device']/1e6:.2f} MB/device; {placement}; "
           f"{num_pages} pages x {page_size} tok per replica), "
           f"TTFT {np.mean(ttft_steps):.1f} engine steps, "
-          f"{st['preemptions']} preemptions, {n_cancel} cancellations")
-    if args.prefix_cache:
-        # single engine: top-level stats; replica group: sum per engine
-        pcs = (
-            [st["prefix_cache"]] if "prefix_cache" in st
-            else [s["prefix_cache"] for s in st.get("engines", ())
-                  if "prefix_cache" in s]
-        )
-        pc = {
-            key: sum(p[key] for p in pcs)
-            for key in ("cached_pages", "hits", "misses", "evictions")
-        }
+          f"{st['preemptions']} preemptions, "
+          f"{st['cancellations']} cancellations")
+    if args.prefix_cache and st["prefix_cache"] is not None:
+        pc = st["prefix_cache"]
         print(f"[prefix-cache] {pc['cached_pages']} pages cached, "
               f"{pc['hits']} page hits / {pc['misses']} misses, "
-              f"{pc['evictions']} evictions")
+              f"{pc['evictions']} evictions, {pc['donations']} donations")
+    if telemetry is not None:
+        _report_telemetry(args, telemetry)
     print("sample:", gen[0][:16])
     return gen
+
+
+def _report_telemetry(args, telemetry):
+    """Write the trace file and/or print the metrics snapshot."""
+    import json
+
+    if args.trace:
+        if args.trace_format == "jsonl":
+            n = telemetry.tracer.write_jsonl(args.trace)
+        else:
+            n = telemetry.tracer.write_chrome_trace(args.trace)
+        dropped = telemetry.tracer.dropped
+        print(f"[trace] {n} events -> {args.trace} "
+              f"({args.trace_format}; {dropped} dropped by the ring)"
+              + ("" if args.trace_format == "jsonl"
+                 else "; open in https://ui.perfetto.dev"))
+    if args.metrics:
+        snap = telemetry.metrics_snapshot()
+        print("[metrics]", json.dumps(snap, indent=2, sort_keys=True))
+    if args.numerics_probe:
+        probes = [telemetry.probe] + [
+            c.probe for c in telemetry._children if c.probe is not None
+        ]
+        last = next(
+            (p.last for p in probes if p is not None and p.last), None
+        )
+        if last is not None:
+            print(f"[numerics] fp16_margin={last['fp16_margin']:.1f} "
+                  f"score_amp_max={last['score_amp_max']:.1f} "
+                  f"shift_mag_max={last['shift_mag_max']:.3f} "
+                  f"resonance_max={last['resonance_max']:.3f} "
+                  f"({last['pages_sampled']} pages sampled)")
 
 
 if __name__ == "__main__":

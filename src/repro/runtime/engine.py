@@ -121,11 +121,34 @@ from repro.runtime.paged_cache import (
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
 from repro.runtime.scheduler import RequestView, get_scheduler
+from repro.runtime.telemetry import Telemetry, _drain_point
 
 WAITING = "waiting"
 RUNNING = "running"
 FINISHED = "finished"
 CANCELLED = "cancelled"
+
+#: Version of the ``stats()`` dict schema shared by :class:`ServeEngine`
+#: and :class:`EngineReplicaGroup` (documented in runtime/README.md
+#: "Observability").  Both expose the SAME shared keys; the group view is
+#: a true aggregation of its replicas plus ``replicas`` / ``engines``.
+#: Bump on any key add/remove/retype; tests/test_telemetry.py pins the
+#: key set against this version.
+STATS_SCHEMA = 1
+
+#: How the replica group aggregates each shared stats() key: additive
+#: tallies and capacity totals SUM; clocks and per-device peaks take the
+#: MAX; uniform engine configuration passes through from replica 0.
+_STATS_SUM = (
+    "running", "waiting", "finished", "free_pages", "live_pages",
+    "cache_bytes", "preemptions", "trimmed_pages", "last_step_tokens",
+    "inflight", "cancellations",
+)
+_STATS_MAX = ("steps", "cache_bytes_per_device", "max_step_tokens")
+_STATS_CONFIG = (
+    "page_size", "pool_dtype", "chunked_prefill", "scheduler",
+    "prefill_batch", "step_token_budget", "temperature", "pipeline_depth",
+)
 
 
 #: One fused jitted select for the async hot path (feed composition and
@@ -137,15 +160,11 @@ CANCELLED = "cancelled"
 _select_i32 = jax.jit(lambda known, host, dev: jnp.where(known, host, dev))
 
 
-def _drain_point(fn):
-    """Mark a method as a LEGAL synchronous-readback site of the async
-    pipeline.  tests/test_async_guard.py parses this module and fails if
-    a device readback (``np.asarray``, ``jax.device_get``,
-    ``block_until_ready``, ``.item()``) appears in any engine method NOT
-    carrying this marker - the static guard that keeps host/device
-    overlap from silently regressing."""
-    fn.__drain_point__ = True
-    return fn
+# ``_drain_point`` - the marker for LEGAL synchronous-readback sites of
+# the async pipeline - now lives in runtime/telemetry.py (telemetry's
+# numerics probe shares the discipline and the module must not import the
+# engine); it is re-exported here because tests/test_async_guard.py
+# parses BOTH modules for the decorator by name.
 
 
 def dense_greedy_reference(bundle, params, prompt, max_new_tokens: int):
@@ -381,6 +400,17 @@ class ServeEngine:
         prefix cache, scheduling) is sharding-oblivious.  Data-parallel
         replicas over a 2-D mesh are built by
         :class:`EngineReplicaGroup`.
+      telemetry: optional :class:`~repro.runtime.telemetry.Telemetry` -
+        structured step tracing, the metrics registry (threaded through
+        the allocator and prefix cache too), and the sampled numerics
+        probe.  BIT-NEUTRAL: every hook reads host state the engine
+        already maintains and nothing it records feeds back into a device
+        call or scheduling decision, so a telemetry-on serve is
+        bit-identical (streams and page bytes) to a telemetry-off serve
+        in every mode (tests/test_telemetry.py).  Device-derived
+        readings are collected only at retirement drain points (the
+        probe's own ``@_drain_point`` read), preserving the async
+        pipeline's no-readback discipline.
     """
 
     def __init__(
@@ -409,6 +439,7 @@ class ServeEngine:
         mesh=None,
         pipeline_depth: int = 0,
         on_token: Optional[Callable[[Request, int, int], None]] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
         if not bundle.supports_paged:
             raise ValueError(
@@ -512,9 +543,13 @@ class ServeEngine:
         self.pool = bundle.init_paged_cache(
             self.num_pages, self.page_size, dtype=self.cache_dtype, **pool_kw
         )
-        self.allocator = PageAllocator(self.num_pages)
+        self.telemetry = telemetry
+        tel_metrics = telemetry.metrics if telemetry is not None else None
+        self.allocator = PageAllocator(self.num_pages, metrics=tel_metrics)
         self.prefix_cache = (
-            RadixPrefixCache(self.allocator, self.page_size)
+            RadixPrefixCache(
+                self.allocator, self.page_size, metrics=tel_metrics
+            )
             if prefix_cache else None
         )
         self.page_table = np.full(
@@ -763,6 +798,8 @@ class ServeEngine:
             )
         r.submit_step = self.steps
         self.waiting.append(r)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(r.req_id, self.steps)
         return r
 
     # ------------------------------------------------------- policy view --
@@ -848,6 +885,10 @@ class ServeEngine:
             r.cursor = 0
             self._next_token[slot] = r.prompt[0]
             self._next_known[slot] = True
+        if self.telemetry is not None:
+            self.telemetry.on_admit(
+                r.req_id, self.steps, resumed=r.preempt_count > 0
+            )
         return "admitted"
 
     def _admit_pass(self) -> Optional[Request]:
@@ -892,6 +933,8 @@ class ServeEngine:
         if blocked is None:
             return
         blocked.blocked_steps += 1
+        if self.telemetry is not None:
+            self.telemetry.on_admission_blocked(self.steps)
         if (not self.preemption
                 or blocked.blocked_steps < self.preempt_patience):
             return
@@ -977,12 +1020,16 @@ class ServeEngine:
         r.blocked_steps = 0
         self.preemptions += 1
         self.waiting.append(r)
+        if self.telemetry is not None:
+            self.telemetry.on_preempt(r.req_id, self.steps)
 
     def _finish(self, r: Request) -> None:
         self._release_slot(r)
         r.state = FINISHED
         r.finish_step = self.steps
         self.finished[r.req_id] = r
+        if self.telemetry is not None:
+            self.telemetry.on_finish(r.req_id, self.steps)
 
     def _account_step_tokens(self, n: int) -> None:
         self.last_step_tokens = int(n)
@@ -999,8 +1046,17 @@ class ServeEngine:
         then decode rows - the synchronous emission order).  This is the
         ONLY per-token device readback in the engine; in async mode it
         runs AFTER the next step was dispatched, so the block overlaps
-        device execution instead of serializing with it."""
+        device execution instead of serializing with it.
+
+        Retirement is also THE first-token stamp site: ``gen_idx == 0``
+        of a request not yet stamped sets ``first_token_step`` to the
+        step that DISPATCHED the token (``st.step_no``), so the value is
+        identical across pipeline modes and a preempted-then-resumed
+        request keeps its ORIGINAL stamp (preemption never clears it -
+        TTFT measures submit to first emission, not to re-admission;
+        tests/test_telemetry.py pins both)."""
         st = self._inflight.popleft()
+        emitted = 0
         for tok_dev, emits in (
             (st.prefill_tok, st.prefill_emits),
             (st.decode_tok, st.decode_emits),
@@ -1012,8 +1068,17 @@ class ServeEngine:
                 tok = int(vals[row])
                 r.generated[gen_idx] = tok
                 r.pending -= 1
+                emitted += 1
+                if gen_idx == 0 and r.first_token_step < 0:
+                    r.first_token_step = st.step_no
+                    if self.telemetry is not None:
+                        self.telemetry.on_first_token(
+                            r.req_id, r.submit_step, st.step_no
+                        )
                 if self.on_token is not None:
                     self.on_token(r, gen_idx, tok)
+        if emitted and self.telemetry is not None:
+            self.telemetry.on_tokens_emitted(emitted)
 
     def _retire_backlog(self) -> None:
         """Retire down to ``pipeline_depth`` steps in flight (the tail of
@@ -1049,6 +1114,8 @@ class ServeEngine:
                 r.state = CANCELLED
                 r.finish_step = self.steps
                 self.cancellations += 1
+                if self.telemetry is not None:
+                    self.telemetry.on_cancel(req_id, self.steps)
                 return True
         r = next(
             (s for s in self._slots
@@ -1061,6 +1128,8 @@ class ServeEngine:
         r.state = CANCELLED
         r.finish_step = self.steps
         self.cancellations += 1
+        if self.telemetry is not None:
+            self.telemetry.on_cancel(req_id, self.steps)
         return True
 
     # ---------------------------------------------------------- trimming --
@@ -1173,8 +1242,6 @@ class ServeEngine:
                 gen_idx = len(r.generated)
                 r.generated.append(None)       # filled at retirement
                 r.pending += 1
-                if r.first_token_step < 0:
-                    r.first_token_step = self.steps
                 if r.replay:
                     # resume replay: feed the recorded emission (bit-equal
                     # to the recomputed token) so the stream stays
@@ -1225,8 +1292,14 @@ class ServeEngine:
         for arrival/admission timestamps); the device calls are skipped
         when no request needs them.
         """
+        tel = self.telemetry
+        t0 = tel.clock() if tel is not None else 0.0
         self._maybe_trim()
         self._try_admit()
+        # telemetry phase stamps: plan = trim + admission (host-only);
+        # dispatch = per-step table/feed assembly + enqueueing the jitted
+        # calls; retire = materializing steps beyond pipeline_depth.
+        t_plan = tel.clock() if tel is not None else 0.0
         live = [r for r in self._slots if r is not None]
         if not live:
             self._account_step_tokens(0)   # idle tick spends nothing
@@ -1234,6 +1307,8 @@ class ServeEngine:
             # fully so ``while not eng.idle: eng.step()`` terminates with
             # every placeholder retired (see :meth:`idle`)
             self.drain()
+            if tel is not None:
+                tel.end_step(self, t0, t_plan, t_plan, 0)
             self.steps += 1
             return 0
         n_live = len(live)
@@ -1287,7 +1362,10 @@ class ServeEngine:
                 # -deferred) still owe their first-token emissions.
                 if st.prefill_emits:
                     self._inflight.append(st)
+                t_disp = tel.clock() if tel is not None else 0.0
                 self._retire_backlog()
+                if tel is not None:
+                    tel.end_step(self, t0, t_plan, t_disp, n_live)
                 self.steps += 1
                 return n_live
             # decode view of the table: slots not decoding THIS step
@@ -1339,8 +1417,6 @@ class ServeEngine:
             gen_idx = len(r.generated)
             r.generated.append(None)           # filled at retirement
             r.pending += 1
-            if r.first_token_step < 0:
-                r.first_token_step = self.steps
             if gen_idx < len(r.replay):
                 self._next_token[slot] = r.replay[gen_idx]
                 self._next_known[slot] = True
@@ -1350,7 +1426,10 @@ class ServeEngine:
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
         self._inflight.append(st)
+        t_disp = tel.clock() if tel is not None else 0.0
         self._retire_backlog()
+        if tel is not None:
+            tel.end_step(self, t0, t_plan, t_disp, n_live)
         self.steps += 1
         return n_live
 
@@ -1369,8 +1448,23 @@ class ServeEngine:
 
     # ------------------------------------------------------------- stats --
 
+    def metrics_snapshot(self) -> Optional[dict]:
+        """The metrics-registry scrape payload (counters / gauges /
+        histograms as plain JSON-serializable dicts) - the surface a
+        future HTTP front end serves.  None when telemetry (or its
+        metrics layer) is off."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.metrics_snapshot()
+
     def stats(self) -> dict:
+        """Schema-versioned snapshot (``STATS_SCHEMA``; key catalog in
+        runtime/README.md).  Every key is always present -
+        ``prefix_cache`` is None when the cache is disabled - and
+        :meth:`EngineReplicaGroup.stats` aggregates the SAME keys, so
+        consumers never branch on engine-vs-group shape."""
         out = {
+            "schema": STATS_SCHEMA,
             "steps": self.steps,
             "running": self.num_running,
             "waiting": len(self.waiting),
@@ -1393,9 +1487,11 @@ class ServeEngine:
             "pipeline_depth": self.pipeline_depth,
             "inflight": len(self._inflight),
             "cancellations": self.cancellations,
+            "prefix_cache": (
+                None if self.prefix_cache is None
+                else self.prefix_cache.stats()
+            ),
         }
-        if self.prefix_cache is not None:
-            out["prefix_cache"] = self.prefix_cache.stats()
         return out
 
 
@@ -1417,7 +1513,8 @@ class EngineReplicaGroup:
     stays on the underlying :class:`Request` objects.
     """
 
-    def __init__(self, bundle, params, mesh, **engine_kwargs):
+    def __init__(self, bundle, params, mesh, *, telemetry=None,
+                 **engine_kwargs):
         from jax.sharding import Mesh
 
         names = mesh.axis_names
@@ -1439,9 +1536,19 @@ class EngineReplicaGroup:
         self.meshes = [
             Mesh(devs[i].reshape(n_model), ("model",)) for i in range(n_data)
         ]
+        # per-replica telemetry children share the group's tracer (events
+        # carry the replica index -> separate Chrome processes) but keep
+        # their own metrics registries; metrics_snapshot() aggregates.
+        self.telemetry = telemetry
         self.engines = [
-            ServeEngine(bundle, params, mesh=m, **engine_kwargs)
-            for m in self.meshes
+            ServeEngine(
+                bundle, params, mesh=m,
+                telemetry=(
+                    None if telemetry is None else telemetry.for_replica(i)
+                ),
+                **engine_kwargs,
+            )
+            for i, m in enumerate(self.meshes)
         ]
         self._rr = 0
         self._req_counter = 0
@@ -1513,16 +1620,34 @@ class EngineReplicaGroup:
                 out[(i, rid)] = r
         return out
 
+    def metrics_snapshot(self) -> Optional[dict]:
+        """Cross-replica aggregated metrics snapshot (counters and
+        histograms summed, gauges summed except ``*_max``); None when
+        the group was built without telemetry."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.metrics_snapshot()
+
     def stats(self) -> dict:
+        """True aggregation of :meth:`ServeEngine.stats` over replicas -
+        the SAME schema-versioned shared keys (tallies summed, clocks and
+        per-device peaks maxed, uniform config passed through; see
+        ``_STATS_SUM`` / ``_STATS_MAX`` / ``_STATS_CONFIG``), plus
+        ``replicas`` and the per-replica dicts under ``engines``."""
         per = [e.stats() for e in self.engines]
-        return {
-            "replicas": len(per),
-            "cache_bytes": sum(s["cache_bytes"] for s in per),
-            "cache_bytes_per_device": max(
-                s["cache_bytes_per_device"] for s in per
-            ),
-            "steps": max(s["steps"] for s in per),
-            "finished": sum(s["finished"] for s in per),
-            "preemptions": sum(s["preemptions"] for s in per),
-            "engines": per,
-        }
+        out = {"schema": STATS_SCHEMA, "replicas": len(per)}
+        for key in _STATS_SUM:
+            out[key] = sum(s[key] for s in per)
+        for key in _STATS_MAX:
+            out[key] = max(s[key] for s in per)
+        for key in _STATS_CONFIG:
+            out[key] = per[0][key]
+        out["prefix_cache"] = (
+            None if per[0]["prefix_cache"] is None
+            else {
+                k: sum(s["prefix_cache"][k] for s in per)
+                for k in per[0]["prefix_cache"]
+            }
+        )
+        out["engines"] = per
+        return out

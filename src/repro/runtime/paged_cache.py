@@ -125,14 +125,20 @@ def pool_dtype_name(dtype) -> str:
 
 
 class PageAllocator:
-    """Free-list allocator over physical page ids ``1..num_pages-1``."""
+    """Free-list allocator over physical page ids ``1..num_pages-1``.
 
-    def __init__(self, num_pages: int):
+    ``metrics`` (optional): a ``runtime.telemetry.MetricsRegistry`` the
+    allocator tallies ``pages.allocated`` / ``pages.freed`` counters into
+    - pure host accounting, threaded in by ``ServeEngine(telemetry=...)``.
+    """
+
+    def __init__(self, num_pages: int, metrics=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the null sink)")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._live = set()
+        self.metrics = metrics
 
     @property
     def free_pages(self) -> int:
@@ -153,9 +159,12 @@ class PageAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._live.update(pages)
+        if self.metrics is not None and pages:
+            self.metrics.counter("pages.allocated").inc(len(pages))
         return pages
 
     def free(self, pages) -> None:
+        n = 0
         for p in pages:
             if p == NULL_PAGE:
                 raise ValueError("cannot free the null page")
@@ -163,6 +172,9 @@ class PageAllocator:
                 raise ValueError(f"double/foreign free of page {p}")
             self._live.remove(p)
             self._free.append(p)
+            n += 1
+        if self.metrics is not None and n:
+            self.metrics.counter("pages.freed").inc(n)
 
 
 def model_axis_size(mesh, axis: str = "model") -> int:

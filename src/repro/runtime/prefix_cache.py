@@ -80,7 +80,8 @@ class _Node:
 class RadixPrefixCache:
     """Page-granular radix tree of prompt prefixes over ``allocator``."""
 
-    def __init__(self, allocator: PageAllocator, page_size: int):
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 metrics=None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.allocator = allocator
@@ -94,6 +95,10 @@ class RadixPrefixCache:
         self.hits = 0          # pages served from cache across all matches
         self.misses = 0        # pages a match could not serve
         self.evictions = 0
+        self.donations = 0     # pages adopted from finish/preempt/cancel
+        # optional runtime.telemetry.MetricsRegistry mirror of the
+        # counters above (prefix.* names) - host-only accounting
+        self.metrics = metrics
 
     # ------------------------------------------------------------- sizing --
 
@@ -227,7 +232,13 @@ class RadixPrefixCache:
         self.hits += len(nodes)
         want = (len(tokens) if max_tokens is None
                 else min(len(tokens), int(max_tokens))) // self.page_size
-        self.misses += max(0, want - len(nodes))
+        missed = max(0, want - len(nodes))
+        self.misses += missed
+        if self.metrics is not None:
+            if nodes:
+                self.metrics.counter("prefix.hits").inc(len(nodes))
+            if missed:
+                self.metrics.counter("prefix.misses").inc(missed)
 
     def release(self, nodes: List[_Node]) -> None:
         for n in nodes:
@@ -278,6 +289,9 @@ class RadixPrefixCache:
             else:
                 nxt.last_use = self._clock
             node = nxt
+        self.donations += len(adopted)
+        if self.metrics is not None and adopted:
+            self.metrics.counter("prefix.donations").inc(len(adopted))
         return adopted
 
     # ------------------------------------------------------------ eviction --
@@ -313,6 +327,8 @@ class RadixPrefixCache:
             if (parent is not self._root and not parent.children
                     and parent.refcount == 0):
                 heapq.heappush(heap, (parent.last_use, id(parent), parent))
+        if self.metrics is not None and freed:
+            self.metrics.counter("prefix.evictions").inc(freed)
         return freed
 
     def stats(self) -> dict:
@@ -322,6 +338,7 @@ class RadixPrefixCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "donations": self.donations,
         }
 
 

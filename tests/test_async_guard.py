@@ -1,4 +1,4 @@
-"""Static-analysis guard for the async serving pipeline (PR 6).
+"""Static-analysis guard for the async serving pipeline (PR 6, PR 7).
 
 The async engine's whole point is that the per-step plan/dispatch path
 never synchronizes with the device; one innocent-looking ``np.asarray``
@@ -9,6 +9,14 @@ and fails if a synchronous readback - ``np.asarray``, ``jax.device_get``,
 ``EngineReplicaGroup`` method that is not explicitly annotated as a
 drain point (the ``@_drain_point`` marker).
 
+PR 7 extends the same discipline to ``runtime/telemetry.py``: telemetry
+is threaded through every step and every lifecycle hook, so a readback
+hiding in a metrics or tracing code path would serialize the pipeline
+from OUTSIDE the engine.  Every function and method in the telemetry
+module is guarded; the ONLY sanctioned readback is the numerics probe's
+own drain (``NumericsProbe.sample``), which runs at retirement
+boundaries where synchronization is already legal.
+
 Module-level oracles (``dense_greedy_reference`` et al.) are host-side
 reference implementations, not the serving hot path, and are exempt.
 """
@@ -17,6 +25,7 @@ import ast
 import inspect
 
 import repro.runtime.engine as engine_mod
+import repro.runtime.telemetry as telemetry_mod
 
 GUARDED_CLASSES = ("ServeEngine", "EngineReplicaGroup")
 
@@ -65,7 +74,7 @@ def _is_drain_marked(fn_node):
     return False
 
 
-def _guarded_methods():
+def _engine_methods():
     tree = ast.parse(inspect.getsource(engine_mod))
     for cls in ast.walk(tree):
         if not (isinstance(cls, ast.ClassDef)
@@ -76,13 +85,33 @@ def _guarded_methods():
                 yield cls.name, fn
 
 
+def _telemetry_functions():
+    """EVERY function in runtime/telemetry.py - module-level and inside
+    any class (tracers, registries, probe, facade); nothing is exempt."""
+    tree = ast.parse(inspect.getsource(telemetry_mod))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for fn in node.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield node.name, fn
+        elif isinstance(node, ast.Module):
+            for fn in node.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield "<module>", fn
+
+
+def _guarded_methods():
+    yield from _engine_methods()
+    yield from _telemetry_functions()
+
+
 def test_no_readback_outside_drain_points():
     """No engine method outside the annotated drain points may contain a
     synchronous device readback - the static invariant that keeps the
     plan/dispatch hot path (step, _run_prefill, _compose_feed, admission,
     release) overlap-safe."""
     offenders = []
-    for cls_name, fn in _guarded_methods():
+    for cls_name, fn in _engine_methods():
         hits = _readback_calls(fn)
         if hits and not _is_drain_marked(fn):
             offenders.append(f"{cls_name}.{fn.name}: {sorted(set(hits))}")
@@ -92,22 +121,51 @@ def test_no_readback_outside_drain_points():
     )
 
 
+def test_no_readback_in_telemetry_outside_probe_drain():
+    """Telemetry runs inside every step and lifecycle hook: any readback
+    outside its one sanctioned drain (``NumericsProbe.sample``) would
+    serialize the async pipeline from outside the engine - and would
+    break the bit-neutrality argument's cost half (telemetry may never
+    add synchronization the engine didn't already have)."""
+    offenders = []
+    for cls_name, fn in _telemetry_functions():
+        hits = _readback_calls(fn)
+        if hits and not _is_drain_marked(fn):
+            offenders.append(
+                f"telemetry.{cls_name}.{fn.name}: {sorted(set(hits))}"
+            )
+    assert not offenders, (
+        "synchronous readback in telemetry outside @_drain_point "
+        "(device-derived metrics are only legal at the probe's sampled "
+        "drain): " + "; ".join(offenders)
+    )
+
+
 def test_guard_actually_detects_readbacks():
-    """Positive control: the matcher must flag the one legal readback
-    site (``_retire_one``'s np.asarray) - otherwise the guard above could
-    rot into vacuous silence."""
+    """Positive control: the matcher must flag the legal readback sites
+    (``_retire_one``'s np.asarray in the engine, ``NumericsProbe.sample``'s
+    in telemetry) - otherwise the guards above could rot into vacuous
+    silence."""
     found = {
         fn.name: _readback_calls(fn)
-        for cls_name, fn in _guarded_methods()
+        for cls_name, fn in _engine_methods()
         if cls_name == "ServeEngine"
     }
     assert any("np.asarray" in h for h in found["_retire_one"])
     assert _is_drain_marked_by_name("_retire_one")
     assert _is_drain_marked_by_name("drain")
+    tel = {
+        fn.name: (fn, _readback_calls(fn))
+        for cls_name, fn in _telemetry_functions()
+        if cls_name == "NumericsProbe"
+    }
+    fn, hits = tel["sample"]
+    assert any("np.asarray" in h for h in hits)
+    assert _is_drain_marked(fn)
 
 
 def _is_drain_marked_by_name(name):
-    for cls_name, fn in _guarded_methods():
+    for cls_name, fn in _engine_methods():
         if fn.name == name:
             return _is_drain_marked(fn)
     raise AssertionError(f"method {name} not found")
@@ -117,11 +175,18 @@ def test_runtime_markers_match_source():
     """The AST view and the live objects agree: methods the guard treats
     as drain points actually carry the runtime marker attribute."""
     from repro.runtime.engine import ServeEngine
+    from repro.runtime.telemetry import NumericsProbe, Telemetry
 
     assert getattr(ServeEngine._retire_one, "__drain_point__", False)
     assert getattr(ServeEngine.drain, "__drain_point__", False)
-    # the hot path is NOT quietly allowlisted
+    assert getattr(NumericsProbe.sample, "__drain_point__", False)
+    # the hot paths are NOT quietly allowlisted
     for name in ("step", "_run_prefill", "_compose_feed", "_try_admit"):
         assert not getattr(
             getattr(ServeEngine, name), "__drain_point__", False
         ), f"{name} must not be a drain point"
+    for obj, name in ((Telemetry, "end_step"), (Telemetry, "on_submit"),
+                      (Telemetry, "on_first_token")):
+        assert not getattr(
+            getattr(obj, name), "__drain_point__", False
+        ), f"Telemetry.{name} must not be a drain point"

@@ -47,6 +47,7 @@ from repro.models.model_zoo import build
 from repro.runtime import (
     EngineReplicaGroup,
     ServeEngine,
+    Telemetry,
     chunked_cold_reference,
     paged_bytes,
     paged_bytes_per_device,
@@ -220,6 +221,65 @@ def test_2x4_replica_async_streams_match_sync(shard_bundle, workload):
     assert [r.generated for r in ra] == [r.generated for r in rs]
     for eng in grp_a.engines:
         assert eng.stats()["inflight"] == 0
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_sharded_telemetry_bit_neutral(shard_bundle, workload, dtype):
+    """PR 7: full observability (tracing + metrics + per-step numerics
+    probe) on the async kv-head-sharded serve is BIT-NEUTRAL - streams
+    and physical page bytes identical to the uninstrumented serve.  The
+    probe's gather/readback runs against SHARDED pool leaves, so this is
+    the topology where an accidental layout dependence (or a probe-driven
+    resync perturbing dispatch order) would surface."""
+    bundle, params = shard_bundle
+    mesh = _model_mesh(4)
+    kw = dict(mesh=mesh, cache_dtype=dtype, pipeline_depth=1)
+    ref, ref_eng = _serve_single(bundle, params, workload, **kw)
+    tel = Telemetry(tracing=True, metrics=True, numerics_every=1)
+    got, eng = _serve_single(
+        bundle, params, workload, telemetry=tel, **kw,
+    )
+    assert got == ref
+    _assert_pools_bit_equal(ref_eng.pool, eng.pool)
+    snap = tel.metrics_snapshot()
+    assert snap["counters"]["serve.requests_finished"]["value"] == len(
+        workload
+    )
+    assert snap["counters"]["numerics.samples"]["value"] > 0
+    assert snap["gauges"]["numerics.fp16_margin"]["value"] is not None
+
+
+def test_2x4_group_telemetry_aggregates_and_stays_bit_neutral(
+    shard_bundle, workload
+):
+    """PR 7 on the acceptance topology: one Telemetry fanned out over
+    2 data replicas (shared tracer, per-replica registries).  Streams
+    match the uninstrumented group serve; the aggregated snapshot counts
+    every replica's traffic; trace events carry both engine ids."""
+    bundle, params = shard_bundle
+    mesh = _mesh_2x4()
+    kw = dict(
+        max_batch=3, num_pages=24, page_size=8, max_seq_len=64,
+        prefill_chunk=16, pipeline_depth=1,
+    )
+    grp_ref = EngineReplicaGroup(bundle, params, mesh, **kw)
+    rs = [grp_ref.submit(p, GEN) for p in workload]
+    grp_ref.run_to_completion()
+    tel = Telemetry(tracing=True, metrics=True, numerics_every=2)
+    grp = EngineReplicaGroup(bundle, params, mesh, telemetry=tel, **kw)
+    rt = [grp.submit(p, GEN) for p in workload]
+    grp.run_to_completion()
+    assert [r.generated for r in rt] == [r.generated for r in rs]
+    snap = grp.metrics_snapshot()
+    assert snap["counters"]["serve.requests_finished"]["value"] == len(
+        workload
+    )
+    assert snap["histograms"]["serve.ttft_steps"]["count"] == len(workload)
+    assert {e.engine for e in tel.tracer.events() if e.name == "plan"} == {
+        0, 1,
+    }
+    st = grp.stats()
+    assert st["replicas"] == 2 and st["finished"] == len(workload)
 
 
 @pytest.mark.parametrize("dtype", ["bf16", "int8"])
