@@ -42,6 +42,17 @@ production cadence): streams asserted bit-identical, and the recorded
 ``overhead_vs_async`` is the price of observability - bounded at 5% by
 benchmarks/run.py, loudly.
 
+The fleet rows (PR 8): ``scheduler_burst/tenant_isolation`` serves a
+latency-class tenant into a long-prompt flood three ways - alone, under
+tenant-blind FCFS, and under ``TenantQuotaPolicy`` with the flooder
+quota'd - and asserts the quota'd victim p99 TTFT stays within 10% of
+the isolated serve (streams bit-identical blind vs tenant: quotas are
+latency-only).  ``scheduler_burst/prefix_affinity_2rep`` pushes a
+shared-system-prompt burst through a 2-replica group (subprocess, 2
+forced host devices) under prefix-affinity vs blind rotation, recording
+cache hit rate and TTFT per mode with streams asserted identical across
+routing.
+
 The multi-device row (``scheduler_burst/multidev_2x4``) re-runs the same
 staggered burst through :class:`repro.runtime.EngineReplicaGroup` on a
 ``2x4`` host-device mesh - 2 data-parallel engine replicas, each pool
@@ -70,7 +81,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model_zoo import build
-from repro.runtime import ServeEngine, Telemetry
+from repro.runtime import (
+    ServeEngine, Telemetry, TenantQuota, TenantQuotaPolicy,
+)
 
 PROMPTS = (96, 32, 96, 64, 32, 64)   # staggered burst, mixed lengths
 GEN = 4
@@ -293,6 +306,212 @@ def _metrics():
     return _CACHE
 
 
+# ------------------------------------------------ noisy-neighbor (PR 8) --
+
+# A flooding tenant (long prompts, throughput class, arrives first) vs a
+# small latency-class tenant arriving into the flood.  Step counts are
+# deterministic, so the isolation claim diffs exactly across PRs.
+FLOOD_PROMPTS = (96,) * 6            # 13 pages each at PAGE=8, GEN=4
+VICTIM_PROMPTS = (32, 32, 32)
+VICTIM_ARRIVALS = (2, 4, 6)          # engine steps (floods arrive 0..5)
+# flood quota: at most 2 concurrent floods (2 x 13 = 26 pages) so slots
+# stay free for the latency tenant, and one 32-token chunk per step
+# across the whole flood
+FLOOD_QUOTA = TenantQuota(max_pages=26, max_step_tokens=CHUNK)
+
+
+def tenant_isolation_metrics():
+    """Serve the victim tenant alone (`isolated`), then into the flood
+    under tenant-blind FCFS (`blind`) and under ``TenantQuotaPolicy``
+    with the flood quota'd (`tenant`).  The acceptance claim: the tenant
+    policy keeps the victim's p99 TTFT within 10% of its isolated serve,
+    while blind FCFS queues it behind the flood.  Victim AND flood
+    streams are asserted bit-identical between blind and tenant rows
+    (quotas are latency-only)."""
+    cfg, bundle, params = _bundle()
+    rng = np.random.default_rng(2)
+    flood = [list(rng.integers(0, cfg.vocab_size, n)) for n in FLOOD_PROMPTS]
+    victim = [
+        list(rng.integers(0, cfg.vocab_size, n)) for n in VICTIM_PROMPTS
+    ]
+    total = max(len(p) for p in flood) + GEN
+    num_pages = 1 + sum(
+        math.ceil((len(p) + GEN) / PAGE) for p in flood + victim
+    )
+
+    def serve(mode):
+        if mode == "tenant":
+            sched = TenantQuotaPolicy({"flood": FLOOD_QUOTA})
+        else:
+            sched = "fcfs"
+        eng = ServeEngine(
+            bundle, params, max_batch=BATCH, num_pages=num_pages,
+            page_size=PAGE, max_seq_len=total, prefill_chunk=CHUNK,
+            scheduler=sched,
+        )
+        eng.submit(list(flood[0][:2]), 2)
+        eng.run_to_completion()                    # warm the jitted calls
+        s0 = eng.steps
+        pending = []
+        if mode != "isolated":
+            pending += [
+                (s0 + i * ARRIVAL_GAP, p, "flood", "throughput")
+                for i, p in enumerate(flood)
+            ]
+        pending += [
+            (s0 + at, p, "interactive", "latency")
+            for at, p in zip(VICTIM_ARRIVALS, victim)
+        ]
+        pending.sort(key=lambda e: e[0])
+        pending = deque(pending)
+        vic, fld = [], []
+        while pending or not eng.idle:
+            while pending and pending[0][0] <= eng.steps:
+                _, p, tenant, prio = pending.popleft()
+                r = eng.submit(list(p), GEN, tenant=tenant, priority=prio)
+                (vic if tenant == "interactive" else fld).append(r)
+            eng.step()
+        ttft = [r.first_token_step - r.submit_step + 1 for r in vic]
+        return {
+            "victim_mean_ttft_steps": float(np.mean(ttft)),
+            "victim_p99_ttft_steps": int(np.max(ttft)),
+            "drain_steps": eng.steps - s0,
+            "preemptions": eng.preemptions,
+            "victim_streams": [r.generated for r in vic],
+            "flood_streams": [r.generated for r in fld],
+        }
+
+    out = {m: serve(m) for m in ("isolated", "blind", "tenant")}
+    # quotas and classes move latency only - never bits
+    assert out["tenant"]["victim_streams"] == out["blind"]["victim_streams"]
+    assert out["tenant"]["flood_streams"] == out["blind"]["flood_streams"]
+    iso = out["isolated"]["victim_p99_ttft_steps"]
+    prot = out["tenant"]["victim_p99_ttft_steps"]
+    assert prot <= 1.1 * iso, (
+        f"tenant policy failed to protect the latency tenant: p99 TTFT "
+        f"{prot} steps vs {iso} isolated"
+    )
+    for m in out.values():
+        del m["victim_streams"], m["flood_streams"]
+    out["p99_protected_within_10pct"] = True
+    return out
+
+
+_TENANT_CACHE = None
+
+
+def _tenant_metrics():
+    global _TENANT_CACHE
+    if _TENANT_CACHE is None:
+        _TENANT_CACHE = tenant_isolation_metrics()
+    return _TENANT_CACHE
+
+
+# -------------------------------------------- prefix affinity x replicas --
+
+AFFINITY_MESH = (2, 1)               # 2 data replicas, unsharded pools
+AFFINITY_SYSTEM = 64                 # shared system-prompt tokens
+AFFINITY_TAIL = 9                    # unique per-request tail
+AFFINITY_BURST = 4
+
+
+def _affinity_main():
+    """Subprocess body (2 forced host devices): a shared-system-prompt
+    burst through a 2-replica group, prefix-affinity vs blind rotation.
+    Streams asserted identical across routing modes (request ids are
+    group-global); JSON metrics on stdout."""
+    from repro.launch.mesh import make_mesh
+    from repro.runtime import EngineReplicaGroup
+
+    cfg, bundle, params = _bundle()
+    rng = np.random.default_rng(3)
+    system = list(rng.integers(0, cfg.vocab_size, AFFINITY_SYSTEM))
+    prompts = [
+        system + list(rng.integers(0, cfg.vocab_size, AFFINITY_TAIL))
+        for _ in range(1 + AFFINITY_BURST)
+    ]
+    total = AFFINITY_SYSTEM + AFFINITY_TAIL + GEN
+    per_replica = 1 + (1 + AFFINITY_BURST) * math.ceil(total / PAGE)
+    mesh = make_mesh(AFFINITY_MESH, ("data", "model"))
+    kw = dict(
+        max_batch=BATCH, num_pages=per_replica, page_size=PAGE,
+        max_seq_len=total, prefill_chunk=CHUNK, prefix_cache=True,
+    )
+
+    out = {}
+    streams = {}
+    for routing in ("affinity", "rr"):
+        grp = EngineReplicaGroup(bundle, params, mesh, routing=routing, **kw)
+        # warm phase: one request serves (and donates) the system prefix
+        r0 = grp.submit(prompts[0], GEN)
+        grp.run_to_completion()
+        s0 = max(e.steps for e in grp.engines)
+        burst = [grp.submit(p, GEN) for p in prompts[1:]]
+        grp.run_to_completion()
+        ttft = [r.first_token_step - r.submit_step + 1 for r in burst]
+        pc = [e.prefix_cache.stats() for e in grp.engines]
+        hits = sum(s["hits"] for s in pc)
+        misses = sum(s["misses"] for s in pc)
+        out[routing] = {
+            "mean_ttft_steps": float(np.mean(ttft)),
+            "max_ttft_steps": int(np.max(ttft)),
+            "drain_steps": int(max(e.steps for e in grp.engines) - s0),
+            "cache_hit_rate": hits / max(hits + misses, 1),
+            "burst_on_warm_replica": int(sum(
+                1 for r in burst
+                if grp._owner[r.req_id] is grp._owner[r0.req_id]
+            )),
+        }
+        streams[routing] = [r.generated for r in [r0] + burst]
+    assert streams["affinity"] == streams["rr"], \
+        "routing changed token streams (must be placement-only)"
+    out["burst_size"] = AFFINITY_BURST
+    out["system_tokens"] = AFFINITY_SYSTEM
+    print(json.dumps(out))
+
+
+_AFFINITY_CACHE = "unset"
+
+
+def affinity_metrics():
+    """Run :func:`_affinity_main` in a 2-host-device subprocess; None if
+    the run fails (keeps run.py total on constrained hosts)."""
+    global _AFFINITY_CACHE
+    if _AFFINITY_CACHE != "unset":
+        return _AFFINITY_CACHE
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=2",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             os.path.join(os.path.dirname(__file__), "..")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)
+        ),
+    )
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.scheduler_burst",
+             "--affinity"],
+            env=env, capture_output=True, text=True, timeout=1800,
+        )
+        if proc.returncode == 0:
+            _AFFINITY_CACHE = json.loads(
+                proc.stdout.strip().splitlines()[-1]
+            )
+        else:
+            print(
+                "[scheduler_burst affinity subprocess failed "
+                f"(rc {proc.returncode})]\n" + proc.stderr[-2000:],
+                file=sys.stderr,
+            )
+            _AFFINITY_CACHE = None
+    except Exception as e:
+        print(f"[scheduler_burst affinity subprocess error: {e}]",
+              file=sys.stderr)
+        _AFFINITY_CACHE = None
+    return _AFFINITY_CACHE
+
+
 # --------------------------------------------------- multi-device burst --
 
 MULTIDEV_MESH = (2, 4)               # (data replicas, model pool shards)
@@ -452,6 +671,25 @@ def report():
             f"pipeline_depth={m['pipeline_depth']} | streams bit-identical"
             f"{extra}",
         ))
+    ti = _tenant_metrics()
+    rows.append((
+        "scheduler_burst_tenant_isolation", 0.0,
+        f"victim p99 TTFT {ti['tenant']['victim_p99_ttft_steps']} steps "
+        f"quota'd (isolated {ti['isolated']['victim_p99_ttft_steps']}, "
+        f"blind fcfs {ti['blind']['victim_p99_ttft_steps']}) | "
+        f"flood throttled by quota | streams bit-identical blind vs tenant",
+    ))
+    af = affinity_metrics()
+    if af is not None:
+        rows.append((
+            "scheduler_burst_prefix_affinity_2rep", 0.0,
+            f"affinity: mean TTFT {af['affinity']['mean_ttft_steps']:.1f} "
+            f"steps, hit rate {af['affinity']['cache_hit_rate']:.2f}, "
+            f"{af['affinity']['burst_on_warm_replica']}/{af['burst_size']} "
+            f"on the warm replica | rr: "
+            f"{af['rr']['mean_ttft_steps']:.1f} steps, hit rate "
+            f"{af['rr']['cache_hit_rate']:.2f} | streams identical",
+        ))
     md = multidev_metrics()
     if md is not None:
         ratio = md["pool_bytes_per_replica"] / md["pool_bytes_per_device"]
@@ -518,6 +756,39 @@ def serving_rows():
                 "numerics_every": m["numerics_every"],
             }
         out.append(row)
+    ti = _tenant_metrics()
+    out.append({
+        "name": "scheduler_burst/tenant_isolation",
+        "isolated": ti["isolated"],
+        "blind": ti["blind"],
+        "tenant": ti["tenant"],
+        "p99_protected_within_10pct": ti["p99_protected_within_10pct"],
+        "flood_quota": {
+            "max_pages": FLOOD_QUOTA.max_pages,
+            "max_step_tokens": FLOOD_QUOTA.max_step_tokens,
+        },
+        "workload": {
+            "flood_prompts": list(FLOOD_PROMPTS),
+            "victim_prompts": list(VICTIM_PROMPTS),
+            "victim_arrivals": list(VICTIM_ARRIVALS),
+            "gen": GEN, "page": PAGE, "chunk": CHUNK, "batch": BATCH,
+        },
+    })
+    af = affinity_metrics()
+    if af is not None:
+        out.append({
+            "name": "scheduler_burst/prefix_affinity_2rep",
+            "mesh": {"data": AFFINITY_MESH[0], "model": AFFINITY_MESH[1]},
+            "affinity": af["affinity"],
+            "rr": af["rr"],
+            "streams_identical_across_routing": True,
+            "workload": {
+                "system_tokens": af["system_tokens"],
+                "tail_tokens": AFFINITY_TAIL,
+                "burst": af["burst_size"], "gen": GEN, "page": PAGE,
+                "chunk": CHUNK, "batch": BATCH,
+            },
+        })
     md = multidev_metrics()
     if md is not None:
         out.append({
@@ -542,6 +813,8 @@ def serving_rows():
 if __name__ == "__main__":
     if "--multidev" in sys.argv:
         _multidev_main()
+    elif "--affinity" in sys.argv:
+        _affinity_main()
     else:
         for name, us, derived in report():
             print(f"{name},{us:.1f},{derived}")

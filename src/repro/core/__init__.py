@@ -27,6 +27,7 @@ from repro.core.precision import (
     POLICIES,
     PrecisionPolicy,
     get_policy,
+    reduce_dtype,
 )
 from repro.core.ring import make_ring_attention, ring_pasa_attention
 from repro.core.shifting import (
@@ -42,7 +43,8 @@ __all__ = [
     "effective_invariance", "finalize_state", "flash_attention", "get_policy",
     "init_state", "invariance_rel_err", "make_ring_attention",
     "naive_attention", "optimal_beta", "pasa_attention",
-    "practical_invariance", "ring_pasa_attention", "shift_kv_blocks",
+    "practical_invariance", "reduce_dtype", "ring_pasa_attention",
+    "shift_kv_blocks",
     "shifting_matrix", "shifting_matrix_inverse", "solve_paper_betas",
     "update_state",
 ]

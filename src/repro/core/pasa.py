@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import beta as beta_lib
-from repro.core.precision import FP16, FP32, PrecisionPolicy
+from repro.core.precision import FP16, FP32, PrecisionPolicy, reduce_dtype
 from repro.core.shifting import (
     effective_invariance,
     shift_kv_blocks,
@@ -157,17 +157,20 @@ def update_state(
     smask = sbar_mask if sbar_mask is not None else (
         mask if sbar_over_mask else None
     )
+    # Reductions accumulate at the wide dtype and round once on the store -
+    # the kernels do the same (repro.core.precision.reduce_dtype).
+    wide = reduce_dtype(st)
     if smask is not None:
         cnt_cols = jnp.maximum(
-            jnp.sum(smask.astype(st), axis=-1, keepdims=True), 1.0
+            jnp.sum(smask.astype(wide), axis=-1, keepdims=True), 1.0
         )
         sbar = (
-            jnp.sum(jnp.where(smask, s.astype(st), 0.0), axis=-1,
+            jnp.sum(jnp.where(smask, s.astype(wide), 0.0), axis=-1,
                     keepdims=True)
             / cnt_cols
-        )
+        ).astype(st)
     else:
-        sbar = jnp.mean(s.astype(st), axis=-1, keepdims=True)
+        sbar = jnp.mean(s.astype(wide), axis=-1, keepdims=True).astype(st)
 
     if mask is not None:
         s = jnp.where(mask, s, jnp.asarray(NEG_BIG, s.dtype))
@@ -182,7 +185,7 @@ def update_state(
         # everywhere, and e_cur * (p @ v) would 0*Inf-poison the accumulator
         # if v holds non-finite stale values (recycled, unscrubbed pages).
         p = jnp.where(mask, p, jnp.asarray(0.0, p.dtype))
-    l_loc = jnp.sum(p.astype(st), axis=-1, keepdims=True)
+    l_loc = jnp.sum(p.astype(wide), axis=-1, keepdims=True).astype(st)
 
     first = state.cnt == 0
     if inva != 0.0:
@@ -389,7 +392,11 @@ def blocked_attention(
             k = shift_kv_blocks(k, m_mat, block_kv).astype(policy.input_dtype)
         else:
             inva = beta / (1.0 - beta)
-            st = policy.stat_dtype
+            # Algebraic shift mirrors the decode kernels bit-for-bit: wide
+            # accumulate, single narrow store (see precision.reduce_dtype),
+            # and the same multiply-by-reciprocal scaling expression.
+            wide = reduce_dtype(policy.stat_dtype)
+            scale = jnp.asarray(1.0 / np.sqrt(d), wide)
             kb = k.reshape(*k.shape[:-2], n_blocks, block_kv, d)
             if shift_mask_valid:
                 cols = jnp.arange(s2_pad, dtype=jnp.int32).reshape(
@@ -399,15 +406,15 @@ def blocked_attention(
                     cols < jnp.reshape(limit, jnp.shape(limit) + (1, 1))
                 )[..., None]                       # (..., nb, bkv, 1)
                 cnt = jnp.maximum(
-                    jnp.sum(vmask.astype(st), axis=-2, keepdims=True), 1.0
+                    jnp.sum(vmask.astype(wide), axis=-2, keepdims=True), 1.0
                 )
                 mean = (
-                    jnp.sum(jnp.where(vmask, kb.astype(st), 0.0), axis=-2,
+                    jnp.sum(jnp.where(vmask, kb.astype(wide), 0.0), axis=-2,
                             keepdims=True) / cnt
                 )
             else:
-                mean = jnp.mean(kb.astype(st), axis=-2, keepdims=True)
-            kb = (kb.astype(st) - beta * mean) / np.sqrt(d)
+                mean = jnp.mean(kb.astype(wide), axis=-2, keepdims=True)
+            kb = (kb.astype(wide) - jnp.asarray(beta, wide) * mean) * scale
             k = kb.reshape(*k.shape).astype(policy.input_dtype)
     else:
         # Faithful plain-FA precision allocation: the first GEMM emits raw

@@ -56,6 +56,32 @@ class PrecisionPolicy:
         return float(jnp.finfo(self.score_dtype).max)
 
 
+def reduce_dtype(stat_dtype: DType) -> DType:
+    """Wide accumulator dtype for vector-unit reductions (sums / means).
+
+    Reductions feeding cross-block state (block key mean, row pseudo-average
+    s-bar, softmax sum l) accumulate one level wider than the policy's
+    ``stat_dtype`` store and round ONCE on the store.  This mirrors
+    matrix-engine semantics (the MXU / CUBE already accumulates its GEMMs at
+    fp32 regardless of operand dtype) and is the reproducibility requirement
+    of "Is Flash Attention Stable?" (arXiv:2405.02803): a sum *accumulated*
+    at fp16 is not a deterministic function of its inputs across
+    implementations - XLA's low-precision reduction order changes with
+    operand layout and fusion context, so the same block summed inside a
+    Pallas kernel, an eager op, and a fused jit region rounds differently
+    (observed: up to 5e-2/element on the shift GEMM across layouts, 3e-3 on
+    decode outputs across lowering modes).  A wide accumulate with a single
+    narrow store is order-insensitive at any realistic block width, which is
+    what lets the kernels and the pure-jnp references agree to
+    rounding-level tolerances on every shape.  The *stored* statistics
+    (m, l, F-bar, scores, accumulator) keep the policy's dtypes - the
+    paper's precision-allocation story (e.g. overflow at the fp16 score
+    store) is untouched.  ``max`` reductions are exact and order-free and
+    stay at ``stat_dtype``.
+    """
+    return jnp.float64 if stat_dtype == jnp.float64 else jnp.float32
+
+
 FP32 = PrecisionPolicy(
     name="fp32",
     input_dtype=jnp.float16,

@@ -87,19 +87,35 @@ def shift_kv_blocks(k: jnp.ndarray, m: jnp.ndarray, block_kv: int) -> jnp.ndarra
     emits a single batched GEMM (the paper's "matrix-naive method... on matrix
     engines").
 
+    The contraction accumulates one precision level wider than ``m``'s
+    storage dtype and rounds ONCE on the store — matrix-engine (MXU / CUBE)
+    semantics, and exactly what kernels/shift_kv.py does
+    (``preferred_element_type=float32``).  Accumulating at the fp16 operand
+    dtype instead is NOT reproducible: XLA's low-precision reduction order
+    depends on the operand layout, so the same key block shifted inside a
+    (B, KVH, ...) tensor vs a GQA-expanded (B, H, ...) tensor rounds
+    differently (observed up to 5e-2 per element on resonance inputs) —
+    which is the "Is Flash Attention Stable?" implementation-divergence
+    failure mode this reference exists to catch, not exhibit.
+
     Args:
       k: (..., S2, D) keys, S2 % block_kv == 0 (pad first; see pasa.py).
       m: (block_kv, block_kv) shifting matrix.
       block_kv: block size s2.
 
     Returns:
-      (..., S2, D) shifted+scaled keys, dtype of ``m``'s promotion with k.
+      (..., S2, D) shifted+scaled keys, in ``m``'s dtype (single rounding
+      from the wide accumulator).
     """
     *lead, s2, dd = k.shape
     if s2 % block_kv:
         raise ValueError(f"S2={s2} not divisible by block_kv={block_kv}")
     kb = k.reshape(*lead, s2 // block_kv, block_kv, dd)
-    out = jnp.einsum("st,...jtd->...jsd", m, kb.astype(m.dtype))
+    acc_t = jnp.float64 if m.dtype == jnp.float64 else jnp.float32
+    out = jnp.einsum(
+        "st,...jtd->...jsd", m, kb.astype(m.dtype),
+        preferred_element_type=acc_t,
+    ).astype(m.dtype)
     return out.reshape(*lead, s2, dd)
 
 

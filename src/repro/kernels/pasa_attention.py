@@ -33,6 +33,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import reduce_dtype
 from repro.kernels.compat import CompilerParams
 
 NEG_BIG = -30000.0
@@ -86,8 +87,19 @@ def _attn_kernel(
             s = s * jnp.asarray(post_scale, s.dtype)
 
         # Row pseudo-average of the full (unmasked) block - Eq. 14 requires
-        # the mean over exactly the columns the shift used.
-        sbar = jnp.mean(s.astype(stat_dtype), axis=-1, keepdims=True)
+        # the mean over exactly the columns the shift used.  Reductions
+        # accumulate wide and round once on the store (see
+        # repro.core.precision.reduce_dtype), as ones-vector dot_general
+        # contractions with shape-fixed accumulation order (same rationale
+        # as pasa_decode.masked_block_update).
+        wide = reduce_dtype(stat_dtype)
+        ones = jnp.ones((block_kv, 1), wide)
+        sbar = (
+            jax.lax.dot_general(
+                s.astype(wide), ones, (((1,), (0,)), ((), ())),
+                preferred_element_type=wide,
+            ) / block_kv
+        ).astype(stat_dtype)
 
         if causal:
             rows = i * block_q + jax.lax.broadcasted_iota(
@@ -100,7 +112,10 @@ def _attn_kernel(
 
         m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
         p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
-        l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+        l_loc = jax.lax.dot_general(
+            p.astype(wide), ones, (((1,), (0,)), ((), ())),
+            preferred_element_type=wide,
+        ).astype(stat_dtype)
 
         m_prev = m_scr[:, :1]
         l_prev = l_scr[:, :1]

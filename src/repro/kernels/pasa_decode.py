@@ -29,6 +29,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import reduce_dtype
 from repro.kernels.compat import CompilerParams
 
 NEG_BIG = -30000.0
@@ -65,26 +66,41 @@ def masked_block_update(
     block_kv) and the paged decode kernel (block == page_size) - keeping
     this in ONE place is what makes the two kernels' outputs comparable
     bit-for-bit (tests/test_paged.py).
+
+    Reductions (count, key mean, row mean, softmax sum) accumulate at the
+    wide dtype and round once on the store - see
+    ``repro.core.precision.reduce_dtype``.  Accumulating them at an fp16
+    ``stat_dtype`` is order-sensitive: the Mosaic lowering and the XLA
+    reference round the *same* expressions differently (observed 3e-3 on
+    decode outputs), which breaks the kernel==reference contract.  The
+    sums are expressed as ones-vector ``dot_general`` contractions, not
+    vector-unit reduces: a GEMM's accumulation order is fixed by its
+    (static) shapes, while a ``reduce`` lowers with layout-dependent
+    order - the paged and contiguous kernels feed this function blocks
+    gathered from different memory layouts, and their outputs must stay
+    bit-for-bit equal (tests/test_paged.py).
     """
     d = q.shape[-1]
-    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
+    wide = reduce_dtype(stat_dtype)
+    scale = jnp.asarray(1.0 / np.sqrt(d), wide)
 
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
     valid = cols < kv_len                              # (block, 1)
-    count = jnp.sum(valid.astype(stat_dtype))
+    ones = jnp.ones((block, 1), wide)
+    # integer-valued -> exact at wide regardless of order
+    count = jnp.sum(valid.astype(wide))
 
     if beta > 0.0:
         # Masked per-block key mean (algebraic shift; see module doc).
-        km = jnp.sum(
-            jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
-            keepdims=True,
+        km = jax.lax.dot_general(
+            ones, jnp.where(valid, k.astype(wide), 0.0),
+            (((0,), (0,)), ((), ())), preferred_element_type=wide,
         ) / count                                      # (1, d)
         k_sh = (
-            (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
-            * scale
+            (k.astype(wide) - jnp.asarray(beta, wide) * km) * scale
         ).astype(k.dtype)
     else:
-        k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
+        k_sh = (k.astype(wide) * scale).astype(k.dtype)
 
     s = jax.lax.dot_general(
         q, k_sh, (((1,), (1,)), ((), ())),
@@ -94,15 +110,20 @@ def masked_block_update(
     vmask = valid[:, 0][None, :]                       # (1, block)
     # Masked row mean over the *valid* columns only (matches the shift).
     sbar = (
-        jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
-                keepdims=True) / count
-    )
+        jax.lax.dot_general(
+            jnp.where(vmask, s.astype(wide), 0.0), ones,
+            (((1,), (0,)), ((), ())), preferred_element_type=wide,
+        ) / count
+    ).astype(stat_dtype)                               # (G, 1)
     s = jnp.where(vmask, s, jnp.asarray(NEG_BIG, s.dtype))
 
     m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
     p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
     p = jnp.where(vmask, p, jnp.asarray(0.0, p.dtype))
-    l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+    l_loc = jax.lax.dot_general(
+        p.astype(wide), ones, (((1,), (0,)), ((), ())),
+        preferred_element_type=wide,
+    ).astype(stat_dtype)                               # (G, 1)
 
     m_prev = m_scr[:, :1]
     l_prev = l_scr[:, :1]

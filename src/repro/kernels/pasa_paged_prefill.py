@@ -63,6 +63,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import reduce_dtype
 from repro.kernels.compat import CompilerParams
 from repro.kernels.pasa_paged_decode import _gather_dequant, dequant_block
 
@@ -85,38 +86,57 @@ def _chunk_block_update(
     acc_dtype,
     score_dtype,
 ):
-    """Fold one page into the per-row running state (chunk-exact rules)."""
+    """Fold one page into the per-row running state (chunk-exact rules).
+
+    Reductions accumulate at ``reduce_dtype(stat_dtype)`` and round once on
+    the store (see that function's doc) - the same wide-accumulate /
+    narrow-store convention as ``pasa_decode.masked_block_update``.  The
+    *spelling* differs deliberately: this kernel's bit-tracking partner is
+    the XLA fallback (``paged_prefill_xla`` -> ``blocked_attention``, the
+    engine's CPU route and this kernel's validation oracle), so every
+    reduction and the beta == 0 plain-FA post-scale use the exact
+    expressions of ``pasa.update_state`` / ``blocked_attention`` - which
+    makes kernel and fallback outputs bit-identical on the test workloads
+    (tests/test_prefix_cache.py) instead of merely tolerance-close.  The
+    decode kernels' partner is their paged/contiguous twin across memory
+    layouts, hence their ones-vector ``dot_general`` spelling.
+    """
     d = q.shape[-1]
-    scale = jnp.asarray(1.0 / np.sqrt(d), stat_dtype)
+    wide = reduce_dtype(stat_dtype)
+    scale = jnp.asarray(1.0 / np.sqrt(d), wide)
 
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
     valid = cols < kv_len                                   # (page, 1)
-    count = jnp.maximum(jnp.sum(valid.astype(stat_dtype)), 1.0)
+    # integer-valued -> exact at wide regardless of order
+    count = jnp.maximum(jnp.sum(valid.astype(wide)), 1.0)
 
     if beta > 0.0:
         km = jnp.sum(
-            jnp.where(valid, k.astype(stat_dtype), 0.0), axis=0,
-            keepdims=True,
+            jnp.where(valid, k.astype(wide), 0.0), axis=0, keepdims=True,
         ) / count                                           # (1, d)
         k_sh = (
-            (k.astype(stat_dtype) - jnp.asarray(beta, stat_dtype) * km)
-            * scale
+            (k.astype(wide) - jnp.asarray(beta, wide) * km) * scale
         ).astype(k.dtype)
     else:
-        k_sh = (k.astype(stat_dtype) * scale).astype(k.dtype)
+        k_sh = k
 
     s = jax.lax.dot_general(
         q, k_sh, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).astype(score_dtype)                                   # (bq, page)
+    if beta == 0.0:
+        # Plain-FA path (Eq. 2), mirroring the XLA fallback's update_state:
+        # raw QK^T is stored at score precision (the paper's overflow point)
+        # and the static 1/sqrt(d) lands after, on the vector unit.
+        s = s * jnp.asarray(1.0 / np.sqrt(d), s.dtype)
 
     vmask = valid[:, 0][None, :]                            # (1, page)
     # Row pseudo-average over the VALID columns (same set the shift used);
     # the causal mask has not been applied yet - chunk-exact semantics.
     sbar = (
-        jnp.sum(jnp.where(vmask, s.astype(stat_dtype), 0.0), axis=-1,
+        jnp.sum(jnp.where(vmask, s.astype(wide), 0.0), axis=-1,
                 keepdims=True) / count
-    )
+    ).astype(stat_dtype)
 
     rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
     causal = rows >= jnp.transpose(cols)                    # (bq, page)
@@ -126,7 +146,9 @@ def _chunk_block_update(
     m_loc = jnp.max(s.astype(stat_dtype), axis=-1, keepdims=True)
     p = jnp.exp(s.astype(stat_dtype) - m_loc).astype(score_dtype)
     p = jnp.where(mask, p, jnp.asarray(0.0, p.dtype))
-    l_loc = jnp.sum(p.astype(stat_dtype), axis=-1, keepdims=True)
+    l_loc = jnp.sum(
+        p.astype(wide), axis=-1, keepdims=True
+    ).astype(stat_dtype)
 
     m_prev = m_scr[:, :1]
     l_prev = l_scr[:, :1]

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import pasa as pasa_core
 from repro.core import shifting
-from repro.core.precision import PrecisionPolicy
+from repro.core.precision import PrecisionPolicy, reduce_dtype
 
 
 def _expand_kv(x: jnp.ndarray, h: int) -> jnp.ndarray:
@@ -74,20 +74,24 @@ def decode_ref(
     s2 = k_cache.shape[2]
     n_blocks = s2 // block_kv
     st = policy.stat_dtype
+    # Reductions accumulate wide and round once on the store, matching the
+    # kernel's masked_block_update (see repro.core.precision.reduce_dtype).
+    wide = reduce_dtype(st)
+    scale = jnp.asarray(1.0 / np.sqrt(d), wide)
 
     cols = jnp.arange(s2)
     valid = cols[None, :] < kv_len[:, None]                    # (B, S2)
     vb = valid.reshape(b, n_blocks, block_kv)
-    kb = k_cache.reshape(b, kvh, n_blocks, block_kv, d).astype(st)
-    cnt = jnp.maximum(vb.sum(-1).astype(st), 1.0)              # (B, nb)
+    kb = k_cache.reshape(b, kvh, n_blocks, block_kv, d).astype(wide)
+    cnt = jnp.maximum(vb.sum(-1).astype(wide), 1.0)            # (B, nb)
     km = (
         jnp.where(vb[:, None, :, :, None], kb, 0.0).sum(-2)
         / cnt[:, None, :, None]
     )                                                           # (B,KVH,nb,D)
     if beta > 0.0:
-        k_sh = (kb - beta * km[..., None, :]) / np.sqrt(d)
+        k_sh = (kb - jnp.asarray(beta, wide) * km[..., None, :]) * scale
     else:
-        k_sh = kb / np.sqrt(d)
+        k_sh = kb * scale
     k_sh = k_sh.reshape(b, kvh, s2, d).astype(policy.input_dtype)
 
     # Blocked PASA with per-block masked means.  The per-batch processed-block
@@ -120,17 +124,17 @@ def decode_ref(
             "...gd,...td->...gt", qp, kj, preferred_element_type=gemm_t
         ).astype(policy.score_dtype)
         ccols = jnp.maximum(
-            jnp.sum(mask_b.astype(st), axis=-1, keepdims=True), 1.0
+            jnp.sum(mask_b.astype(wide), axis=-1, keepdims=True), 1.0
         )
         sbar = (
-            jnp.sum(jnp.where(mask_b, s.astype(st), 0.0), axis=-1,
+            jnp.sum(jnp.where(mask_b, s.astype(wide), 0.0), axis=-1,
                     keepdims=True) / ccols
-        )
+        ).astype(st)
         s = jnp.where(mask_b, s, jnp.asarray(pasa_core.NEG_BIG, s.dtype))
         m_loc = jnp.max(s.astype(st), axis=-1, keepdims=True)
         p = jnp.exp(s.astype(st) - m_loc).astype(policy.score_dtype)
         p = jnp.where(mask_b, p, jnp.asarray(0.0, p.dtype))
-        l_loc = jnp.sum(p.astype(st), axis=-1, keepdims=True)
+        l_loc = jnp.sum(p.astype(wide), axis=-1, keepdims=True).astype(st)
 
         first = cnt_prev == 0.0
         if inva != 0.0:

@@ -28,6 +28,15 @@ Two cache backends:
     the dense path: their recurrent state is O(1) per sequence, there is
     nothing to page.
 
+Multi-tenant fleet (PR 8): ``--scheduler tenant`` serves through
+:class:`repro.runtime.TenantQuotaPolicy` - per-tenant page/token quotas
+(``--tenant-quotas 'bulk=8:32,interactive=16'``) and latency/throughput
+SLO classes - and ``--routing {affinity,least,rr}`` picks the replica
+-group placement policy (prefix-affinity by default: route to the
+replica whose radix trie holds the longest cached prefix, falling back
+to least-loaded; see runtime/README.md "Multi-tenant fleet").  Both are
+latency-only knobs - streams stay bit-identical (tests/test_fleet.py).
+
 Sampling: ``--temperature`` / ``--top-k`` select per-request PRNG-keyed
 sampling on the paged route (temperature 0 = greedy argmax, the
 bit-exact default); keys derive from (request id, token index), so
@@ -83,6 +92,41 @@ import argparse
 import time
 
 
+def parse_tenant_quotas(spec):
+    """Parse a ``--tenant-quotas`` spec into ``{tenant: TenantQuota}``.
+
+    Format: comma-separated ``tenant=max_pages[:max_step_tokens]`` entries;
+    an empty field means "unlimited" for that resource, e.g.
+    ``bulk=8:32,interactive=16,best-effort=:64``.
+    """
+    from repro.runtime import TenantQuota
+
+    quotas = {}
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        name, sep, body = entry.partition("=")
+        name = name.strip()
+        if not sep or not name:
+            raise ValueError(
+                f"bad --tenant-quotas entry {entry!r}: expected "
+                "tenant=max_pages[:max_step_tokens]"
+            )
+        pages_s, _, toks_s = body.partition(":")
+        try:
+            max_pages = int(pages_s) if pages_s.strip() else None
+            max_toks = int(toks_s) if toks_s.strip() else None
+        except ValueError:
+            raise ValueError(
+                f"bad --tenant-quotas entry {entry!r}: fields must be ints"
+            ) from None
+        quotas[name] = TenantQuota(
+            max_pages=max_pages, max_step_tokens=max_toks
+        )
+    return quotas
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -118,13 +162,28 @@ def main(argv=None):
                     help="per-row chunk width of the batched prefill call; "
                          "multiple of the page size (default: 8 pages)")
     ap.add_argument("--scheduler", default="fcfs",
-                    choices=("fcfs", "sjf", "mixed"),
+                    choices=("fcfs", "sjf", "mixed", "tenant"),
                     help="paged route: scheduling policy - fcfs (arrival "
                          "order, head-of-line blocking; the bit-preserving "
                          "default), sjf (shortest-job-first prefill, no "
                          "HOL blocking, aging guard), mixed (Sarathi-style "
-                         "fair-share token-budget mixing).  Outputs are "
-                         "bit-identical across policies")
+                         "fair-share token-budget mixing), tenant "
+                         "(multi-tenant quotas + latency/throughput "
+                         "priority classes; see --tenant-quotas).  Outputs "
+                         "are bit-identical across policies")
+    ap.add_argument("--tenant-quotas", default=None, metavar="SPEC",
+                    help="per-tenant quota spec for --scheduler tenant: "
+                         "comma-separated tenant=max_pages[:max_step_"
+                         "tokens] entries, e.g. 'bulk=8:32,interactive=16'"
+                         " (empty field = unlimited)")
+    ap.add_argument("--routing", default="affinity",
+                    choices=("affinity", "least", "rr"),
+                    help="replica-group request routing (multi-replica "
+                         "meshes): affinity (longest cached prompt prefix "
+                         "wins, least-loaded fallback; default), least "
+                         "(least-loaded, round-robin tiebreak), rr "
+                         "(strict rotation).  Routing never changes "
+                         "output bits")
     ap.add_argument("--prefill-batch", type=int, default=None,
                     help="paged route: still-prefilling requests batched "
                          "into one prefill device call (default: --batch; "
@@ -339,6 +398,16 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
     batch_per = math.ceil(args.batch / n_data)
     need = math.ceil(total / page_size) * batch_per
     num_pages = args.num_pages or need + 1  # +1: reserved null page
+    scheduler = args.scheduler
+    if args.tenant_quotas is not None:
+        if args.scheduler != "tenant":
+            raise ValueError("--tenant-quotas requires --scheduler tenant")
+        from repro.runtime import TenantQuotaPolicy
+
+        scheduler = TenantQuotaPolicy(
+            parse_tenant_quotas(args.tenant_quotas),
+            patience=max(args.preempt_patience, 1),
+        )
     engine_kwargs = dict(
         max_batch=batch_per, num_pages=num_pages, page_size=page_size,
         max_seq_len=total,
@@ -346,7 +415,7 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         prefill_chunk=chunk,
         prefix_cache=args.prefix_cache,
         cache_dtype=args.kv_dtype,
-        scheduler=args.scheduler,
+        scheduler=scheduler,
         prefill_batch=args.prefill_batch,
         step_token_budget=args.step_token_budget,
         preemption=args.preemption,
@@ -386,7 +455,9 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         engine_kwargs["on_token"] = on_token
 
     if mesh is not None and (n_data > 1 or n_model > 1):
-        eng = EngineReplicaGroup(bundle, params, mesh, **engine_kwargs)
+        eng = EngineReplicaGroup(
+            bundle, params, mesh, routing=args.routing, **engine_kwargs
+        )
         placement = f"{n_data} replicas x model={n_model} pool shards"
     else:
         eng = ServeEngine(bundle, params, **engine_kwargs)

@@ -120,7 +120,12 @@ from repro.runtime.paged_cache import (
     resolve_pool_dtype,
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
-from repro.runtime.scheduler import RequestView, get_scheduler
+from repro.runtime.scheduler import (
+    DEFAULT_TENANT,
+    PRIORITY_CLASSES,
+    RequestView,
+    get_scheduler,
+)
 from repro.runtime.telemetry import Telemetry, _drain_point
 
 WAITING = "waiting"
@@ -228,6 +233,11 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     state: str = WAITING
+    # multi-tenant attribution: quota accounting, priority-class ordering,
+    # and per-tenant telemetry.  Purely host-side scheduling inputs - they
+    # never reach the device, so tenant labels cannot change output bits.
+    tenant: str = DEFAULT_TENANT
+    priority: str = "throughput"
     generated: List[int] = dataclasses.field(default_factory=list)
     # engine-step timestamps (continuous-batching latency accounting)
     submit_step: int = -1
@@ -766,9 +776,16 @@ class ServeEngine:
     # ------------------------------------------------------------- queue --
 
     def submit(
-        self, prompt, max_new_tokens: int, req_id: Optional[int] = None
+        self, prompt, max_new_tokens: int, req_id: Optional[int] = None,
+        *, tenant: str = DEFAULT_TENANT, priority: str = "throughput",
     ) -> Request:
         """Enqueue a request; admission happens inside :meth:`step`.
+
+        ``tenant`` and ``priority`` (one of
+        ``scheduler.PRIORITY_CLASSES``) attribute the request for
+        quota-aware policies (``scheduler="tenant"``) and per-tenant
+        telemetry; policies that do not read them behave exactly as
+        before.  They shape latency only - never output bits.
 
         Raises ValueError immediately for requests that could NEVER be
         served - ``len(prompt) + max_new_tokens`` beyond ``max_seq_len`` or
@@ -780,10 +797,19 @@ class ServeEngine:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if not tenant or not isinstance(tenant, str):
+            raise ValueError(f"tenant must be a non-empty string: {tenant!r}")
+        if priority not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"priority must be one of {PRIORITY_CLASSES}, got {priority!r}"
+            )
         if req_id is None:
             req_id = self._req_counter
         self._req_counter = max(self._req_counter + 1, req_id + 1)
-        r = Request(req_id=req_id, prompt=prompt, max_new_tokens=max_new_tokens)
+        r = Request(
+            req_id=req_id, prompt=prompt, max_new_tokens=max_new_tokens,
+            tenant=tenant, priority=priority,
+        )
         if r.total_len > self.max_seq_len:
             raise ValueError(
                 f"request needs {len(prompt)} prompt + {max_new_tokens} new "
@@ -799,7 +825,9 @@ class ServeEngine:
         r.submit_step = self.steps
         self.waiting.append(r)
         if self.telemetry is not None:
-            self.telemetry.on_submit(r.req_id, self.steps)
+            self.telemetry.on_submit(
+                r.req_id, self.steps, tenant=r.tenant, priority=r.priority
+            )
         return r
 
     # ------------------------------------------------------- policy view --
@@ -823,6 +851,8 @@ class ServeEngine:
             preempt_count=r.preempt_count,
             preempt_step=r.preempt_step,
             pending_tokens=r.pending,
+            tenant=r.tenant,
+            priority=r.priority,
         )
 
     # --------------------------------------------------------- admission --
@@ -902,8 +932,10 @@ class ServeEngine:
         blocked: Optional[Request] = None
         page_failed: set = set()
         while self.waiting:
-            order = self._policy.admission_order(
-                [self._view(r) for r in self.waiting], now=self.steps
+            order = self._policy.plan_admission(
+                [self._view(r) for r in self.waiting],
+                [self._view(r) for r in self._slots if r is not None],
+                now=self.steps,
             )
             by_id = {r.req_id: r for r in self.waiting}
             admitted = False
@@ -1021,7 +1053,7 @@ class ServeEngine:
         self.preemptions += 1
         self.waiting.append(r)
         if self.telemetry is not None:
-            self.telemetry.on_preempt(r.req_id, self.steps)
+            self.telemetry.on_preempt(r.req_id, self.steps, tenant=r.tenant)
 
     def _finish(self, r: Request) -> None:
         self._release_slot(r)
@@ -1029,7 +1061,7 @@ class ServeEngine:
         r.finish_step = self.steps
         self.finished[r.req_id] = r
         if self.telemetry is not None:
-            self.telemetry.on_finish(r.req_id, self.steps)
+            self.telemetry.on_finish(r.req_id, self.steps, tenant=r.tenant)
 
     def _account_step_tokens(self, n: int) -> None:
         self.last_step_tokens = int(n)
@@ -1057,6 +1089,7 @@ class ServeEngine:
         tests/test_telemetry.py pins both)."""
         st = self._inflight.popleft()
         emitted = 0
+        by_tenant: Dict[str, int] = {}
         for tok_dev, emits in (
             (st.prefill_tok, st.prefill_emits),
             (st.decode_tok, st.decode_emits),
@@ -1069,16 +1102,18 @@ class ServeEngine:
                 r.generated[gen_idx] = tok
                 r.pending -= 1
                 emitted += 1
+                by_tenant[r.tenant] = by_tenant.get(r.tenant, 0) + 1
                 if gen_idx == 0 and r.first_token_step < 0:
                     r.first_token_step = st.step_no
                     if self.telemetry is not None:
                         self.telemetry.on_first_token(
-                            r.req_id, r.submit_step, st.step_no
+                            r.req_id, r.submit_step, st.step_no,
+                            tenant=r.tenant,
                         )
                 if self.on_token is not None:
                     self.on_token(r, gen_idx, tok)
         if emitted and self.telemetry is not None:
-            self.telemetry.on_tokens_emitted(emitted)
+            self.telemetry.on_tokens_emitted(emitted, by_tenant=by_tenant)
 
     def _retire_backlog(self) -> None:
         """Retire down to ``pipeline_depth`` steps in flight (the tail of
@@ -1495,18 +1530,42 @@ class ServeEngine:
         return out
 
 
+#: Replica-routing modes for :class:`EngineReplicaGroup.submit`.
+ROUTING_MODES = ("affinity", "least", "rr")
+
+
 class EngineReplicaGroup:
     """Data-parallel paged serving over a 2-D ``(data, model)`` mesh.
 
     One :class:`ServeEngine` replica per ``data``-axis row, each serving
     from its OWN page pool sharded over that row's ``model`` devices
-    (``ServeEngine(mesh=...)``); requests from one logical queue are dealt
-    round-robin across replicas.  Replicas share nothing on device -
-    sharding the pools over ``model`` is the tensor-parallel dimension,
-    replicas over ``data`` the throughput dimension - so per-request
-    streams stay bit-identical to a single-engine serve (round-robin only
-    changes which pool a request's pages live in, and decode reads only
-    the request's own page-table row).
+    (``ServeEngine(mesh=...)``); requests from one logical queue are
+    routed across replicas.  Replicas share nothing on device - sharding
+    the pools over ``model`` is the tensor-parallel dimension, replicas
+    over ``data`` the throughput dimension - so per-request streams stay
+    bit-identical to a single-engine serve (routing only changes which
+    pool a request's pages live in, and decode reads only the request's
+    own page-table row).
+
+    ``routing`` picks the placement policy:
+
+      * ``"affinity"`` (default): probe every replica's radix prefix trie
+        (:meth:`RadixPrefixCache.probe_len`, a pure read) and send the
+        request to the replica holding the longest cached prefix of its
+        prompt; with no cached prefix anywhere (or the prefix cache off)
+        fall back to least-loaded.  A burst sharing a system prompt lands
+        on the replica that already holds those pages instead of
+        re-prefilling them per replica (benchmarks/scheduler_burst.py).
+      * ``"least"``: least-loaded (fewest waiting + running requests),
+        ties broken by a rotating cursor.  When loads are equal this IS
+        round-robin - a burst submitted up front deals ``i::n`` exactly -
+        but after a :meth:`cancel` or an early finish the next requests
+        fill the gap instead of blindly continuing the rotation.
+      * ``"rr"``: strict rotation regardless of load (the legacy deal;
+        kept for schedule reproduction).
+
+    Routing never changes streams: request ids are group-global, so the
+    sampled tokens of request N are identical wherever it lands.
 
     The group exposes the subset of the engine surface the launcher needs
     (submit / step / run_to_completion / stats); per-request bookkeeping
@@ -1514,7 +1573,7 @@ class EngineReplicaGroup:
     """
 
     def __init__(self, bundle, params, mesh, *, telemetry=None,
-                 **engine_kwargs):
+                 routing: str = "affinity", **engine_kwargs):
         from jax.sharding import Mesh
 
         names = mesh.axis_names
@@ -1550,6 +1609,11 @@ class EngineReplicaGroup:
             )
             for i, m in enumerate(self.meshes)
         ]
+        if routing not in ROUTING_MODES:
+            raise ValueError(
+                f"routing must be one of {ROUTING_MODES}, got {routing!r}"
+            )
+        self.routing = routing
         self._rr = 0
         self._req_counter = 0
         self._owner: Dict[int, ServeEngine] = {}
@@ -1558,18 +1622,59 @@ class EngineReplicaGroup:
     def n_replicas(self) -> int:
         return len(self.engines)
 
-    def submit(self, prompt, max_new_tokens: int) -> Request:
-        """Round-robin deal from the one logical queue.  Request ids are
-        GROUP-global - the ids a single engine serving the same
-        submission order would assign - so per-(req id, token index)
-        sampling keys (and with them sampled streams) are deal-invariant,
-        and :meth:`cancel` can address a request without knowing which
-        replica owns it."""
-        eng = self.engines[self._rr % len(self.engines)]
-        self._rr += 1
+    # ----------------------------------------------------------- routing --
+
+    def _load(self, eng: ServeEngine) -> int:
+        """A replica's outstanding work in requests: queued + occupying a
+        slot.  Counts, not token volumes - cheap, and proportional enough
+        to spot the post-cancel imbalance strict rotation ignores."""
+        return len(eng.waiting) + eng.num_running
+
+    def _pick_least_loaded(self, cands: List[int]) -> int:
+        """Least-loaded among candidate replica indices; ties broken by a
+        rotating cursor so equal-load routing degenerates to round-robin
+        (the deal existing schedules are pinned to)."""
+        lo = min(self._load(self.engines[i]) for i in cands)
+        tied = [i for i in cands if self._load(self.engines[i]) == lo]
+        pick = min(tied, key=lambda i: (i - self._rr) % len(self.engines))
+        self._rr = pick + 1
+        return pick
+
+    def _route(self, prompt) -> ServeEngine:
+        n = len(self.engines)
+        if self.routing == "rr":
+            pick = self._rr % n
+            self._rr += 1
+            return self.engines[pick]
+        cands = list(range(n))
+        if self.routing == "affinity":
+            probes = [
+                0 if e.prefix_cache is None
+                else e.prefix_cache.probe_len(prompt)
+                for e in self.engines
+            ]
+            best = max(probes)
+            if best > 0:
+                cands = [i for i in cands if probes[i] == best]
+        return self.engines[self._pick_least_loaded(cands)]
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               tenant: str = DEFAULT_TENANT,
+               priority: str = "throughput") -> Request:
+        """Route one request from the logical queue (see class doc for
+        the routing modes).  Request ids are GROUP-global - the ids a
+        single engine serving the same submission order would assign - so
+        per-(req id, token index) sampling keys (and with them sampled
+        streams) are routing-invariant, and :meth:`cancel` can address a
+        request without knowing which replica owns it."""
+        prompt = [int(t) for t in prompt]
+        eng = self._route(prompt)
         rid = self._req_counter
         self._req_counter += 1
-        r = eng.submit(prompt, max_new_tokens, req_id=rid)
+        r = eng.submit(
+            prompt, max_new_tokens, req_id=rid,
+            tenant=tenant, priority=priority,
+        )
         self._owner[r.req_id] = eng
         return r
 

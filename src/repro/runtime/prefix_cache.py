@@ -202,6 +202,18 @@ class RadixPrefixCache:
             node = nxt
         return out
 
+    def probe_len(self, tokens) -> int:
+        """Length in TOKENS of the longest cached page-prefix of
+        ``tokens`` - a pure READ for routing decisions
+        (:class:`~repro.runtime.engine.EngineReplicaGroup` prefix-affinity).
+
+        Unlike :meth:`match` it acquires no references, does not advance
+        the eviction clock, and touches no hit/miss counters: a router
+        probes EVERY replica's trie per submission, and only the chosen
+        replica's later admission-time :meth:`match` should count or pin
+        anything."""
+        return len(self._walk(tokens)) * self.page_size
+
     def match(self, tokens, max_tokens: Optional[int] = None) -> List[_Node]:
         """Longest cached page-prefix of ``tokens``; acquires a reference on
         every returned node (caller MUST :meth:`release` them later).

@@ -46,12 +46,27 @@ Three concrete policies:
     FCFS admission, but the per-step prefill budget is dealt round-robin
     in page-size quanta across ALL prefilling requests, so a burst of
     long prompts makes progress in parallel instead of serially.
+  * :class:`TenantQuotaPolicy` (``"tenant"``): multi-tenant fleet
+    scheduling - per-tenant page/token quotas, two SLO priority classes
+    (``"latency"`` admitted and prefilled first, ``"throughput"``
+    protected from starvation by the same aging guard as SJF), and
+    quota-aware preemption.  Because every decision is still a pure
+    ordering/filtering of views, the bit-identity contract above holds
+    per tenant too: quotas shape WHEN a tenant's tokens arrive, never
+    WHICH tokens (tests/test_fleet.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+#: SLO classes a request may declare at submit time.  ``"latency"``
+#: requests are admitted/prefilled ahead of ``"throughput"`` requests of
+#: the same tenant standing; ``"throughput"`` is the default and the
+#: preferred preemption victim class.
+PRIORITY_CLASSES = ("latency", "throughput")
+DEFAULT_TENANT = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +105,9 @@ class RequestView:
     #: generated-token entries counted in ``remaining_decode`` whose VALUES
     #: are still in flight on device (0 in synchronous mode).
     pending_tokens: int = 0
+    #: multi-tenant attribution (quota accounting + priority ordering).
+    tenant: str = DEFAULT_TENANT
+    priority: str = "throughput"
 
     @property
     def wait_anchor(self) -> int:
@@ -137,6 +155,24 @@ class SchedulerPolicy:
         order, so a preempted request re-queued at the back stays at the
         back despite its old submit timestamp."""
         return list(waiting)
+
+    def plan_admission(
+        self,
+        waiting: Sequence[RequestView],
+        running: Sequence[RequestView],
+        now: int = 0,
+    ) -> List[RequestView]:
+        """Admission candidates for this step, in try order.
+
+        Generalizes :meth:`admission_order` with visibility into the
+        RUNNING set, so a policy can gate candidates on global state
+        (e.g. per-tenant quota headroom) as well as order them.  A view
+        omitted from the returned list is simply not tried this step -
+        it is neither admitted nor counted as page-starved, so quota
+        blocking never triggers preemption.  The default delegates to
+        :meth:`admission_order` (running ignored)."""
+        del running
+        return self.admission_order(waiting, now=now)
 
     def prefill_order(
         self, prefilling: Sequence[RequestView]
@@ -305,7 +341,173 @@ class MixedPolicy(SchedulerPolicy):
                 if alloc[v.req_id] > 0]
 
 
-POLICIES = {"fcfs": FCFSPolicy, "sjf": SJFPolicy, "mixed": MixedPolicy}
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Resource ceilings for one tenant (None = unlimited).
+
+    ``max_pages`` caps the KV pages a tenant's RUNNING requests may hold
+    simultaneously (admission-time gate, counted at the worst-case
+    ``pages_needed`` the engine charges on admission).  ``max_step_tokens``
+    caps the prefill tokens granted to the tenant per engine step - the
+    noisy-neighbor throttle: a tenant flooding long prompts cannot eat the
+    whole per-step chunk budget.
+    """
+
+    max_pages: Optional[int] = None
+    max_step_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_pages is not None and self.max_pages < 1:
+            raise ValueError(f"max_pages must be >= 1, got {self.max_pages}")
+        if self.max_step_tokens is not None and self.max_step_tokens < 1:
+            raise ValueError(
+                f"max_step_tokens must be >= 1, got {self.max_step_tokens}"
+            )
+
+
+class TenantQuotaPolicy(SchedulerPolicy):
+    """Multi-tenant fleet scheduling: quotas + SLO priority classes.
+
+    Admission (:meth:`plan_admission`):
+
+      1. **Aging guard first** - any candidate that has waited longer than
+         ``patience`` steps goes to the head in strict FIFO order
+         (``wait_anchor``), regardless of class: a throughput request is
+         delayed by a latency burst, never starved.
+      2. Then ``"latency"``-class candidates, then ``"throughput"``, each
+         FIFO within the class.
+      3. A candidate whose admission would lift its tenant's RUNNING page
+         footprint above ``TenantQuota.max_pages`` is withheld (not
+         returned), simulating the pass sequentially so one step cannot
+         overshoot the quota by admitting several requests at once.
+         Withheld != page-starved: quota blocking never triggers
+         preemption (the pool may be idle - the tenant is simply at cap).
+
+    Prefill: latency class first, then fewest-remaining within class;
+    per-tenant ``max_step_tokens`` caps each tenant's grants per step
+    (page-aligned, same alignment rule as the base plan).
+
+    Preemption victim: never-preempted first (the shared anti-thrash
+    rule), then throughput-class over latency-class, then the largest
+    page footprint (frees the most), then youngest-admitted.
+
+    Scheduling stays latency-only: quotas and classes reorder WHEN work
+    runs, and the chunk-exact convention keeps every request's token
+    stream bit-identical under any such reordering (tests/test_fleet.py).
+    """
+
+    name = "tenant"
+    hol_blocking = False
+
+    def __init__(
+        self,
+        quotas: Optional[Mapping[str, TenantQuota]] = None,
+        patience: int = 64,
+    ):
+        if patience < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
+        self.patience = int(patience)
+        self.quotas: Dict[str, TenantQuota] = {}
+        for tenant, q in (quotas or {}).items():
+            if not isinstance(q, TenantQuota):
+                q = TenantQuota(**dict(q))
+            self.quotas[str(tenant)] = q
+
+    # ------------------------------------------------------------ helpers --
+
+    def _class_rank(self, v: RequestView) -> int:
+        return 0 if v.priority == "latency" else 1
+
+    def _pages_in_use(
+        self, running: Sequence[RequestView]
+    ) -> Dict[str, int]:
+        used: Dict[str, int] = {}
+        for v in running:
+            used[v.tenant] = used.get(v.tenant, 0) + v.pages_needed
+        return used
+
+    # -------------------------------------------------------------- hooks --
+
+    def admission_order(self, waiting, now: int = 0):
+        starved = [v for v in waiting if now - v.wait_anchor >= self.patience]
+        fresh = [v for v in waiting if now - v.wait_anchor < self.patience]
+        starved.sort(key=lambda v: (v.wait_anchor, v.req_id))
+        fresh.sort(
+            key=lambda v: (self._class_rank(v), v.wait_anchor, v.req_id)
+        )
+        return starved + fresh
+
+    def plan_admission(self, waiting, running, now: int = 0):
+        used = self._pages_in_use(running)
+        plan: List[RequestView] = []
+        for v in self.admission_order(waiting, now=now):
+            quota = self.quotas.get(v.tenant)
+            if quota is not None and quota.max_pages is not None:
+                if used.get(v.tenant, 0) + v.pages_needed > quota.max_pages:
+                    continue
+            # Charge the candidate as if admitted: the engine tries the
+            # returned views in order within ONE pass, so later same-tenant
+            # candidates must see this one's footprint.
+            used[v.tenant] = used.get(v.tenant, 0) + v.pages_needed
+            plan.append(v)
+        return plan
+
+    def prefill_order(self, prefilling):
+        return sorted(
+            prefilling,
+            key=lambda v: (
+                self._class_rank(v), v.remaining_prefill, v.req_id
+            ),
+        )
+
+    def plan_prefill(
+        self, prefilling, *, n_decode, budget, chunk, page_size, max_rows
+    ):
+        left = None if budget is None else max(budget - n_decode, 0)
+        spent: Dict[str, int] = {}
+        plan: List[PrefillGrant] = []
+        for v in self.prefill_order(prefilling):
+            if len(plan) >= max_rows or (left is not None and left <= 0):
+                break
+            allow = min(chunk, v.remaining_prefill)
+            if left is not None and allow > left:
+                allow = left
+            quota = self.quotas.get(v.tenant)
+            if quota is not None and quota.max_step_tokens is not None:
+                head = quota.max_step_tokens - spent.get(v.tenant, 0)
+                if allow > head:
+                    allow = head
+            allow = _aligned(allow, v.remaining_prefill, page_size)
+            if allow <= 0:
+                continue
+            plan.append((v.req_id, allow))
+            spent[v.tenant] = spent.get(v.tenant, 0) + allow
+            if left is not None:
+                left -= allow
+        return plan
+
+    def choose_victim(self, running, now: int = 0):
+        cands = [v for v in running if v.admit_step < now]
+        if not cands:
+            return None
+        fresh = [v for v in cands if v.preempt_count == 0]
+        return max(
+            fresh or cands,
+            key=lambda v: (
+                self._class_rank(v),   # throughput (1) over latency (0)
+                v.pages_needed,
+                v.admit_step,
+                v.req_id,
+            ),
+        )
+
+
+POLICIES = {
+    "fcfs": FCFSPolicy,
+    "sjf": SJFPolicy,
+    "mixed": MixedPolicy,
+    "tenant": TenantQuotaPolicy,
+}
 
 
 def get_scheduler(policy) -> SchedulerPolicy:

@@ -745,10 +745,34 @@ class Telemetry:
         if self.metrics is not None:
             self.metrics.counter(name).inc(n)
 
-    def on_submit(self, req_id: int, step: int) -> None:
+    # Per-tenant attribution.  Series are created LAZILY and only for
+    # explicitly-named tenants (tenant != "default"): single-tenant serves
+    # keep the exact metric catalog pinned by tests/test_telemetry.py,
+    # and a fleet pays only for the tenants it actually sees.  The
+    # aggregate serve.* counters always include every tenant's traffic -
+    # the per-tenant series are a breakdown, not a replacement.
+
+    def _inc_tenant(self, tenant: Optional[str], leaf: str,
+                    n: int = 1) -> None:
+        if (self.metrics is not None and tenant is not None
+                and tenant != "default"):
+            self.metrics.counter(
+                f"serve.tenant.{tenant}.{leaf}",
+                help=f"per-tenant breakdown of serve.* ({leaf})",
+            ).inc(n)
+
+    def on_submit(self, req_id: int, step: int, *,
+                  tenant: Optional[str] = None,
+                  priority: Optional[str] = None) -> None:
         self._submit_t[req_id] = self.clock()
-        self._instant("submit", step, req_id=req_id)
+        args = {"req_id": req_id}
+        if tenant is not None and tenant != "default":
+            args["tenant"] = tenant
+        if priority is not None:
+            args["priority"] = priority
+        self._instant("submit", step, **args)
         self._inc("serve.requests_submitted")
+        self._inc_tenant(tenant, "submitted")
 
     def on_admit(self, req_id: int, step: int, *, resumed: bool) -> None:
         self._instant(
@@ -758,30 +782,39 @@ class Telemetry:
             self._inc("serve.resumes")
 
     def on_first_token(self, req_id: int, submit_step: int,
-                       dispatch_step: int) -> None:
+                       dispatch_step: int, *,
+                       tenant: Optional[str] = None) -> None:
         """Fired at RETIREMENT (the value exists), stamped with the step
         that dispatched the token - so TTFT-in-steps is pipeline-mode
         -invariant while TTFT-in-seconds honestly includes the async
         emission lag."""
         self._instant("first_token", dispatch_step, req_id=req_id)
         if self.metrics is not None:
-            self.metrics.histogram("serve.ttft_steps").observe(
-                dispatch_step - submit_step + 1
-            )
+            ttft = dispatch_step - submit_step + 1
+            self.metrics.histogram("serve.ttft_steps").observe(ttft)
+            if tenant is not None and tenant != "default":
+                self.metrics.histogram(
+                    f"serve.tenant.{tenant}.ttft_steps", unit="steps",
+                    help="per-tenant TTFT breakdown (dispatch clock)",
+                ).observe(ttft)
             t0 = self._submit_t.get(req_id)
             if t0 is not None:
                 self.metrics.histogram("serve.ttft_seconds").observe(
                     self.clock() - t0
                 )
 
-    def on_finish(self, req_id: int, step: int) -> None:
+    def on_finish(self, req_id: int, step: int, *,
+                  tenant: Optional[str] = None) -> None:
         self._submit_t.pop(req_id, None)
         self._instant("finish", step, req_id=req_id)
         self._inc("serve.requests_finished")
+        self._inc_tenant(tenant, "finished")
 
-    def on_preempt(self, req_id: int, step: int) -> None:
+    def on_preempt(self, req_id: int, step: int, *,
+                   tenant: Optional[str] = None) -> None:
         self._instant("preempt", step, req_id=req_id)
         self._inc("serve.preemptions")
+        self._inc_tenant(tenant, "preempted")
 
     def on_cancel(self, req_id: int, step: int) -> None:
         self._submit_t.pop(req_id, None)
@@ -791,8 +824,14 @@ class Telemetry:
     def on_admission_blocked(self, step: int) -> None:
         self._inc("serve.admission_blocked_pages")
 
-    def on_tokens_emitted(self, n: int) -> None:
+    def on_tokens_emitted(
+        self, n: int,
+        by_tenant: Optional[Dict[str, int]] = None,
+    ) -> None:
         self._inc("serve.tokens_emitted", n)
+        if by_tenant:
+            for tenant, cnt in by_tenant.items():
+                self._inc_tenant(tenant, "tokens_emitted", cnt)
 
     def end_step(self, eng, t0: float, t_plan: float,
                  t_dispatch: float, n_live: int) -> None:

@@ -69,9 +69,19 @@ def _paged_setup(key, b, kvh, g, d, kv_lens, page, extra_pages=2):
     s2 = mp * page
     kv_len = jnp.asarray(kv_lens, jnp.int32)
     mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
+    # Draw K/V at float32 EXPLICITLY: the physical pool below is float32,
+    # and under the suite's jax_enable_x64 a default-dtype draw is float64
+    # - the contiguous kernel would then consume f64->f16 single-rounded
+    # inputs while the paged kernel consumes f64->f32->f16 double-rounded
+    # pool bytes, and the bit-equality pins compare different INPUTS
+    # (~1e-3 of elements flip by one f16 ulp), not different kernels.
     q = jax.random.normal(ks[0], (b, kvh, g, d), jnp.float32) + 1.0
-    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d)) + 2.0, 0.0)
-    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d)), 0.0)
+    kc = jnp.where(
+        mask, jax.random.normal(ks[1], (b, kvh, s2, d), jnp.float32) + 2.0, 0.0
+    )
+    vc = jnp.where(
+        mask, jax.random.normal(ks[2], (b, kvh, s2, d), jnp.float32), 0.0
+    )
 
     # scatter the logical blocks into a SHUFFLED physical pool
     n_pages = 1 + b * mp + extra_pages

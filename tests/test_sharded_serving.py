@@ -342,6 +342,79 @@ def test_replica_group_validation(shard_bundle):
     bad = make_mesh((2, 2), ("pod", "model"))
     with pytest.raises(ValueError):
         EngineReplicaGroup(bundle, params, bad)
+    mesh = make_mesh((2, 2), ("data", "model"))
+    with pytest.raises(ValueError):
+        EngineReplicaGroup(bundle, params, mesh, routing="sticky")
+
+
+# ------------------------------------------------- fleet routing (PR 8) --
+
+def _data_mesh(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} host devices")
+    return make_mesh((n, 1), ("data", "model"))
+
+
+def test_least_loaded_rebalances_after_cancel(shard_bundle, workload):
+    """Regression (PR 8): the strict round-robin deal kept rotating after
+    a cancel() drained one replica, queueing new work on the busy peer
+    while the emptied replica idled.  Under ``routing="least"`` the next
+    submissions fill the gap - and the rerouted streams still reproduce
+    the cold single-request serve bitwise (placement is latency-only)."""
+    bundle, params = shard_bundle
+    mesh = _data_mesh(2)
+    kw = dict(
+        max_batch=3, num_pages=24, page_size=8, max_seq_len=64,
+        prefill_chunk=16,
+    )
+    grp = EngineReplicaGroup(bundle, params, mesh, routing="least", **kw)
+    first = [grp.submit(p, 12) for p in workload[:4]]
+    # equal loads: the cursor tiebreak deals i::2 exactly (the pinned deal)
+    assert [grp.engines.index(grp._owner[r.req_id]) for r in first] \
+        == [0, 1, 0, 1]
+    grp.step()
+    assert grp.cancel(first[0].req_id) and grp.cancel(first[2].req_id)
+    # replica 0 drained (load 0) vs replica 1 still serving (load 2):
+    # both new arrivals belong on replica 0
+    late = [grp.submit(p, GEN) for p in workload[4:6]]
+    assert all(grp._owner[r.req_id] is grp.engines[0] for r in late)
+    grp.run_to_completion()
+    for r, w, g in ((first[1], 1, 12), (first[3], 3, 12),
+                    (late[0], 4, GEN), (late[1], 5, GEN)):
+        assert r.generated == chunked_cold_reference(
+            bundle, params, workload[w], g, page_size=8, prefill_chunk=16,
+        )
+
+
+def test_prefix_affinity_routes_to_warm_replica(shard_bundle):
+    """Prefix-affinity routing: after one request donates its prompt
+    pages, a follow-up burst sharing the system prefix lands ENTIRELY on
+    the warm replica (served from cache) instead of being dealt i::2 and
+    re-prefilling the prefix on the cold peer - bit-identically."""
+    bundle, params = shard_bundle
+    mesh = _data_mesh(2)
+    rng = np.random.default_rng(8)
+    vocab = bundle.cfg.vocab_size
+    system = list(rng.integers(0, vocab, 32))
+    prompts = [system + list(rng.integers(0, vocab, 9)) for _ in range(4)]
+    kw = dict(
+        max_batch=4, num_pages=24, page_size=8, max_seq_len=64,
+        prefill_chunk=16, prefix_cache=True,
+    )
+    grp = EngineReplicaGroup(bundle, params, mesh, routing="affinity", **kw)
+    r0 = grp.submit(prompts[0], GEN)
+    warm = grp._owner[r0.req_id]
+    grp.run_to_completion()              # donates the 4 prefix pages
+    burst = [grp.submit(p, GEN) for p in prompts[1:]]
+    assert all(grp._owner[r.req_id] is warm for r in burst)
+    cold = next(e for e in grp.engines if e is not warm)
+    assert cold.prefix_cache.cached_pages == 0
+    grp.run_to_completion()
+    assert warm.prefix_cache.hits >= 4 * len(burst)   # 32-token prefix
+    for r, p in zip([r0] + burst, prompts):
+        assert r.generated == chunked_cold_reference(
+            bundle, params, p, GEN, page_size=8, prefill_chunk=16,
+        )
 
 
 # ---------------------------------------------- kernel entry points --

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI gate (PR 8): the checks a green commit must pass, in one script.
+#
+#   1. Tier-1 test suite with a per-test wall-clock timeout
+#      (tools/ci_timeout.py) and a pinned KNOWN-FAILURE BUDGET OF ZERO:
+#      every test that collects must pass.  The 16 kernel-tolerance
+#      failures the seed carried were retired in this PR (wide
+#      -accumulation reductions + the fp64/fp32 fixture fix); nothing
+#      gets to regress back onto a tolerated-failure list.
+#   2. The serving-stack observability bound: full telemetry may cost
+#      at most 5% of async wall tokens/sec, checked against the
+#      RECORDED benchmarks/BENCH_serving.json trajectory with
+#      benchmarks/run.py's own checker (run `python -m benchmarks.run`
+#      to re-measure; this gate keeps the committed trajectory honest
+#      without re-running the multi-minute benchmark).
+#
+# Usage: tools/ci.sh [extra pytest args...]
+#   PER_TEST_TIMEOUT=seconds  override the per-test ceiling (default
+#                             2750s - above the multidevice launcher's
+#                             internal 2700s subprocess timeout).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PER_TEST_TIMEOUT="${PER_TEST_TIMEOUT:-2750}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[ci] tier-1 suite (per-test timeout ${PER_TEST_TIMEOUT}s, failure budget 0)"
+python -m pytest -q \
+    -p tools.ci_timeout --per-test-timeout "$PER_TEST_TIMEOUT" \
+    "$@"
+
+echo "[ci] telemetry overhead bound (<= 5%) on the recorded trajectory"
+python - <<'PY'
+import json
+
+from benchmarks.run import SERVING_JSON, _check_telemetry_overhead
+
+with open(SERVING_JSON) as f:
+    rows = json.load(f)["rows"]
+_check_telemetry_overhead(rows)
+PY
+
+echo "[ci] green: 0 failed, telemetry bound held"

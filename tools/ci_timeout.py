@@ -1,0 +1,50 @@
+"""Per-test wall-clock timeout plugin for the CI gate (tools/ci.sh).
+
+The container has no pytest-timeout; this is the minimal POSIX
+equivalent: a SIGALRM watchdog around each test's call phase, so one
+hung test fails loudly instead of wedging the whole tier-1 run until
+the outer job timeout kills it with zero diagnostics.
+
+SIGALRM only fires in the main thread - exactly where pytest runs test
+bodies - and the alarm is cleared in a finally, so a passing test never
+leaks a pending signal into the next one.  Subprocess-launching tests
+(tests/test_multidevice.py, the benchmark subprocess rows) keep their
+own tighter internal timeouts; the per-test ceiling here is sized above
+them so it only trips on genuine hangs.
+
+Usage (from the repo root):
+
+    python -m pytest -p tools.ci_timeout --per-test-timeout 2750 ...
+"""
+
+import signal
+
+import pytest
+
+DEFAULT_TIMEOUT = 2750  # seconds; > the multidevice launcher's 2700
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--per-test-timeout", type=int, default=DEFAULT_TIMEOUT,
+        help="fail any single test exceeding this many seconds "
+             f"(default {DEFAULT_TIMEOUT})",
+    )
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    limit = item.config.getoption("--per-test-timeout")
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the {limit}s per-test CI timeout"
+        )
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
