@@ -19,6 +19,43 @@ SERVING_JSON = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
 #: most this fraction of wallclock_async tokens/sec.
 TELEMETRY_OVERHEAD_BOUND = 0.05
 
+#: PR-9 acceptance bound: the speculative row of the repetitive burst
+#: must finish at or below this many engine steps per generated token
+#: (the off row sits at ~1.0 during decode).
+SPEC_STEPS_PER_TOKEN_BOUND = 0.6
+
+
+def _check_spec_decode(serving_rows) -> None:
+    """Fail the run when speculative decoding stops paying for itself on
+    the repetitive burst, or (worse) when the in-run bit-identity assert
+    did not certify the row - like the telemetry bound, deliberately NOT
+    behind the benchmark try/except."""
+    on = next(
+        (r for r in serving_rows
+         if r["name"] == "scheduler_burst/spec_decode_on"), None,
+    )
+    if on is None:
+        raise SystemExit(
+            "spec_decode_on row missing from the serving trajectory - "
+            "the speculative-decoding acceptance bound was not measured"
+        )
+    if not on.get("bit_identical"):
+        raise SystemExit(
+            "spec_decode_on row recorded without a passing bit-identity "
+            "assert - speculation may have changed output bits"
+        )
+    spt = on["steps_per_token"]
+    if spt > SPEC_STEPS_PER_TOKEN_BOUND:
+        raise SystemExit(
+            f"speculative decode steps-per-token {spt:.3f} exceeds the "
+            f"{SPEC_STEPS_PER_TOKEN_BOUND} bound on the repetitive burst "
+            f"(k={on['speculate']}, accept rate {on.get('accept_rate', 0):.2f})"
+        )
+    print(
+        f"[spec decode {spt:.3f} steps/token, bit-identical - within the "
+        f"{SPEC_STEPS_PER_TOKEN_BOUND} bound]", file=sys.stderr,
+    )
+
 
 def _check_telemetry_overhead(serving_rows) -> None:
     """Fail the whole run - deliberately NOT behind the benchmark
@@ -101,9 +138,10 @@ def main() -> None:
     except Exception as e:
         print(f"[scheduler-burst report skipped: {e}]", file=sys.stderr)
     if serving_rows is not None:
-        # acceptance bound, OUTSIDE the try/except: a violation exits
+        # acceptance bounds, OUTSIDE the try/except: a violation exits
         # non-zero instead of degrading into a skipped-report note
         _check_telemetry_overhead(serving_rows)
+        _check_spec_decode(serving_rows)
     try:
         rows += R.report()
     except Exception as e:  # dry-run artifacts absent on a fresh checkout

@@ -42,6 +42,18 @@ production cadence): streams asserted bit-identical, and the recorded
 ``overhead_vs_async`` is the price of observability - bounded at 5% by
 benchmarks/run.py, loudly.
 
+The speculative-decode rows (PR 9): ``scheduler_burst/spec_decode_off``
+vs ``spec_decode_on`` serve a repetitive burst (constant-token prompts,
+near-cyclic greedy continuations) plainly and with K=6 n-gram
+self-speculation; bit-identity of streams AND page bytes is asserted
+in-run before anything is recorded, and the deterministic
+steps-per-token of the on-row is the acceptance metric (<= 0.6,
+enforced by benchmarks/run.py).  On the CPU gather fallback the widened
+verify costs ~K+1 decode-steps of device work per engine step, so the
+wall tokens/s sidecar penalizes speculation here - on real accelerators
+the verify is one memory-bound pass and steps-per-token is the
+latency proxy that matters.
+
 The fleet rows (PR 8): ``scheduler_burst/tenant_isolation`` serves a
 latency-class tenant into a long-prompt flood three ways - alone, under
 tenant-blind FCFS, and under ``TenantQuotaPolicy`` with the flooder
@@ -304,6 +316,83 @@ def _metrics():
     if _CACHE is None:
         _CACHE = _measure_all()
     return _CACHE
+
+
+# ---------------------------------------------- speculative decode (PR 9) --
+
+# Repetitive burst: constant-token prompts fall into short greedy cycles
+# the n-gram prompt-lookup drafter predicts well - the regime speculation
+# exists for.  The token values were picked by scanning for prompts whose
+# greedy continuations cycle early; all four fit the batch at step 0, so
+# the off/on serves must agree on page BYTES too, not just streams.
+SPEC_PROMPT_TOKENS = (15, 16, 10, 25)
+SPEC_PROMPT_LEN = 24
+SPEC_GEN = 48
+SPEC_K = 6
+SPEC_CHUNK = 24
+
+
+def spec_decode_metrics():
+    """Serve the repetitive burst with speculation off and on (K=6 n-gram
+    drafts, verify-in-one-step), synchronous mode.  Bit-identity - token
+    streams AND non-null page bytes - is asserted BEFORE any number is
+    recorded; the recorded steps-per-token (engine steps / tokens per
+    stream, all four rows decoding in lockstep) is deterministic and
+    cross-PR diffable, wall tokens/s is the honest-throughput sidecar.
+    Acceptance (enforced by benchmarks/run.py): on-row steps_per_token
+    <= 0.6."""
+    cfg, bundle, params = _bundle()
+    prompts = [[t] * SPEC_PROMPT_LEN for t in SPEC_PROMPT_TOKENS]
+    total = SPEC_PROMPT_LEN + SPEC_GEN + SPEC_CHUNK
+    out = {}
+    streams = {}
+    pools = {}
+    for mode, k in (("off", 0), ("on", SPEC_K)):
+        eng = ServeEngine(
+            bundle, params, max_batch=BATCH, num_pages=48, page_size=PAGE,
+            max_seq_len=total, prefill_chunk=SPEC_CHUNK, speculate=k,
+        )
+        # warm every jitted call (prefill, decode, and the widened verify)
+        eng.submit(list(prompts[0][:4]), 4)
+        eng.run_to_completion()
+        s0 = eng.steps
+        reqs = [eng.submit(list(p), SPEC_GEN) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        steps = eng.steps - s0
+        streams[mode] = [r.generated for r in reqs]
+        pools[mode] = {n: np.asarray(v) for n, v in eng.pool.items()}
+        st = eng.stats()
+        out[mode] = {
+            "steps": steps,
+            "steps_per_token": steps / SPEC_GEN,
+            "tokens_per_s_wall": sum(
+                len(r.generated) for r in reqs
+            ) / dt,
+            "speculate": k,
+            "spec": st["spec"],
+        }
+    assert streams["on"] == streams["off"], \
+        "speculative burst diverged from the plain serve (bits broken)"
+    for name in pools["off"]:       # page 0 = shared masked-lane sink
+        assert np.array_equal(
+            pools["off"][name][:, 1:], pools["on"][name][:, 1:]
+        ), f"speculation changed page bytes in pool leaf {name!r}"
+    out["bit_identical"] = True
+    sp = out["on"]["spec"]
+    out["on"]["accept_rate"] = sp["accepted"] / max(sp["proposed"], 1)
+    return out
+
+
+_SPEC_CACHE = None
+
+
+def _spec_metrics():
+    global _SPEC_CACHE
+    if _SPEC_CACHE is None:
+        _SPEC_CACHE = spec_decode_metrics()
+    return _SPEC_CACHE
 
 
 # ------------------------------------------------ noisy-neighbor (PR 8) --
@@ -671,6 +760,22 @@ def report():
             f"pipeline_depth={m['pipeline_depth']} | streams bit-identical"
             f"{extra}",
         ))
+    sd = _spec_metrics()
+    for mode in ("off", "on"):
+        m = sd[mode]
+        extra = ""
+        if mode == "on":
+            extra = (f" | k={m['speculate']} ngram, accept rate "
+                     f"{m['accept_rate']:.2f}, "
+                     f"{m['spec']['rollbacks']} rollbacks | "
+                     f"{sd['off']['steps'] / m['steps']:.2f}x fewer steps")
+        rows.append((
+            f"scheduler_burst_spec_decode_{mode}", 0.0,
+            f"{m['steps']} steps for {SPEC_GEN} tok/stream "
+            f"({m['steps_per_token']:.3f} steps/token) | "
+            f"{m['tokens_per_s_wall']:.0f} tok/s wall | "
+            f"streams+pages bit-identical{extra}",
+        ))
     ti = _tenant_metrics()
     rows.append((
         "scheduler_burst_tenant_isolation", 0.0,
@@ -755,6 +860,27 @@ def serving_rows():
                 "tracing": True, "metrics": True,
                 "numerics_every": m["numerics_every"],
             }
+        out.append(row)
+    sd = _spec_metrics()
+    for mode in ("off", "on"):
+        m = sd[mode]
+        row = {
+            "name": f"scheduler_burst/spec_decode_{mode}",
+            "speculate": m["speculate"],
+            "draft": "ngram" if mode == "on" else None,
+            "steps": m["steps"],
+            "steps_per_token": m["steps_per_token"],
+            "tokens_per_s_wall": m["tokens_per_s_wall"],
+            "spec": m["spec"],
+            "bit_identical": sd["bit_identical"],
+            "workload": {
+                "prompt_tokens": list(SPEC_PROMPT_TOKENS),
+                "prompt_len": SPEC_PROMPT_LEN, "gen": SPEC_GEN,
+                "page": PAGE, "chunk": SPEC_CHUNK, "batch": BATCH,
+            },
+        }
+        if mode == "on":
+            row["accept_rate"] = m["accept_rate"]
         out.append(row)
     ti = _tenant_metrics()
     out.append({

@@ -1,0 +1,85 @@
+"""Self-speculative decoding demo: fewer engine steps, zero bit drift.
+
+A repetitive workload (the kind speculation loves: constant-token
+prompts whose greedy continuations fall into short cycles) is served
+twice through the paged engine - once plainly (``speculate=0``) and once
+with ``speculate=6``: a host-side n-gram prompt-lookup drafter proposes
+up to 6 tokens per decoding row each step and ONE widened device call
+verifies the whole draft, accepting the longest prefix that matches
+greedy argmax and restoring the pre-verify bytes of every rejected page
+slot (runtime/README.md "Speculative decoding").
+
+The demo asserts the two serves are BIT-IDENTICAL - same token streams,
+same KV page-pool bytes - and prints the steps-per-token win.  On this
+workload the speculative serve finishes in about half the engine steps
+(steps/token ~0.48 vs 1.0 in the decode phase).
+
+Run:  PYTHONPATH=src python examples/serve_spec.py
+(CPU-friendly: reduced config, XLA gather fallback for the paged paths.)
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build
+from repro.runtime import ServeEngine
+
+PAGE = 8
+CHUNK = 24
+GEN = 48
+K = 6
+# constant-token prompts -> near-cyclic greedy streams the n-gram
+# drafter predicts well; all four fit the batch so the two serves also
+# share page-pool bytes exactly (not just streams)
+PROMPT_TOKENS = (15, 16, 10, 25)
+
+
+def serve(bundle, params, prompts, speculate):
+    eng = ServeEngine(
+        bundle, params, max_batch=4, num_pages=48, page_size=PAGE,
+        max_seq_len=96, prefill_chunk=CHUNK, speculate=speculate,
+    )
+    reqs = [eng.submit(list(p), GEN) for p in prompts]
+    eng.run_to_completion()
+    pool = {k: np.asarray(v) for k, v in eng.pool.items()}
+    return [r.generated for r in reqs], pool, eng.stats()
+
+
+def main():
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    prompts = [[t] * 24 for t in PROMPT_TOKENS]
+
+    print(f"workload: {len(prompts)} repetitive prompts x 24 tokens, "
+          f"gen {GEN} each; draft=ngram, k={K}\n")
+    out_off, pool_off, st_off = serve(bundle, params, prompts, 0)
+    out_on, pool_on, st_on = serve(bundle, params, prompts, K)
+
+    assert out_on == out_off, "speculation changed the token streams!"
+    for name in pool_off:
+        # page 0 is the reserved null page (masked-lane scratch); every
+        # real page must match byte for byte
+        assert np.array_equal(pool_off[name][:, 1:], pool_on[name][:, 1:]), (
+            f"speculation changed page bytes in pool leaf {name!r}!"
+        )
+
+    # per-stream view: all four rows decode in lockstep, so engine
+    # steps / tokens-per-stream ~ 1.0 without speculation and drops
+    # below 1 exactly when verify steps materialize >1 token per row
+    sp = st_on["spec"]
+    print(f"off: {st_off['steps']} engine steps for {GEN} tokens/stream "
+          f"({st_off['steps'] / GEN:.3f} steps/token)")
+    print(f"on : {st_on['steps']} engine steps for {GEN} tokens/stream "
+          f"({st_on['steps'] / GEN:.3f} steps/token)")
+    print(f"     {sp['proposed']} drafts proposed, {sp['accepted']} "
+          f"accepted ({sp['accepted'] / max(sp['proposed'], 1):.2f} accept "
+          f"rate), {sp['verify_steps']} verify steps, "
+          f"{sp['rollbacks']} rollbacks")
+    print("\ntoken streams AND page-pool bytes BIT-IDENTICAL with "
+          "speculation on [OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ from repro.kernels.ops import (
     pasa_paged_decode_sharded,
     pasa_paged_prefill,
     pasa_paged_prefill_sharded,
+    pasa_paged_verify,
     shift_kv,
 )
 
@@ -19,5 +20,6 @@ __all__ = [
     "pasa_paged_decode_sharded",
     "pasa_paged_prefill",
     "pasa_paged_prefill_sharded",
+    "pasa_paged_verify",
     "shift_kv",
 ]

@@ -288,6 +288,60 @@ def pasa_paged_prefill(
     )
 
 
+def pasa_paged_verify(
+    q: jnp.ndarray,          # (B, KVH, G, W, D) grouped queries, W positions
+    k_pages: jnp.ndarray,    # (num_pages, page, KVH, D) raw physical pages,
+    v_pages: jnp.ndarray,    #   or fp8/int8 codes when sidecars are given
+    page_table: jnp.ndarray, # (B, max_pages) int32
+    start: jnp.ndarray,      # (B,) absolute position of query column 0
+    *,
+    beta: float = beta_lib.DEFAULT_BETA,
+    policy: PrecisionPolicy = FP16,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KVH) f32
+    k_shift: Optional[jnp.ndarray] = None,   # (P, KVH, D) f32
+    v_scale: Optional[jnp.ndarray] = None,
+    v_shift: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Speculative-verify attention: W consecutive decode positions per
+    row over a paged KV cache -> (B, KVH, G, W, D).
+
+    Query column j attends exactly as a plain decode at position
+    ``start + j`` would - the SAME :func:`pasa_paged_decode` computation
+    with ``kv_len = start + 1 + j`` (the j-th draft's K/V must already be
+    scattered into its page, as the engine's chained-sub-step verify
+    does).  Each column's output is therefore BIT-IDENTICAL to the
+    one-token decode path at that position, which is what makes greedy
+    draft acceptance bit-exact: the verifier IS the decoder, run W
+    times.  Implemented as W decode calls (kernel or XLA fallback per
+    ``use_kernel``) - the verify is latency-bound by the engine's
+    chained KV appends, not by this attention, so a fused multi-query
+    kernel is deliberately left to the TPU-hardware pass
+    (ROADMAP "TPU-hardware kernel validation").
+
+    Note the deliberate CONVENTION choice: this uses the decode shift
+    (``shift_mask_valid``), NOT the chunk-exact prefill shift - the two
+    round differently on interior rows, and bit-exactness against the
+    non-speculative stream requires the decode convention (see
+    runtime/README.md "Speculative decoding")."""
+    if q.ndim != 5:
+        raise ValueError("q must be (B, KVH, G, W, D)")
+    w = q.shape[3]
+    cols = [
+        pasa_paged_decode(
+            q[:, :, :, j], k_pages, v_pages, page_table,
+            start + 1 + j,
+            beta=beta, policy=policy,
+            k_scale=k_scale, k_shift=k_shift,
+            v_scale=v_scale, v_shift=v_shift,
+            interpret=interpret, use_kernel=use_kernel,
+        )
+        for j in range(w)
+    ]
+    return jnp.stack(cols, axis=3)
+
+
 # ---------------------------------------------------------------------------
 # Model-axis sharded entry points (tensor-parallel paged serving)
 # ---------------------------------------------------------------------------

@@ -37,6 +37,16 @@ replica whose radix trie holds the longest cached prefix, falling back
 to least-loaded; see runtime/README.md "Multi-tenant fleet").  Both are
 latency-only knobs - streams stay bit-identical (tests/test_fleet.py).
 
+Speculative decoding (PR 9): ``--speculate K --draft ngram`` turns on
+self-speculative decoding on the paged route - a host-side
+prompt-lookup drafter proposes up to K tokens per decoding row and a
+single widened device step verifies them all; the engine accepts the
+longest draft prefix that matches greedy argmax and restores the
+pre-verify bytes of every rejected page slot, so token streams AND page
+pool bytes are bit-identical to ``--speculate 0`` while repetitive
+workloads finish in fewer engine steps (runtime/README.md
+"Speculative decoding").
+
 Sampling: ``--temperature`` / ``--top-k`` select per-request PRNG-keyed
 sampling on the paged route (temperature 0 = greedy argmax, the
 bit-exact default); keys derive from (request id, token index), so
@@ -200,6 +210,18 @@ def main(argv=None):
     ap.add_argument("--preempt-patience", type=int, default=4,
                     help="consecutive page-starved steps before a "
                          "preemption may trigger")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="paged route: self-speculative decoding - propose "
+                         "up to K draft tokens per decoding row from a "
+                         "host-side prompt-lookup drafter and verify them "
+                         "in ONE widened device step; greedy accept keeps "
+                         "the longest prefix matching argmax, so streams "
+                         "AND page bytes are bit-identical to K=0 "
+                         "(runtime/README.md 'Speculative decoding'). "
+                         "Requires chunked prefill (0 = off)")
+    ap.add_argument("--draft", default="ngram", choices=("ngram",),
+                    help="--speculate draft proposer: ngram = longest-"
+                         "suffix prompt/output lookup (no second model)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="paged route: sampling temperature (0 = greedy "
                          "argmax, bit-exact default)")
@@ -424,6 +446,8 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
         top_k=args.top_k,
         sample_seed=args.sample_seed,
         pipeline_depth=1 if args.pipelined else 0,
+        speculate=args.speculate,
+        draft=args.draft,
     )
 
     # observability: one Telemetry per serve, layers switched by flags.
@@ -510,6 +534,14 @@ def _serve_paged(args, bundle, params, prompts, mesh=None):
           f"TTFT {np.mean(ttft_steps):.1f} engine steps, "
           f"{st['preemptions']} preemptions, "
           f"{st['cancellations']} cancellations")
+    if args.speculate:
+        sp = st["spec"]
+        print(f"[speculate k={args.speculate}/{args.draft}] "
+              f"{sp['proposed']} drafts proposed, {sp['accepted']} accepted "
+              f"({sp['accepted']/max(sp['proposed'],1):.2f} accept rate), "
+              f"{sp['verify_steps']} verify steps, "
+              f"{sp['rollbacks']} rollbacks; "
+              f"{st['steps']/max(n_tokens,1):.2f} engine steps/token")
     if args.prefix_cache and st["prefix_cache"] is not None:
         pc = st["prefix_cache"]
         print(f"[prefix-cache] {pc['cached_pages']} pages cached, "

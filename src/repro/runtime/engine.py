@@ -113,11 +113,14 @@ import numpy as np
 from repro.runtime.paged_cache import (
     NULL_PAGE,
     PageAllocator,
+    capture_pages,
     paged_bytes,
     paged_bytes_per_device,
     pool_dtype_name,
     pool_shardings,
     resolve_pool_dtype,
+    restore_pages,
+    touched_pages,
 )
 from repro.runtime.prefix_cache import RadixPrefixCache
 from repro.runtime.scheduler import (
@@ -126,6 +129,7 @@ from repro.runtime.scheduler import (
     RequestView,
     get_scheduler,
 )
+from repro.runtime.spec_decode import get_drafter
 from repro.runtime.telemetry import Telemetry, _drain_point
 
 WAITING = "waiting"
@@ -138,8 +142,9 @@ CANCELLED = "cancelled"
 #: "Observability").  Both expose the SAME shared keys; the group view is
 #: a true aggregation of its replicas plus ``replicas`` / ``engines``.
 #: Bump on any key add/remove/retype; tests/test_telemetry.py pins the
-#: key set against this version.
-STATS_SCHEMA = 1
+#: key set against this version.  v2: added ``speculate`` (config) and
+#: the ``spec`` tally sub-dict (speculative-decoding counters).
+STATS_SCHEMA = 2
 
 #: How the replica group aggregates each shared stats() key: additive
 #: tallies and capacity totals SUM; clocks and per-device peaks take the
@@ -153,6 +158,7 @@ _STATS_MAX = ("steps", "cache_bytes_per_device", "max_step_tokens")
 _STATS_CONFIG = (
     "page_size", "pool_dtype", "chunked_prefill", "scheduler",
     "prefill_batch", "step_token_budget", "temperature", "pipeline_depth",
+    "speculate",
 )
 
 
@@ -262,6 +268,12 @@ class Request:
     # The COUNT len(generated) is always exact - it advances at dispatch -
     # so finish/budget/policy decisions never wait on a readback.
     pending: int = 0
+    # speculative decoding: True between dispatching a K-draft verify for
+    # this request and retiring it.  The accepted COUNT is the one
+    # speculation value the host cannot know at dispatch, so a verifying
+    # request sits out subsequent plans (its cursor and ``generated`` are
+    # frozen) until :meth:`ServeEngine._retire_one` materializes it.
+    verifying: bool = False
 
     @property
     def total_len(self) -> int:
@@ -289,6 +301,15 @@ class _InflightStep:
     )
     decode_tok: Optional[jax.Array] = None
     decode_emits: List[Tuple[Request, int, int]] = dataclasses.field(
+        default_factory=list
+    )
+    # speculative verify bookkeeping: when set, ``decode_tok`` is the
+    # (B, K+1) per-position verifier output and ``verify_m`` the device
+    # (B,) accepted-count vector - the ONE new host-visible speculation
+    # value, read at retirement exactly like tokens.  ``spec_rows``
+    # records (request, slot, drafts proposed) fixed at dispatch.
+    verify_m: Optional[jax.Array] = None
+    spec_rows: List[Tuple[Request, int, int]] = dataclasses.field(
         default_factory=list
     )
 
@@ -388,6 +409,28 @@ class ServeEngine:
         temperature-scaled, optionally top-k-truncated distribution with a
         per-(request, token index) PRNG key derived from ``sample_seed`` -
         deterministic, and independent of scheduling.
+      speculate: draft tokens per decode row per step (K).  0 (default)
+        = plain one-token-per-row decode.  K >= 1 enables
+        SELF-SPECULATIVE decoding: a host-side proposer (``draft``)
+        guesses up to K continuation tokens per decode row from the
+        request's own prompt+generated history, and the decode dispatch
+        widens into ONE jitted verify call that runs feed + drafts
+        through K+1 chained decode sub-steps, computes the accepted
+        count m = 1 + longest draft prefix matching the model's own
+        choice ON DEVICE, and restores the KV bytes of every rejected
+        position (the accepted count is the one new host-visible value,
+        read at retirement like tokens - pipeline modes unchanged).
+        Accepted tokens therefore ALWAYS equal the non-speculative
+        trajectory: greedy streams and non-null page bytes are
+        bit-identical speculation-on vs -off, and sampled streams keep
+        the per-(request, token index) keying (tests/test_spec_decode
+        .py).  Requires ``chunked_prefill``; draft tokens charge the
+        ``step_token_budget`` via the policy's ``plan_speculation``
+        hook.  See runtime/README.md "Speculative decoding".
+      draft: the draft proposer when ``speculate > 0`` - a name from
+        ``runtime.spec_decode.DRAFTERS`` ("ngram"), a DraftProposer
+        subclass, or an instance.  Proposal quality affects ONLY
+        latency (steps per token), never output bits.
       mesh: optional ``jax.sharding.Mesh`` with a ``model`` axis.  The
         page pool's leaves are laid out kv-head-split over that axis
         (runtime/paged_cache.pool_shardings) and BOTH jitted device calls
@@ -446,6 +489,8 @@ class ServeEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         sample_seed: int = 0,
+        speculate: int = 0,
+        draft="ngram",
         mesh=None,
         pipeline_depth: int = 0,
         on_token: Optional[Callable[[Request, int, int], None]] = None,
@@ -546,6 +591,22 @@ class ServeEngine:
         # top_k beyond the vocabulary is "no truncation", not a trace error
         self.top_k = min(int(top_k), bundle.cfg.vocab_size)
         self._base_key = jax.random.PRNGKey(sample_seed)
+
+        if speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {speculate}")
+        if speculate > 0 and not self.chunked_prefill:
+            raise ValueError(
+                "speculate requires chunked_prefill: the verify call "
+                "rides the decode-phase cursor convention, which the "
+                "token-by-token mode does not maintain"
+            )
+        self.speculate = int(speculate)
+        self._drafter = get_drafter(draft) if self.speculate > 0 else None
+        # speculation tallies (stats()["spec"]; zeros when speculate=0)
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rollbacks = 0
+        self.spec_verify_steps = 0
 
         self.cache_dtype = resolve_pool_dtype(cache_dtype)
         self.mesh = mesh
@@ -696,6 +757,86 @@ class ServeEngine:
                 )
             self._prefill_fn = jax.jit(
                 _device_prefill, donate_argnums=(5,), **prefill_jit
+            )
+
+        # Speculative verify: ONE widened decode call running K+1 chained
+        # decode sub-steps (feed token + K drafts) under lax.scan - each
+        # sub-step is the UNMODIFIED ``paged_serve_step``, so every
+        # position's logits (and its KV append, quantized requant
+        # included) are bitwise the plain decode path's.  Before each
+        # sub-step the ONE page its write touches is snapshotted
+        # (``capture_pages``); after the accepted count m is computed on
+        # device, a reverse scan restores the pre-images of sub-steps
+        # >= m (``restore_pages``) - so rejected drafts leave ZERO trace
+        # in the pool and rollback never allocates or frees a page.
+        # Per-sub-step masking mirrors the batched decode's: inactive
+        # (row, position)s get a nulled table row, writing to null page
+        # 0 exactly like non-decoding slots do in the plain call.
+        if self.speculate > 0:
+            n_spec = self.speculate + 1
+            psz = self.page_size
+
+            def _device_verify(params, tokens, pos0, active, pool, table,
+                               *extra):
+                def body(pool, i):
+                    act = active[:, i]
+                    tbl = jnp.where(act[:, None], table, NULL_PAGE)
+                    pos = jnp.where(act, pos0 + i, 0)
+                    phys = touched_pages(tbl, pos, psz)
+                    pre = capture_pages(pool, phys)
+                    logits, pool = step(
+                        params, tokens[:, i], pos, pool, tbl
+                    )
+                    if sampled:
+                        rids, idx0 = extra
+                        g = sampler(logits, rids, idx0 + i)
+                    else:
+                        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return pool, (g, phys, pre)
+
+                pool, (gs, physs, pres) = jax.lax.scan(
+                    body, pool, jnp.arange(n_spec)
+                )
+                g = jnp.swapaxes(gs, 0, 1)                      # (B, K+1)
+                # accepted count: 1 (the regular feed token always
+                # stands) + the longest draft prefix matching the
+                # model's own per-position choice; 0 for rows that were
+                # not decoding at all this step.
+                match = active[:, 1:] & (tokens[:, 1:] == g[:, :-1])
+                m = 1 + jnp.cumprod(
+                    match.astype(jnp.int32), axis=1
+                ).sum(axis=1)
+                m = jnp.where(active[:, 0], m, 0).astype(jnp.int32)
+
+                def rbody(pool, x):
+                    i, phys, pre = x
+                    return restore_pages(pool, phys, pre, i >= m), None
+
+                pool, _ = jax.lax.scan(
+                    rbody, pool, (jnp.arange(n_spec), physs, pres),
+                    reverse=True,
+                )
+                # next on-device feed: the last ACCEPTED position's output
+                nxt = jnp.take_along_axis(
+                    g, jnp.clip(m - 1, 0, n_spec - 1)[:, None], axis=1
+                )[:, 0]
+                return (nxt, g, m), pool
+
+            verify_jit = {}
+            if mesh is not None:
+                verify_jit = dict(
+                    in_shardings=(
+                        (prepl, repl, repl, repl, pshard, repl) + extra
+                    ),
+                    out_shardings=((repl, repl, repl), pshard),
+                )
+                _device_verify = _shard_map(
+                    wrap(_device_verify, 4), mesh=mesh,
+                    in_specs=(pr_spec, rp, rp, rp, pspec, rp) + extra_sp,
+                    out_specs=((rp, rp, rp), pspec), check_vma=False,
+                )
+            self._verify_fn = jax.jit(
+                _device_verify, donate_argnums=(4,), **verify_jit
             )
 
     # ------------------------------------------------------- device calls --
@@ -1002,7 +1143,11 @@ class ServeEngine:
         # the victim is paged out.  (The preempt TRIGGER itself is
         # count-based and fired without a readback.)
         self.drain()
-        self._preempt(victim)
+        # the drain itself can FINISH the victim (a retiring speculative
+        # verify's accepted count reached max_new_tokens) - its pages are
+        # then already free and paging it out would double-release
+        if victim.state == RUNNING:
+            self._preempt(victim)
         blocked.blocked_steps = 0
         self._admit_pass()
 
@@ -1055,13 +1200,19 @@ class ServeEngine:
         if self.telemetry is not None:
             self.telemetry.on_preempt(r.req_id, self.steps, tenant=r.tenant)
 
-    def _finish(self, r: Request) -> None:
+    def _finish(self, r: Request, *, step: Optional[int] = None) -> None:
+        """Finish a request.  ``step`` overrides the stamp for finishes
+        decided at RETIREMENT (a speculative verify's accepted count):
+        the step that DISPATCHED the verify, so the stamp matches what
+        the synchronous engine records for the same serve."""
         self._release_slot(r)
         r.state = FINISHED
-        r.finish_step = self.steps
+        r.finish_step = self.steps if step is None else step
         self.finished[r.req_id] = r
         if self.telemetry is not None:
-            self.telemetry.on_finish(r.req_id, self.steps, tenant=r.tenant)
+            self.telemetry.on_finish(
+                r.req_id, r.finish_step, tenant=r.tenant
+            )
 
     def _account_step_tokens(self, n: int) -> None:
         self.last_step_tokens = int(n)
@@ -1112,6 +1263,40 @@ class ServeEngine:
                         )
                 if self.on_token is not None:
                     self.on_token(r, gen_idx, tok)
+        # Speculative verifies: materialize each row's accepted count m
+        # and its m verifier tokens.  Cursor advance, generated growth,
+        # and the finish decision were all DEFERRED from dispatch (m was
+        # device-resident); they happen here, and rollback is already
+        # done - the device restored every rejected position's page
+        # bytes before this step's pool left the verify call.
+        if st.spec_rows:
+            spec_vals = np.asarray(st.decode_tok)
+            spec_ms = np.asarray(st.verify_m)
+        for r, slot, k in st.spec_rows:
+            m = int(spec_ms[slot])
+            gen_idx0 = len(r.generated)
+            for j in range(m):
+                tok = int(spec_vals[slot, j])
+                r.generated.append(tok)
+                emitted += 1
+                by_tenant[r.tenant] = by_tenant.get(r.tenant, 0) + 1
+                if self.on_token is not None:
+                    self.on_token(r, gen_idx0 + j, tok)
+            r.cursor += m
+            r.verifying = False
+            self.spec_accepted += m - 1
+            rb_pages = 0
+            if m <= k:
+                # at least one draft rejected: its pages were restored
+                self.spec_rollbacks += 1
+                c0 = r.cursor - m
+                rb_pages = len({
+                    (c0 + j) // self.page_size for j in range(m, k + 1)
+                })
+            if self.telemetry is not None:
+                self.telemetry.on_spec_retire(k, m - 1, rb_pages)
+            if len(r.generated) >= r.max_new_tokens:
+                self._finish(r, step=st.step_no)
         if emitted and self.telemetry is not None:
             self.telemetry.on_tokens_emitted(emitted, by_tenant=by_tenant)
 
@@ -1159,6 +1344,11 @@ class ServeEngine:
         if r is None:
             return False
         self.drain()
+        if r.state != RUNNING:
+            # the drain retired a speculative verify whose accepted count
+            # FINISHED the request - the cancel lost the race; its slot
+            # and pages were already released through _finish.
+            return False
         self._release_slot(r)
         r.state = CANCELLED
         r.finish_step = self.steps
@@ -1296,6 +1486,57 @@ class ServeEngine:
             self._next_dev = self._next_dev.at[slots].set(first[srcs])
         return sum(real for _, real in rows), completed
 
+    def _plan_speculation(self, dec, prefill_spent: int):
+        """Host-side draft proposal + policy grant for this step's decode
+        rows: returns ``[(request, k, draft tokens)]`` for the rows that
+        run a K-draft verify this step (absent rows keep plain decode).
+
+        Draft CONTENT is latency-only by construction - accepted tokens
+        matched the model's own choice and rejected writes are restored
+        on device - so none of the host heuristics here (history
+        materialization, the async ``skip`` guess, budget clipping) can
+        change output bits.  Eligibility: at least 2 tokens remaining
+        (a K-speculation emits up to K+1, and the final token needs no
+        page backing, so K <= remaining-1 keeps conservative admission's
+        page bound intact - speculation NEVER allocates), and not inside
+        teacher-forced replay (replayed values are already known)."""
+        cands, drafts = [], {}
+        for r in dec:
+            remaining = r.max_new_tokens - len(r.generated)
+            if remaining < 2 or len(r.generated) < len(r.replay):
+                continue
+            # propose from the MATERIALIZED history; placeholders whose
+            # values are still on device (async) are skipped over by the
+            # proposer (a guess-on-a-guess; still bit-safe, see above)
+            hist = r.prompt + r.generated[:len(r.generated) - r.pending]
+            d = self._drafter.propose(
+                hist, min(self.speculate, remaining - 1), skip=r.pending
+            )
+            if d:
+                cands.append(r)
+                drafts[r.req_id] = [int(t) for t in d]
+        if not cands:
+            return []
+        left = None
+        if self.step_token_budget is not None:
+            left = max(
+                self.step_token_budget - len(dec) - prefill_spent, 0
+            )
+        grants = self._policy.plan_speculation(
+            [self._view(r) for r in cands],
+            k=self.speculate, budget_left=left,
+        )
+        by_id = {r.req_id: r for r in cands}
+        out = []
+        for rid, g in grants:
+            r = by_id.get(rid)
+            if r is None or g < 1:
+                continue
+            d = drafts[r.req_id][:g]
+            if d:
+                out.append((r, len(d), d))
+        return out
+
     def _compose_feed(self):
         """This step's decode token inputs: host-known values (teacher
         forcing, replay, prompt starts) overriding the on-device sampled
@@ -1354,7 +1595,13 @@ class ServeEngine:
                 r for r in self._slots
                 if r is not None and r.prefill_pos < len(r.prompt)
             ]
-            n_decode = n_live - len(prefilling)
+            # rows with a speculative verify still in flight sit this
+            # plan out (their cursor/counts are frozen until retirement)
+            # and spend no budget - they are neither prefill nor decode
+            n_verifying = sum(
+                1 for r in self._slots if r is not None and r.verifying
+            )
+            n_decode = n_live - len(prefilling) - n_verifying
             prefill_spent, completed = 0, []
             if prefilling:
                 plan = self._policy.plan_prefill(
@@ -1370,6 +1617,7 @@ class ServeEngine:
             dec = [
                 r for r in self._slots
                 if r is not None and r.prefill_pos >= len(r.prompt)
+                and not r.verifying
             ]
             if self.step_token_budget is not None:
                 # Budget accounting for prefill-COMPLETING rows: the policy
@@ -1391,12 +1639,27 @@ class ServeEngine:
                     defer = set(deferrable[max(len(deferrable) - over, 0):])
                     if defer:
                         dec = [r for r in dec if r.req_id not in defer]
-            self._account_step_tokens(len(dec) + prefill_spent)
+            # speculation grants: drafted AFTER prefill/decode spend is
+            # known, so draft tokens only ever consume LEFTOVER budget
+            spec_plan = (
+                self._plan_speculation(dec, prefill_spent)
+                if self.speculate > 0 and dec else []
+            )
+            n_draft = sum(k for _, k, _ in spec_plan)
+            self._account_step_tokens(len(dec) + prefill_spent + n_draft)
             if not dec:
                 # prefill-only step: completions (if any, all budget
                 # -deferred) still owe their first-token emissions.
                 if st.prefill_emits:
                     self._inflight.append(st)
+                elif prefill_spent == 0:
+                    # Only verifying rows are live and NOTHING was
+                    # dispatched this step: with pipeline_depth >= 1 the
+                    # count-based backlog alone would never retire the
+                    # in-flight verifies, so force retirement here to
+                    # make those rows dispatchable again (the verify
+                    # analogue of the idle-tick drain above).
+                    self.drain()
                 t_disp = tel.clock() if tel is not None else 0.0
                 self._retire_backlog()
                 if tel is not None:
@@ -1413,6 +1676,7 @@ class ServeEngine:
                     table[i, :] = NULL_PAGE
         else:
             dec = live
+            spec_plan = []   # speculation requires chunked_prefill
             # fresh copy per dispatch: the live table mutates under
             # later admissions while this step may still be in flight
             table = np.array(self.page_table)
@@ -1423,17 +1687,52 @@ class ServeEngine:
             pos[r.slot] = r.cursor
 
         feed = self._compose_feed()
-        args = [self.params, feed, jnp.asarray(pos), self.pool,
-                jnp.asarray(table)]
-        if self.temperature > 0.0:
-            pairs = [None] * self.max_batch
+        if spec_plan:
+            # widened dispatch: ONE verify call carries every decode row
+            # - speculating rows with their K drafts, the rest as k=0
+            # rows active only at position 0 (their sub-step 0 IS the
+            # plain decode, bit-for-bit; positions 1.. write null page 0
+            # and are restored like any rejected draft).
+            drafts = np.zeros((self.max_batch, self.speculate), np.int32)
+            active = np.zeros((self.max_batch, self.speculate + 1), bool)
             for r in dec:
-                pairs[r.slot] = (r.req_id, len(r.generated))
-            args.extend(self._sample_rows(pairs, self.max_batch))
-        nxt, self.pool = self._device_call(self._step_fn, *args)
-        st.decode_tok = nxt
+                active[r.slot, 0] = True
+            for r, k, d in spec_plan:
+                drafts[r.slot, :k] = d
+                active[r.slot, 1:1 + k] = True
+            tok = jnp.concatenate(
+                [feed[:, None], jnp.asarray(drafts)], axis=1
+            )
+            args = [self.params, tok, jnp.asarray(pos),
+                    jnp.asarray(active), self.pool, jnp.asarray(table)]
+            if self.temperature > 0.0:
+                pairs = [None] * self.max_batch
+                for r in dec:
+                    pairs[r.slot] = (r.req_id, len(r.generated))
+                args.extend(self._sample_rows(pairs, self.max_batch))
+            (nxt, gtok, m_dev), self.pool = self._device_call(
+                self._verify_fn, *args
+            )
+            st.decode_tok = gtok
+            st.verify_m = m_dev
+            self.spec_proposed += n_draft
+            self.spec_verify_steps += len(spec_plan)
+            if tel is not None:
+                tel.on_spec_dispatch(len(spec_plan), n_draft)
+        else:
+            args = [self.params, feed, jnp.asarray(pos), self.pool,
+                    jnp.asarray(table)]
+            if self.temperature > 0.0:
+                pairs = [None] * self.max_batch
+                for r in dec:
+                    pairs[r.slot] = (r.req_id, len(r.generated))
+                args.extend(self._sample_rows(pairs, self.max_batch))
+            nxt, self.pool = self._device_call(self._step_fn, *args)
+            st.decode_tok = nxt
         # keep each decoding slot's sampled output resident on device for
         # the NEXT step's feed; non-decoding slots retain their value.
+        # On a verify dispatch ``nxt`` is the last ACCEPTED position's
+        # output - exactly the token the plain path would have fed next.
         mask = np.zeros((self.max_batch,), bool)
         for r in dec:
             mask[r.slot] = True
@@ -1441,7 +1740,15 @@ class ServeEngine:
 
         # optimistic host advance: cursors, COUNTS, finish decisions -
         # all deterministic at dispatch; values arrive at retirement.
+        # Speculating rows are the exception: their advance depends on
+        # the device-resident accepted count, so they freeze until
+        # retirement (``verifying``) instead of advancing optimistically.
+        spec_ids = {r.req_id for r, _, _ in spec_plan}
         for r in dec:
+            if r.req_id in spec_ids:
+                r.verifying = True
+                self._next_known[r.slot] = False
+                continue
             p = r.cursor
             r.cursor += 1
             if not self.chunked_prefill and p + 1 < len(r.prompt):
@@ -1457,9 +1764,13 @@ class ServeEngine:
                 self._next_known[slot] = True
             else:
                 self._next_known[slot] = False   # value lives in _next_dev
-            st.decode_emits.append((r, gen_idx, slot))
+            st.decode_emits.append(
+                (r, gen_idx, (slot, 0) if spec_plan else slot)
+            )
             if len(r.generated) >= r.max_new_tokens:
                 self._finish(r)
+        for r, k, _ in spec_plan:
+            st.spec_rows.append((r, r.slot, k))
         self._inflight.append(st)
         t_disp = tel.clock() if tel is not None else 0.0
         self._retire_backlog()
@@ -1522,6 +1833,15 @@ class ServeEngine:
             "pipeline_depth": self.pipeline_depth,
             "inflight": len(self._inflight),
             "cancellations": self.cancellations,
+            "speculate": self.speculate,
+            # always present (zeros when speculation is off) so stats
+            # consumers never branch on configuration
+            "spec": {
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "rollbacks": self.spec_rollbacks,
+                "verify_steps": self.spec_verify_steps,
+            },
             "prefix_cache": (
                 None if self.prefix_cache is None
                 else self.prefix_cache.stats()
@@ -1747,6 +2067,9 @@ class EngineReplicaGroup:
             out[key] = max(s[key] for s in per)
         for key in _STATS_CONFIG:
             out[key] = per[0][key]
+        out["spec"] = {
+            k: sum(s["spec"][k] for s in per) for k in per[0]["spec"]
+        }
         out["prefix_cache"] = (
             None if per[0]["prefix_cache"] is None
             else {

@@ -410,6 +410,54 @@ def gather_pages(pool_layer: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarra
     return out.reshape(b, mp * page, kv_dim)
 
 
+# ---------------------------------------------------------------------------
+# Speculative-verify page snapshot/rollback (ServeEngine._verify_fn).
+#
+# A K-draft verify chains K+1 decode sub-steps; each sub-step's append
+# touches EXACTLY ONE physical page per row (the page containing its
+# write position - quantized pools rewrite that page's codes + sidecars
+# whole, raw pools one slot).  Rollback of rejected sub-steps is
+# therefore a pure byte restore of those per-sub-step pre-images, in
+# reverse dispatch order - no allocator traffic, no requantization pass:
+# the restored bytes ARE the pre-verify quantized state, bit-for-bit.
+
+
+def touched_pages(page_table: jnp.ndarray, pos: jnp.ndarray,
+                  page_size: int) -> jnp.ndarray:
+    """(B, max_pages) table x (B,) write positions -> the (B,) physical
+    page each row's decode append at ``pos`` lands in (rows whose table
+    was nulled resolve to the null page)."""
+    idx = (pos[:, None] // page_size).astype(jnp.int32)
+    return jnp.take_along_axis(page_table, idx, axis=1)[:, 0]
+
+
+def capture_pages(pool: dict, phys: jnp.ndarray) -> dict:
+    """Pre-image of physical pages ``phys`` (B,) across every pool leaf:
+    per leaf a (layers, B, ...) slice of the page dim (axis 1) - codes
+    AND scale/shift sidecars, so a restore is exact for quantized pools
+    whose appends requantize the whole touched page."""
+    return {name: leaf[:, phys] for name, leaf in pool.items()}
+
+
+def restore_pages(pool: dict, phys: jnp.ndarray, pre: dict,
+                  undo: jnp.ndarray) -> dict:
+    """Scatter the :func:`capture_pages` pre-image back into pages
+    ``phys`` where ``undo`` (B,) holds; kept rows redirect to the null
+    page with an identity write (null-page bytes are never attended -
+    the stale-page-immunity invariant)."""
+    b = phys.shape[0]
+    tgt = jnp.where(undo, phys, NULL_PAGE)
+    return {
+        name: leaf.at[:, tgt].set(
+            jnp.where(
+                undo.reshape((1, b) + (1,) * (leaf.ndim - 2)),
+                pre[name], leaf[:, tgt],
+            )
+        )
+        for name, leaf in pool.items()
+    }
+
+
 def paged_bytes(pool: dict) -> int:
     """GLOBAL HBM footprint of the pool (benchmark reporting)."""
     return sum(int(x.size) * x.dtype.itemsize for x in pool.values())

@@ -233,6 +233,44 @@ class SchedulerPolicy:
                 left -= allow
         return plan
 
+    def plan_speculation(
+        self,
+        decoding: Sequence[RequestView],
+        *,
+        k: int,
+        budget_left: Optional[int] = None,
+    ) -> List[Tuple[int, int]]:
+        """Draft-token grants for this step's speculative verify.
+
+        ``decoding`` holds the decode rows the engine found ELIGIBLE and
+        draftable this step (the proposer had a non-empty guess); the
+        returned ``(req_id, granted drafts)`` list assigns each at most
+        ``k`` draft tokens under the LEFTOVER step budget
+        (``budget_left``: the global budget minus decode and prefill
+        spend; None = unlimited) - drafts are pure throughput upside, so
+        they never displace a decode row or a prefill chunk.  A row
+        omitted (or granted 0) falls back to plain one-token decode.
+        Like every hook, this shapes LATENCY only: rejected drafts are
+        rolled back byte-exactly and accepted ones matched the model's
+        own choice, so no grant decision can change output bits.
+
+        Default: grant ``min(k, remaining_decode - 1)`` greedily in the
+        given order until the budget runs out."""
+        left = budget_left
+        plan: List[Tuple[int, int]] = []
+        for v in decoding:
+            if left is not None and left <= 0:
+                break
+            allow = min(k, max(v.remaining_decode - 1, 0))
+            if left is not None:
+                allow = min(allow, left)
+            if allow <= 0:
+                continue
+            plan.append((v.req_id, allow))
+            if left is not None:
+                left -= allow
+        return plan
+
 
 class FCFSPolicy(SchedulerPolicy):
     """First-come-first-served with head-of-line blocking (the
@@ -478,6 +516,40 @@ class TenantQuotaPolicy(SchedulerPolicy):
                 if allow > head:
                     allow = head
             allow = _aligned(allow, v.remaining_prefill, page_size)
+            if allow <= 0:
+                continue
+            plan.append((v.req_id, allow))
+            spent[v.tenant] = spent.get(v.tenant, 0) + allow
+            if left is not None:
+                left -= allow
+        return plan
+
+    def plan_speculation(
+        self, decoding, *, k, budget_left=None
+    ):
+        """Latency-class rows draft first (speculation is a
+        steps-per-token win - exactly the SLO latency buys), and each
+        tenant's draft tokens are capped at its ``max_step_tokens`` -
+        the same noisy-neighbor throttle the prefill plan applies, so a
+        tenant flooding speculable traffic cannot eat the whole leftover
+        step budget."""
+        order = sorted(
+            decoding,
+            key=lambda v: (self._class_rank(v), v.wait_anchor, v.req_id),
+        )
+        left = budget_left
+        spent: Dict[str, int] = {}
+        plan: List[Tuple[int, int]] = []
+        for v in order:
+            if left is not None and left <= 0:
+                break
+            allow = min(k, max(v.remaining_decode - 1, 0))
+            if left is not None:
+                allow = min(allow, left)
+            quota = self.quotas.get(v.tenant)
+            if quota is not None and quota.max_step_tokens is not None:
+                head = quota.max_step_tokens - spent.get(v.tenant, 0)
+                allow = min(allow, max(head, 0))
             if allow <= 0:
                 continue
             plan.append((v.req_id, allow))

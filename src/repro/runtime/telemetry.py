@@ -810,6 +810,50 @@ class Telemetry:
         self._inc("serve.requests_finished")
         self._inc_tenant(tenant, "finished")
 
+    # Speculative decoding.  Like the per-tenant series, the serve.spec.*
+    # instruments are registered LAZILY on first use: a speculation-off
+    # serve never touches them, so the pinned default catalog
+    # (:meth:`_install_instruments`, tests/test_telemetry.py) stays
+    # intact.  Both hooks read host tallies the engine already computed -
+    # nothing here feeds back into a device call, so speculation
+    # telemetry is bit-neutral like everything else in this module.
+
+    def on_spec_dispatch(self, n_rows: int, n_drafts: int) -> None:
+        """One step dispatched ``n_rows`` K-draft verifies carrying
+        ``n_drafts`` draft tokens total (dispatch-side tallies; the
+        accepted counts arrive at retirement)."""
+        if self.metrics is None:
+            return
+        self.metrics.counter(
+            "serve.spec.proposed", unit="tokens",
+            help="draft tokens dispatched into speculative verifies",
+        ).inc(n_drafts)
+        self.metrics.counter(
+            "serve.spec.verify_steps",
+            help="per-row K-draft verify dispatches",
+        ).inc(n_rows)
+
+    def on_spec_retire(self, proposed: int, accepted: int,
+                       rollback_pages: int) -> None:
+        """One verify retired: ``accepted`` of ``proposed`` drafts kept
+        (they matched the model's own choice); ``rollback_pages`` pages
+        had rejected-draft bytes restored on device."""
+        if self.metrics is None:
+            return
+        self.metrics.counter(
+            "serve.spec.accepted", unit="tokens",
+            help="draft tokens accepted (matched the model's own choice)",
+        ).inc(accepted)
+        self.metrics.counter(
+            "serve.spec.rollback_pages", unit="pages",
+            help="pages whose rejected-draft bytes were restored",
+        ).inc(rollback_pages)
+        self.metrics.histogram(
+            "serve.spec.accepted_per_verify", unit="tokens",
+            bounds=(0, 1, 2, 3, 4, 6, 8, 12, 16),
+            help="accepted draft tokens per retired verify",
+        ).observe(accepted)
+
     def on_preempt(self, req_id: int, step: int, *,
                    tenant: Optional[str] = None) -> None:
         self._instant("preempt", step, req_id=req_id)

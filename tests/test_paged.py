@@ -414,6 +414,37 @@ def test_engine_page_reuse_is_clean(tiny_bundle):
     assert rb.generated == rf.generated
 
 
+def test_rejected_draft_debris_is_inert(tiny_bundle):
+    """Speculative-decoding extension of the no-scrub guarantee: a serve
+    that speculated (verify writes draft K/V beyond the accepted point,
+    then rolls the page bytes back) must leave the pool in a state where
+    (a) every page returns to the free list - rollback never leaks or
+    double-frees - and (b) a follow-up request decoded on those recycled
+    pages matches a fresh-pool serve: no rejected-draft byte survives to
+    be attended."""
+    bundle, params = tiny_bundle
+    pa = [3, 5, 7, 9] * 6            # repetitive: drafts + rollbacks
+    pb = [11, 12, 13] * 4
+    eng = ServeEngine(
+        bundle, params, max_batch=1, num_pages=6, page_size=8,
+        max_seq_len=48, prefill_chunk=16, speculate=3,
+    )
+    eng.submit(list(pa), 8)
+    eng.run_to_completion()          # dirties pages with verify traffic
+    assert eng.stats()["spec"]["verify_steps"] >= 1
+    assert eng.allocator.free_pages == eng.num_pages - 1   # conservation
+    rb = eng.submit(list(pb), 6)
+    eng.run_to_completion()
+
+    fresh = ServeEngine(
+        bundle, params, max_batch=1, num_pages=6, page_size=8,
+        max_seq_len=48, prefill_chunk=16,
+    )
+    rf = fresh.submit(list(pb), 6)
+    fresh.run_to_completion()
+    assert rb.generated == rf.generated
+
+
 def test_evicted_prefix_pages_are_reused_cleanly(tiny_bundle):
     """Stale-page immunity through the prefix-cache lifecycle: pages
     donated to the radix cache, LRU-evicted under admission pressure, and

@@ -1,0 +1,477 @@
+"""Speculative decoding on the paged PASA engine (PR 9).
+
+The tentpole claim: self-speculative decoding - a host-side n-gram
+prompt-lookup drafter plus ONE widened verify device step per
+speculating row - moves STEPS-PER-TOKEN, never bits.  Greedy accept
+keeps exactly the longest draft prefix matching the model's own argmax
+and the engine restores the pre-verify bytes of every rejected page
+slot, so token streams AND final physical page bytes are bit-identical
+to the non-speculative serve across every scheduling policy, every pool
+dtype, and both pipeline modes (runtime/README.md "Speculative
+decoding").
+
+Also here: the n-gram proposer's lookup semantics, draft-content
+independence (an oracle drafter and an always-wrong drafter both leave
+the stream untouched), preempt-resume and cancellation under
+speculation (allocator conservation - no page leaks from rollbacks),
+the speculative-verify attention entry point's per-column bit-equality
+to plain decode, and the scheduler plan_speculation hooks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro.core import FP16
+from repro.runtime import (
+    CANCELLED,
+    DRAFTERS,
+    NULL_PAGE,
+    DraftProposer,
+    NgramProposer,
+    ServeEngine,
+    TenantQuota,
+    TenantQuotaPolicy,
+    chunked_cold_reference,
+    get_drafter,
+)
+from repro.runtime.scheduler import FCFSPolicy, RequestView
+
+GEN = 8
+SPEC_K = 3
+
+POLICY_KW = {
+    "fcfs": dict(scheduler="fcfs"),
+    "sjf": dict(scheduler="sjf"),
+    "mixed": dict(scheduler="mixed", step_token_budget=24),
+    "tenant": dict(scheduler="tenant"),
+}
+
+
+@pytest.fixture(scope="module")
+def tiny_bundle():
+    from repro.configs import get_config
+    from repro.models.model_zoo import build
+
+    cfg = get_config("qwen3-4b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+@pytest.fixture(scope="module")
+def workload():
+    # mixed repetition grades: the first two rows draft well (full and
+    # partial accepts), the arithmetic row mostly rolls back - so the
+    # bit-identity matrix exercises accept AND rollback paths every run
+    base = [3, 5, 7, 9]
+    return [
+        (base * 6)[:17],
+        [11, 12, 13] * 5,
+        list(range(1, 12)),
+    ]
+
+
+def _serve(bundle, params, prompts, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("num_pages", 40)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq_len", 64)
+    kw.setdefault("prefill_chunk", 16)
+    eng = ServeEngine(bundle, params, **kw)
+    reqs = [eng.submit(p, GEN) for p in prompts]
+    eng.run_to_completion()
+    return [r.generated for r in reqs], eng
+
+
+def _assert_pools_bit_equal(pool_a, pool_b):
+    """Page 0 is the shared masked-lane write sink (schedule-dependent
+    debris); every REAL page must match bitwise, codes and sidecars."""
+    assert set(pool_a) == set(pool_b)
+    for name in pool_a:
+        a, b = np.asarray(pool_a[name]), np.asarray(pool_b[name])
+        np.testing.assert_array_equal(a[:, 1:], b[:, 1:], err_msg=name)
+
+
+_OFF_CACHE = {}
+
+
+def _off(tiny_bundle, workload, policy, dtype):
+    """The speculation-off reference serve, cached per (policy, dtype)."""
+    key = (policy, dtype)
+    if key not in _OFF_CACHE:
+        bundle, params = tiny_bundle
+        out, eng = _serve(
+            bundle, params, workload, cache_dtype=dtype,
+            **POLICY_KW[policy],
+        )
+        _OFF_CACHE[key] = (
+            out, {k: np.asarray(v) for k, v in eng.pool.items()}
+        )
+    return _OFF_CACHE[key]
+
+
+# ------------------------------------------------------ n-gram proposer --
+
+class TestNgramProposer:
+    def test_longest_suffix_match_wins(self):
+        # suffix [1,2,3] recurs at the start; the continuation there is
+        # [4,1,2] - found at n-gram size 3 after size 4 fails
+        p = NgramProposer()
+        assert p.propose([1, 2, 3, 4, 1, 2, 3], 3) == [4, 1, 2]
+
+    def test_most_recent_occurrence_wins(self):
+        # suffix [1,2] occurs at index 0 (continues 5) and index 3
+        # (continues 7): the LATER occurrence is the better predictor
+        p = NgramProposer()
+        assert p.propose([1, 2, 5, 1, 2, 7, 1, 2], 1) == [7]
+
+    def test_skip_offsets_into_the_continuation(self):
+        # async mode: `skip` pending placeholders are already in flight,
+        # so the draft starts that far into the matched continuation
+        p = NgramProposer()
+        hist = [1, 2, 3, 1, 2]
+        assert p.propose(hist, 2, skip=0) == [3, 1]
+        assert p.propose(hist, 2, skip=1) == [1, 2]
+
+    def test_short_or_unmatched_history_yields_no_draft(self):
+        p = NgramProposer()
+        assert p.propose([5], 3) == []
+        assert p.propose([], 3) == []
+        assert p.propose([1, 2, 3, 4, 5], 3) == []   # no repeat anywhere
+
+    def test_draft_never_exceeds_k(self):
+        p = NgramProposer()
+        assert len(p.propose([7, 8] * 10, 4)) <= 4
+        assert p.propose([7, 8] * 10, 0) == []
+
+    def test_get_drafter_resolution(self):
+        assert isinstance(get_drafter("ngram"), NgramProposer)
+        assert isinstance(get_drafter(NgramProposer), NgramProposer)
+        inst = NgramProposer(max_ngram=2)
+        assert get_drafter(inst) is inst
+        assert "ngram" in DRAFTERS
+        with pytest.raises(ValueError):
+            get_drafter("no-such-drafter")
+
+
+# ------------------------------------------------ headline bit-identity --
+
+@pytest.mark.parametrize("dtype", ["bf16", "fp8_e4m3", "int8"])
+@pytest.mark.parametrize("policy", ["fcfs", "sjf", "mixed", "tenant"])
+@pytest.mark.parametrize("depth", [0, 1])
+def test_spec_matches_plain_bitwise(
+    tiny_bundle, workload, policy, dtype, depth
+):
+    """THE acceptance matrix: speculation on == speculation off - token
+    streams AND final page bytes - for every policy x pool dtype x
+    pipeline mode.  All requests fit the batch at step 0, so even the
+    physical page CONTENTS must agree (rollback restored every rejected
+    byte, including quantized sidecars)."""
+    bundle, params = tiny_bundle
+    ref, ref_pool = _off(tiny_bundle, workload, policy, dtype)
+    got, eng = _serve(
+        bundle, params, workload, cache_dtype=dtype, speculate=SPEC_K,
+        pipeline_depth=depth, **POLICY_KW[policy],
+    )
+    assert got == ref
+    _assert_pools_bit_equal(ref_pool, eng.pool)
+    st = eng.stats()
+    assert st["speculate"] == SPEC_K
+    assert st["spec"]["verify_steps"] >= 1       # speculation actually ran
+    assert st["spec"]["proposed"] >= st["spec"]["accepted"] >= 0
+    if depth == 0:
+        # sync mode on this workload reliably lands accepts; async shifts
+        # the drafter's lookup window by the in-flight token (skip=1), an
+        # accept-RATE effect - never a bits effect, as asserted above
+        assert st["spec"]["accepted"] >= 1
+    assert st["inflight"] == 0
+
+
+def test_spec_sampling_mode_invariant(tiny_bundle, workload):
+    """Sampled accepted tokens stay schedule-invariant: keys derive from
+    (request id, token index), counts the host knows at dispatch, so the
+    widened verify draws the SAME per-position samples the one-token
+    path would."""
+    bundle, params = tiny_bundle
+    kw = dict(temperature=0.8, top_k=8, sample_seed=7)
+    ref, _ = _serve(bundle, params, workload, **kw)
+    for depth in (0, 1):
+        got, _ = _serve(
+            bundle, params, workload, speculate=SPEC_K,
+            pipeline_depth=depth, **kw,
+        )
+        assert got == ref, depth
+
+
+# --------------------------------------------- draft-content independence --
+
+class OracleDrafter(DraftProposer):
+    """Proposes the TRUE continuation (drafts always accepted)."""
+
+    name = "oracle"
+
+    def __init__(self, trajectories):
+        self.trajectories = trajectories     # full prompt+stream lists
+
+    def propose(self, history, k, skip=0):
+        for traj in self.trajectories:
+            if history == traj[:len(history)]:
+                return traj[len(history) + skip:len(history) + skip + k]
+        return []
+
+
+class WrongDrafter(OracleDrafter):
+    """Proposes provably-wrong tokens (drafts always rolled back)."""
+
+    name = "wrong"
+
+    def __init__(self, trajectories, vocab):
+        super().__init__(trajectories)
+        self.vocab = vocab
+
+    def propose(self, history, k, skip=0):
+        truth = super().propose(history, k, skip)
+        return [(t + 1) % self.vocab for t in truth]
+
+
+def _trajectories(tiny_bundle, workload):
+    bundle, params = tiny_bundle
+    out, _ = _serve(bundle, params, workload)
+    return [p + g for p, g in zip(workload, out)]
+
+
+def test_oracle_drafter_accepts_everything(tiny_bundle, workload):
+    """A perfect drafter: every proposed token is accepted (zero
+    rollbacks), and the stream still equals the plain serve - drafts are
+    a latency lever, acceptance is the model's own argmax."""
+    bundle, params = tiny_bundle
+    trajs = _trajectories(tiny_bundle, workload)
+    ref, _ = _serve(bundle, params, workload)
+    got, eng = _serve(
+        bundle, params, workload, speculate=SPEC_K,
+        draft=OracleDrafter(trajs),
+    )
+    assert got == ref
+    st = eng.stats()["spec"]
+    assert st["proposed"] == st["accepted"] >= 1
+    assert st["rollbacks"] == 0
+    # perfect drafts shrink wall-steps below the plain serve's
+    _, plain = _serve(bundle, params, workload)
+    assert eng.steps < plain.steps
+
+
+def test_wrong_drafter_rolls_back_everything(tiny_bundle, workload):
+    """An adversarial always-wrong drafter: every verify rolls back to a
+    single accepted token, and the stream AND page bytes still equal the
+    plain serve - rejected draft writes are restored byte-exactly."""
+    bundle, params = tiny_bundle
+    trajs = _trajectories(tiny_bundle, workload)
+    ref, ref_eng = _serve(bundle, params, workload, cache_dtype="int8")
+    got, eng = _serve(
+        bundle, params, workload, cache_dtype="int8", speculate=SPEC_K,
+        draft=WrongDrafter(trajs, bundle.cfg.vocab_size),
+    )
+    assert got == ref
+    _assert_pools_bit_equal(ref_eng.pool, eng.pool)
+    st = eng.stats()["spec"]
+    assert st["accepted"] == 0
+    assert st["rollbacks"] == st["verify_steps"] >= 1
+
+
+# ----------------------------------- preemption / cancellation lifecycle --
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_preempt_resume_under_speculation(tiny_bundle, dtype):
+    """Preemption while the victim speculates: page-out through the
+    prefix cache, chunk-exact re-prefill, teacher-forced replay (during
+    which speculation is suspended) - the resumed stream must equal the
+    uninterrupted COLD serve, and the allocator must conserve pages
+    despite the interleaved rollbacks."""
+    bundle, params = tiny_bundle
+    long_p = [3, 5, 7, 9] * 11          # 44 tokens, drafts well
+    med_p = [11, 12, 13] * 12           # 36 tokens
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=12, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        preemption=True, preempt_patience=2, cache_dtype=dtype,
+        pipeline_depth=1, speculate=SPEC_K,
+    )
+    ra = eng.submit(long_p, 12)         # 44 + 12 = 7 of 11 data pages
+    for _ in range(3):
+        eng.step()
+    rb = eng.submit(med_p, GEN)         # 36 + 8 -> 6 pages: cannot coexist
+    eng.run_to_completion()
+    assert eng.preemptions >= 1
+    assert ra.preempt_count >= 1
+    for r, prompt, gen in ((ra, long_p, 12), (rb, med_p, GEN)):
+        assert r.generated == chunked_cold_reference(
+            bundle, params, prompt, gen, page_size=8, prefill_chunk=16,
+            cache_dtype=dtype,
+        )
+    # allocator conservation: free + cache-resident == allocatable
+    allocatable = eng.num_pages - 1
+    resident = eng.prefix_cache.cached_pages
+    assert eng.allocator.free_pages + resident == allocatable
+    eng.prefix_cache.evict(resident)
+    assert eng.allocator.free_pages == allocatable
+
+
+def test_cancel_mid_verify_conserves_pages(tiny_bundle):
+    """cancel() while a widened verify step is IN FLIGHT: the drain
+    retires the verify (possibly finishing the request - then cancel
+    reports False), pages return to the allocator / prefix cache, and
+    the surviving neighbour's stream is untouched."""
+    bundle, params = tiny_bundle
+    victim_p = [3, 5, 7, 9] * 8          # 32 tokens, speculates eagerly
+    surv_p = [11, 12, 13] * 5
+    eng = ServeEngine(
+        bundle, params, max_batch=2, num_pages=24, page_size=8,
+        max_seq_len=64, prefill_chunk=16, prefix_cache=True,
+        pipeline_depth=1, speculate=SPEC_K,
+    )
+    allocatable = eng.num_pages - 1
+    victim = eng.submit(victim_p, 12)
+    survivor = eng.submit(surv_p, GEN)
+    while not victim.verifying:
+        eng.step()                        # verify dispatched, in flight
+    assert eng.stats()["inflight"] >= 1
+    cancelled = eng.cancel(victim.req_id)
+    assert not victim.verifying           # drain retired the verify
+    if cancelled:
+        assert victim.state == CANCELLED
+    else:
+        # the in-flight verify's accepted tokens finished the request
+        assert victim.state == "finished"
+    eng.run_to_completion()
+    assert survivor.generated == chunked_cold_reference(
+        bundle, params, surv_p, GEN, page_size=8, prefill_chunk=16,
+    )
+    resident = eng.prefix_cache.cached_pages
+    assert eng.allocator.free_pages + resident == allocatable
+    eng.prefix_cache.evict(resident)
+    assert eng.allocator.free_pages == allocatable
+
+
+# ------------------------------------------------- verify attention entry --
+
+def test_paged_verify_columns_bitmatch_decode(rng):
+    """Each verify query column j must equal a plain paged decode at
+    kv_len = start + 1 + j BIT-FOR-BIT - the property that makes greedy
+    acceptance bit-exact (the verifier IS the decoder)."""
+    b, kvh, g, d, page, w = 2, 2, 4, 32, 8, 3
+    kv_lens = [20, 13]
+    ks = jax.random.split(rng, 3)
+    mp = max(-(-length // page) for length in kv_lens) + 1
+    s2 = mp * page
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
+    q = jax.random.normal(ks[0], (b, kvh, g, w, d), jnp.float32) + 1.0
+    kc = jnp.where(
+        mask, jax.random.normal(ks[1], (b, kvh, s2, d), jnp.float32) + 2.0,
+        0.0,
+    )
+    vc = jnp.where(
+        mask, jax.random.normal(ks[2], (b, kvh, s2, d), jnp.float32), 0.0
+    )
+    # pack logical blocks into a shuffled physical pool
+    n_pages = 1 + b * mp + 2
+    ids = np.random.default_rng(0).permutation(np.arange(1, n_pages))
+    table = np.full((b, mp), NULL_PAGE, np.int32)
+    kp = np.zeros((n_pages, page, kvh, d), np.float32)
+    vp = np.zeros((n_pages, page, kvh, d), np.float32)
+    kcn = np.moveaxis(np.asarray(kc), 2, 1)
+    vcn = np.moveaxis(np.asarray(vc), 2, 1)
+    nxt = 0
+    for bi in range(b):
+        for j in range(-(-kv_lens[bi] // page)):
+            pid = int(ids[nxt]); nxt += 1
+            table[bi, j] = pid
+            kp[pid] = kcn[bi, j * page:(j + 1) * page]
+            vp[pid] = vcn[bi, j * page:(j + 1) * page]
+    kp, vp, table = jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table)
+    # column j attends positions < start + 1 + j; start = kv_len - w so
+    # every column's window stays inside the valid prefix
+    start = kv_len - w
+    got = K.pasa_paged_verify(
+        q, kp, vp, table, start, beta=0.9375, policy=FP16, use_kernel=False
+    )
+    assert got.shape == (b, kvh, g, w, d)
+    for j in range(w):
+        want = K.pasa_paged_decode(
+            q[:, :, :, j], kp, vp, table, start + 1 + j,
+            beta=0.9375, policy=FP16, use_kernel=False,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got[:, :, :, j]), np.asarray(want), err_msg=str(j)
+        )
+    with pytest.raises(ValueError):
+        K.pasa_paged_verify(
+            q[:, :, :, 0], kp, vp, table, start, policy=FP16,
+            use_kernel=False,
+        )
+
+
+# --------------------------------------------------- plan_speculation --
+
+def _view(req_id, *, remaining_decode=8, tenant="default",
+          priority="throughput", submit_step=0):
+    return RequestView(
+        req_id=req_id, prompt_len=16, remaining_prefill=0,
+        remaining_decode=remaining_decode, submit_step=submit_step,
+        admit_step=0, slot=0, pages_needed=2,
+        tenant=tenant, priority=priority,
+    )
+
+
+class TestPlanSpeculation:
+    def test_base_grants_capped_by_remaining_and_budget(self):
+        pol = FCFSPolicy()
+        ws = [_view(1, remaining_decode=8), _view(2, remaining_decode=2),
+              _view(3, remaining_decode=1)]
+        # no budget: min(k, remaining-1); a last-token row gets nothing
+        assert pol.plan_speculation(ws, k=4) == [(1, 4), (2, 1)]
+        # budget 5: greedy in order until exhausted
+        assert pol.plan_speculation(ws, k=4, budget_left=5) == [
+            (1, 4), (2, 1)
+        ]
+        assert pol.plan_speculation(ws, k=4, budget_left=3) == [(1, 3)]
+        assert pol.plan_speculation(ws, k=4, budget_left=0) == []
+
+    def test_tenant_latency_class_first_and_quota_capped(self):
+        pol = TenantQuotaPolicy(
+            {"bulk": TenantQuota(max_step_tokens=3)}
+        )
+        ws = [
+            _view(1, tenant="bulk", priority="throughput"),
+            _view(2, tenant="bulk", priority="throughput"),
+            _view(3, tenant="vip", priority="latency", submit_step=5),
+        ]
+        plan = pol.plan_speculation(ws, k=4)
+        # latency row drafts first; bulk's two rows share a 3-token cap
+        assert plan[0] == (3, 4)
+        assert sum(g for rid, g in plan if rid in (1, 2)) == 3
+
+    def test_tenant_budget_still_binds(self):
+        pol = TenantQuotaPolicy()
+        ws = [_view(1), _view(2)]
+        assert pol.plan_speculation(ws, k=4, budget_left=6) == [
+            (1, 4), (2, 2)
+        ]
+
+
+# -------------------------------------------------------- construction --
+
+def test_speculate_validation(tiny_bundle):
+    bundle, params = tiny_bundle
+    kw = dict(max_batch=1, num_pages=8, page_size=8, max_seq_len=32)
+    with pytest.raises(ValueError):
+        ServeEngine(bundle, params, speculate=-1, **kw)
+    with pytest.raises(ValueError):
+        ServeEngine(
+            bundle, params, speculate=2, chunked_prefill=False, **kw
+        )
+    with pytest.raises(ValueError):
+        ServeEngine(bundle, params, speculate=2, draft="bogus", **kw)

@@ -155,6 +155,42 @@ def test_telemetry_bit_neutral_under_preempt_and_cancel(tiny_bundle,
     assert {"preempt", "resume", "cancel"} <= kinds
 
 
+def test_spec_telemetry_bit_neutral_and_lazy(tiny_bundle):
+    """Speculative-decoding telemetry (PR 9): the serve.spec.* counters
+    and the accepted_per_verify histogram are (a) BIT-NEUTRAL - the
+    instrumented speculative serve matches the uninstrumented one stream
+    for stream and byte for byte, (b) exact mirrors of the engine's own
+    tallies, and (c) LAZILY registered - a serve that never speculates
+    keeps the pinned default catalog free of spec instruments."""
+    bundle, params = tiny_bundle
+    spec_prompts = [[3, 5, 7, 9] * 4 + [3], [11, 12, 13] * 5]
+    kw = dict(speculate=3, cache_dtype="int8")
+    ref, ref_eng = _serve(bundle, params, spec_prompts, **kw)
+    tel = _full_telemetry()
+    got, eng = _serve(bundle, params, spec_prompts, telemetry=tel, **kw)
+    assert [r.generated for r in got] == [r.generated for r in ref]
+    _assert_pools_bit_equal(ref_eng.pool, eng.pool)
+
+    st = eng.stats()["spec"]
+    assert st["verify_steps"] >= 1, "workload must actually speculate"
+    snap = tel.metrics_snapshot()
+    c = snap["counters"]
+    assert c["serve.spec.proposed"]["value"] == st["proposed"]
+    assert c["serve.spec.accepted"]["value"] == st["accepted"]
+    assert c["serve.spec.verify_steps"]["value"] == st["verify_steps"]
+    assert c["serve.spec.rollback_pages"]["value"] >= 0
+    h = snap["histograms"]["serve.spec.accepted_per_verify"]
+    assert h["count"] == st["verify_steps"]    # one observation per row
+    assert h["sum"] == st["accepted"]
+
+    # lazy registration: no speculation -> no spec instruments
+    tel_off = _full_telemetry()
+    _serve(bundle, params, spec_prompts, telemetry=tel_off)
+    snap_off = tel_off.metrics_snapshot()
+    assert not any(k.startswith("serve.spec.") for k in
+                   list(snap_off["counters"]) + list(snap_off["histograms"]))
+
+
 # -------------------------------------------------------- metrics math --
 
 def test_histogram_exact_aggregates_and_percentiles():
@@ -321,11 +357,14 @@ ENGINE_STATS_KEYS = frozenset({
     "pool_dtype", "chunked_prefill", "scheduler", "prefill_batch",
     "step_token_budget", "preemptions", "trimmed_pages", "temperature",
     "last_step_tokens", "max_step_tokens", "pipeline_depth", "inflight",
-    "cancellations", "prefix_cache",
+    "cancellations", "prefix_cache", "speculate", "spec",
 })
 PREFIX_CACHE_KEYS = frozenset({
     "cached_pages", "evictable_pages", "hits", "misses", "evictions",
     "donations",
+})
+SPEC_KEYS = frozenset({
+    "proposed", "accepted", "rollbacks", "verify_steps",
 })
 
 
@@ -334,9 +373,13 @@ def test_engine_stats_schema_pinned(tiny_bundle, prompts):
     bundle, params = tiny_bundle
     _, eng = _serve(bundle, params, prompts[:2], prefix_cache=True)
     st = eng.stats()
-    assert st["schema"] == STATS_SCHEMA == 1
+    assert st["schema"] == STATS_SCHEMA == 2
     assert frozenset(st) == ENGINE_STATS_KEYS
     assert frozenset(st["prefix_cache"]) == PREFIX_CACHE_KEYS
+    # the spec sub-dict is always present (zeros when speculation is off)
+    assert frozenset(st["spec"]) == SPEC_KEYS
+    assert st["speculate"] == 0
+    assert all(v == 0 for v in st["spec"].values())
     # prefix_cache is present (None) even when the cache is off
     _, eng_off = _serve(bundle, params, prompts[:1], prefix_cache=False)
     st_off = eng_off.stats()
@@ -369,6 +412,12 @@ def test_group_stats_is_true_aggregation(tiny_bundle, prompts):
     assert st["steps"] == max(s["steps"] for s in per)
     assert st["scheduler"] == per[0]["scheduler"]
     assert frozenset(st["prefix_cache"]) == PREFIX_CACHE_KEYS
+    # spec tallies aggregate per-key across replicas (all-zero here)
+    assert frozenset(st["spec"]) == SPEC_KEYS
+    assert st["spec"] == {
+        k: sum(s["spec"][k] for s in per) for k in SPEC_KEYS
+    }
+    assert st["speculate"] == per[0]["speculate"] == 0
     # the aggregated metrics snapshot sees every replica's registry
     snap = grp.metrics_snapshot()
     assert snap["counters"]["serve.requests_finished"]["value"] == len(

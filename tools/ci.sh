@@ -13,6 +13,10 @@
 #      benchmarks/run.py's own checker (run `python -m benchmarks.run`
 #      to re-measure; this gate keeps the committed trajectory honest
 #      without re-running the multi-minute benchmark).
+#   3. The speculative-decoding bound (PR 9): the recorded
+#      spec_decode_on row must be bit-identity-certified and at or
+#      below 0.6 engine steps per token on the repetitive burst -
+#      same recorded-trajectory discipline as the telemetry bound.
 #
 # Usage: tools/ci.sh [extra pytest args...]
 #   PER_TEST_TIMEOUT=seconds  override the per-test ceiling (default
@@ -30,15 +34,19 @@ python -m pytest -q \
     -p tools.ci_timeout --per-test-timeout "$PER_TEST_TIMEOUT" \
     "$@"
 
-echo "[ci] telemetry overhead bound (<= 5%) on the recorded trajectory"
+echo "[ci] telemetry overhead (<= 5%) + spec decode (<= 0.6 steps/token)"
+echo "[ci] bounds on the recorded trajectory"
 python - <<'PY'
 import json
 
-from benchmarks.run import SERVING_JSON, _check_telemetry_overhead
+from benchmarks.run import (
+    SERVING_JSON, _check_spec_decode, _check_telemetry_overhead,
+)
 
 with open(SERVING_JSON) as f:
     rows = json.load(f)["rows"]
 _check_telemetry_overhead(rows)
+_check_spec_decode(rows)
 PY
 
-echo "[ci] green: 0 failed, telemetry bound held"
+echo "[ci] green: 0 failed, telemetry + spec decode bounds held"
