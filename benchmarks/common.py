@@ -33,8 +33,8 @@ def hybrid_qkv(key, x0, am, p=0.001, shape=SHAPE):
     """N(x0, 1) + N(0, Am^2) * Bernoulli(p)  (paper Eq. 18)."""
     ks = jax.random.split(key, 9)
     def mk(i):
-        base = jax.random.normal(ks[i], shape) + x0
-        spike = jax.random.normal(ks[i + 3], shape) * am
+        base = jax.random.normal(ks[i], shape, jnp.float32) + x0
+        spike = jax.random.normal(ks[i + 3], shape, jnp.float32) * am
         mask = jax.random.bernoulli(ks[i + 6], p, shape)
         return base + spike * mask
     return mk(0), mk(1), mk(2)

@@ -124,7 +124,7 @@ def real_model_overflow():
     ):
         key = jax.random.PRNGKey(hash(name) % 2**31)
         q, k = make_resonant_qk(key, shape, amplitude=amp, bias=bias, anti=True)
-        v = jax.random.normal(jax.random.fold_in(key, 9), shape)
+        v = jax.random.normal(jax.random.fold_in(key, 9), shape, jnp.float32)
         probe = score_overflow_probe(q, k)
         ridx = resonance_index(q, k)
         gold, o_pasa, o_fa16, _ = three_way(q, k, v)

@@ -28,7 +28,7 @@ def main():
     ks = jax.random.split(key, 3)
     # The paper's overflow regime: uniform inputs with mean 30 (Table 4 row 1)
     shape = (1, 8, 1280, 128)
-    mk = lambda k: jax.random.uniform(k, shape, minval=29.5, maxval=30.5)
+    mk = lambda k: jax.random.uniform(k, shape, jnp.float32, minval=29.5, maxval=30.5)
     q, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
 
     print("== 1. overflow: plain fp16 FA vs PASA ==")

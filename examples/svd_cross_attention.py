@@ -30,7 +30,7 @@ def main():
     _, k = make_resonant_qk(
         jax.random.fold_in(key, 1), (b, h, s_kv, d), amplitude=58.0, anti=True
     )
-    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s_kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s_kv, d), jnp.float32)
 
     probe = score_overflow_probe(q, k)
     print(

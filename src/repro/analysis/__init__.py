@@ -1,0 +1,75 @@
+"""Static bit-safety invariant analysis for the PASA serving stack.
+
+The repo's headline property - every schedule, pipeline mode, shard
+layout, and telemetry toggle is *bit-preserving* (the reproducibility
+property of arXiv:2405.02803) - rests on a handful of conventions that
+are easy to break and expensive to debug when broken:
+
+  * device readbacks only at annotated drain points (PR 6's async
+    overlap argument),
+  * explicit dtypes on every ``jax.random`` draw (PR 8's five
+    paged==contiguous bitmatch failures were a dtype-less
+    ``jax.random.normal`` drawing f64 under ``jax_enable_x64``),
+  * wide accumulation on reductions feeding cross-block kernel state
+    (PR 8's 16 kernel-tolerance failures),
+  * host-only tenant labels never reaching jitted device code (PR 8's
+    multi-tenant bit-safety argument),
+  * no wall-clock / stdlib-random / set-iteration nondeterminism in
+    scheduler plan paths (every plan decision must replay identically).
+
+This package encodes each invariant as an AST rule (stdlib ``ast``
+only, no new dependencies) with per-rule :class:`Finding` records,
+inline suppressions (``# repro: allow[rule-id] reason``), a checked-in
+baseline for grandfathered findings, and text/JSON reporters.
+
+Run it::
+
+    python -m repro.analysis            # text report, exit 1 on findings
+    python -m repro.analysis --json     # machine-readable report
+    python tools/lint.py --list-rules   # rule catalog
+
+See ``src/repro/analysis/README.md`` for the rule catalog and the
+historical bug each rule makes unrepresentable.
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    Rule,
+    SourceFile,
+    all_rules,
+    get_rule,
+    register,
+)
+
+# Importing the rule modules populates the registry.
+from repro.analysis import rules_readback  # noqa: F401  (register side effect)
+from repro.analysis import rules_random  # noqa: F401
+from repro.analysis import rules_accum  # noqa: F401
+from repro.analysis import rules_device  # noqa: F401
+from repro.analysis import rules_determ  # noqa: F401
+
+from repro.analysis.runner import AnalysisResult, analyze, repo_root  # noqa: F401
+from repro.analysis.baseline import (  # noqa: F401
+    DEFAULT_BASELINE,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.report import JSON_SCHEMA, render_json, render_text  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "SourceFile",
+    "all_rules",
+    "get_rule",
+    "register",
+    "AnalysisResult",
+    "analyze",
+    "repo_root",
+    "DEFAULT_BASELINE",
+    "load_baseline",
+    "write_baseline",
+    "JSON_SCHEMA",
+    "render_json",
+    "render_text",
+]

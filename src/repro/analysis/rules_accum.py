@@ -1,0 +1,146 @@
+"""Rule ``narrow-accumulation``: kernel reductions must accumulate wide.
+
+PR 8 retired 16 kernel-tolerance failures whose root cause was narrow
+(policy-dtype, possibly fp16) reductions feeding cross-block state
+(``km``/``sbar``/``l_loc``).  The fix became a convention: reductions in
+the kernel family either
+
+  * cast their operand wide *before* reducing (``jnp.sum(x.astype(wide),
+    ...)`` - rounding once on store), or
+  * pass an explicit ``dtype=`` / ``preferred_element_type=``, or
+  * are spelled as ones-vector ``lax.dot_general`` contractions (the
+    decode/attention kernels' form, which also pins accumulation order
+    across memory layouts).
+
+This rule flags ``jnp.sum`` / ``jnp.max`` / ``jnp.cumsum`` calls inside
+``kernels/`` and ``core/pasa.py`` that satisfy none of those: the
+operand's accumulation dtype is implicit (whatever the policy handed
+the kernel, which is fp16 in the configurations the paper targets) or
+explicitly narrow.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    dotted,
+    module_aliases,
+    register,
+)
+
+REDUCERS = ("sum", "max", "cumsum")
+
+#: dtype-name fragments considered narrow for accumulation purposes.
+NARROW_TOKENS = (
+    "float16",
+    "bfloat16",
+    "fp16",
+    "bf16",
+    "e4m3",
+    "e5m2",
+    "int8",
+    "uint8",
+)
+
+WIDE_KWARGS = ("dtype", "preferred_element_type")
+
+
+def _dtype_expr_is_narrow(node: ast.AST) -> Optional[bool]:
+    """True/False when the dtype expression names a known-narrow/wide
+    dtype literal; None when it is symbolic (a variable like ``wide`` or
+    ``stat_dtype`` - an explicit, named choice we trust)."""
+    name = dotted(node)
+    if name is None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            name = node.value
+        else:
+            return None
+    low = name.lower()
+    if any(tok in low for tok in NARROW_TOKENS):
+        return True
+    if any(tok in low for tok in ("float32", "float64", "f32", "f64", "int32", "int64")):
+        return False
+    return None  # symbolic (wide/stat_dtype/...): explicit intent, trusted
+
+
+def _operand_widened(arg: ast.AST) -> bool:
+    """Does the reduced operand go through an explicit non-narrow
+    ``.astype(...)`` cast or a ``dot_general`` contraction?"""
+    for node in ast.walk(arg):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "astype" and node.args:
+                if _dtype_expr_is_narrow(node.args[0]) is not True:
+                    return True
+            if node.func.attr == "dot_general":
+                return True
+        elif isinstance(node.func, ast.Name) and node.func.id == "dot_general":
+            return True
+    return False
+
+
+class NarrowAccumulationRule(Rule):
+    id = "narrow-accumulation"
+    title = "Kernel reduction with implicit (possibly fp16) accumulation"
+    scope = (
+        "src/repro/kernels/*.py",
+        "src/repro/core/pasa.py",
+    )
+    motivation = (
+        "PR 8: narrow fp16 reductions feeding cross-block state caused the "
+        "16 kernel-tolerance failures; the fix is the wide-accumulation "
+        "convention (cast wide before reducing, or ones-vector dot_general)."
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        jnp_aliases = module_aliases(sf.tree, "jax.numpy")
+        if not jnp_aliases:
+            return []
+        targets = {
+            f"{alias}.{r}": r for alias in jnp_aliases for r in REDUCERS
+        }
+        findings: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name not in targets:
+                continue
+            reducer = targets[name]
+            explicit_narrow = False
+            satisfied = False
+            for kw in node.keywords:
+                if kw.arg in WIDE_KWARGS:
+                    if _dtype_expr_is_narrow(kw.value) is True:
+                        explicit_narrow = True
+                    else:
+                        satisfied = True
+            if not satisfied and not explicit_narrow and node.args:
+                satisfied = _operand_widened(node.args[0])
+            if satisfied:
+                continue
+            why = (
+                "explicitly narrow accumulator"
+                if explicit_narrow
+                else "implicit accumulation dtype"
+            )
+            findings.append(
+                self.finding(
+                    sf,
+                    node,
+                    f"jnp.{reducer} with {why}: reductions feeding "
+                    "cross-block state must cast wide before reducing, pass "
+                    "a wide dtype=/preferred_element_type=, or use the "
+                    "ones-vector dot_general convention (PR 8)",
+                )
+            )
+        return findings
+
+
+RULE = register(NarrowAccumulationRule())

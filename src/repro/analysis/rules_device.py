@@ -1,0 +1,133 @@
+"""Rule ``device-side-tenant-leak``: host labels never reach device code.
+
+PR 8's multi-tenant bit-safety argument is one sentence: *nothing
+tenant-shaped reaches the device*.  Tenancy, priority classes and
+request ids are host-side scheduling labels; if any of them flowed into
+a jitted or ``shard_map``'d step function, per-tenant serving could
+recompile per tenant, change padding/batch shapes, or - worst -
+condition device arithmetic on who is asking, breaking the guarantee
+that quotas shape WHEN a tenant's tokens arrive, never WHICH tokens.
+
+The engine asserts this in prose (runtime/README.md); this rule checks
+it.  It finds every function handed to ``jax.jit`` / ``shard_map`` /
+``pmap`` (by name, as a lambda argument, or via a ``@jit``-style
+decorator) and flags any identifier, attribute, keyword or string
+literal inside that mentions ``tenant``, ``priority`` or ``req_id``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    decorator_names,
+    dotted,
+    register,
+)
+
+BANNED_TOKENS = ("tenant", "priority", "req_id")
+
+#: last-component callable names that move a function onto the device
+DEVICE_WRAPPERS = ("jit", "shard_map", "pmap")
+
+
+def _wrapper_calls(tree: ast.AST):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None:
+            continue
+        last = name.rsplit(".", 1)[-1].lstrip("_")
+        if last in DEVICE_WRAPPERS:
+            yield node
+
+
+def device_functions(tree: ast.AST):
+    """Yield ``(display_name, fn_node)`` for every function that is (or
+    is wrapped into) a device-side callable in this module."""
+    candidate_names: Set[str] = set()
+    lambdas: List[ast.Lambda] = []
+    for call in _wrapper_calls(tree):
+        exprs = list(call.args) + [
+            kw.value for kw in call.keywords if kw.arg in (None, "f", "fun")
+        ]
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Name):
+                    candidate_names.add(node.id)
+                elif isinstance(node, ast.Lambda):
+                    lambdas.append(node)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in candidate_names or (
+                decorator_names(node) & set(DEVICE_WRAPPERS)
+            ):
+                yield node.name, node
+    for lam in lambdas:
+        yield "<lambda>", lam
+
+
+def _banned_mentions(fn_node: ast.AST):
+    for node in ast.walk(fn_node):
+        ident = None
+        if isinstance(node, ast.Name):
+            ident = node.id
+        elif isinstance(node, ast.Attribute):
+            ident = node.attr
+        elif isinstance(node, ast.arg):
+            ident = node.arg
+        elif isinstance(node, ast.keyword) and node.arg:
+            ident = node.arg
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            ident = node.value
+        if ident is None:
+            continue
+        low = ident.lower()
+        for tok in BANNED_TOKENS:
+            if tok in low:
+                yield node, ident, tok
+
+
+class DeviceTenantLeakRule(Rule):
+    id = "device-side-tenant-leak"
+    title = "Host-only request label inside a jitted/shard_map'd function"
+    scope = ("src/repro/runtime/*.py",)
+    motivation = (
+        "PR 8: tenancy/priority/req-id are host-side scheduling labels; on "
+        "the device they could recompile per tenant or condition arithmetic "
+        "on who is asking - quotas must shape WHEN tokens arrive, never "
+        "WHICH tokens."
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        findings: List[Finding] = []
+        seen: Set[str] = set()
+        for name, fn in device_functions(sf.tree):
+            for node, ident, tok in _banned_mentions(fn):
+                line = getattr(node, "lineno", getattr(fn, "lineno", 0))
+                dedup = f"{name}:{line}:{ident}"
+                if dedup in seen:
+                    continue
+                seen.add(dedup)
+                findings.append(
+                    Finding(
+                        path=sf.path,
+                        line=line,
+                        rule=self.id,
+                        message=(
+                            f"device function {name!r} mentions host-only "
+                            f"label {ident!r} (matches {tok!r}): tenant/"
+                            "priority/req_id state must stay host-side "
+                            "(PR-8 bit-safety argument)"
+                        ),
+                    )
+                )
+        return findings
+
+
+RULE = register(DeviceTenantLeakRule())

@@ -1,0 +1,111 @@
+"""Rule ``dtype-less-random``: every ``jax.random`` draw names its dtype.
+
+The PR-8 postmortem: five paged==contiguous bitmatch failures traced to
+a dtype-less ``jax.random.normal`` in a test fixture.  Under conftest's
+``jax_enable_x64`` it drew f64 while the paged pool stored f32, so the
+two kernels consumed *different inputs* - f64->f16 single-rounded vs
+f64->f32->f16 double-rounded, ~1e-3 of elements one f16 ulp apart - and
+the bit-identity suite blamed the kernels for a fixture bug.
+
+A dtype-less draw means "whatever ``jax_enable_x64`` says today", which
+is exactly the kind of ambient state a reproducibility suite cannot
+tolerate.  This rule makes the bug unrepresentable: ``normal``,
+``uniform`` and ``truncated_normal`` must pass ``dtype=`` explicitly
+(keyword or the documented positional slot) everywhere in ``src/``,
+``tests/``, ``benchmarks/`` and ``examples/``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    dotted,
+    imported_names,
+    module_aliases,
+    register,
+)
+
+#: function name -> 0-based positional index of its ``dtype`` parameter
+#: (after ``key``): normal(key, shape, dtype), uniform(key, shape, dtype,
+#: minval, maxval), truncated_normal(key, lower, upper, shape, dtype).
+RNG_DTYPE_POS: Dict[str, int] = {
+    "normal": 2,
+    "uniform": 2,
+    "truncated_normal": 4,
+}
+
+
+def _has_explicit_dtype(call: ast.Call, fn_name: str) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return True
+        if kw.arg is None:  # **kwargs splat - can't see inside, stay quiet
+            return True
+    idx = RNG_DTYPE_POS[fn_name]
+    if any(isinstance(a, ast.Starred) for a in call.args[: idx + 1]):
+        return True  # *args splat may carry the dtype - stay quiet
+    return len(call.args) > idx
+
+
+class DtypeLessRandomRule(Rule):
+    id = "dtype-less-random"
+    title = "jax.random draw without an explicit dtype"
+    scope = (
+        "src/*.py",
+        "src/**/*.py",
+        "tests/*.py",
+        "tests/**/*.py",
+        "benchmarks/*.py",
+        "benchmarks/**/*.py",
+        "examples/*.py",
+        "examples/**/*.py",
+    )
+    motivation = (
+        "PR 8: a dtype-less jax.random.normal drew f64 under jax_enable_x64 "
+        "and double-rounded fixture inputs, producing five phantom "
+        "paged==contiguous bitmatch failures."
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        aliases = module_aliases(sf.tree, "jax.random")
+        direct = {
+            local: orig
+            for local, orig in imported_names(sf.tree, "jax.random").items()
+            if orig in RNG_DTYPE_POS
+        }
+        if not aliases and not direct:
+            return []
+        targets = {
+            f"{alias}.{fn}": fn for alias in aliases for fn in RNG_DTYPE_POS
+        }
+        findings: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn_name = None
+            if isinstance(node.func, ast.Attribute):
+                name = dotted(node.func)
+                if name in targets:
+                    fn_name = targets[name]
+            elif isinstance(node.func, ast.Name) and node.func.id in direct:
+                fn_name = direct[node.func.id]
+            if fn_name is None or _has_explicit_dtype(node, fn_name):
+                continue
+            findings.append(
+                self.finding(
+                    sf,
+                    node,
+                    f"jax.random.{fn_name} without an explicit dtype= draws "
+                    "whatever jax_enable_x64 dictates (the PR-8 "
+                    "double-rounding fixture bug); pass dtype explicitly",
+                )
+            )
+        return findings
+
+
+RULE = register(DtypeLessRandomRule())

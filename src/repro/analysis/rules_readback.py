@@ -1,0 +1,99 @@
+"""Rule ``readback-outside-drain``: device readbacks only at drain points.
+
+The async engine (PR 6) overlaps host planning with device execution;
+its whole wall-clock argument collapses if any per-step code path
+synchronizes with the device.  The convention, enforced here across ALL
+of ``runtime/`` (the hand-rolled tests/test_async_guard.py covered only
+``engine.py`` + ``telemetry.py``):
+
+  * device values cross to host ONLY through ``np.asarray`` inside a
+    function annotated ``@_drain_point`` (the marker lives in
+    ``runtime/telemetry.py``);
+  * host-side copies use ``np.array`` (deliberately NOT forbidden);
+  * ``jax.device_get``, ``.block_until_ready()`` and ``.item()`` are
+    synchronous no matter the receiver and are forbidden outside drain
+    points everywhere.
+
+Every module-level function and every direct class method in scope is
+guarded; nested local functions inherit their parent's status.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    has_decorator,
+    iter_functions,
+    register,
+)
+
+#: (qualifier, attribute) readback forms.  ``None`` qualifier matches any
+#: receiver - method calls like ``x.block_until_ready()`` sync no matter
+#: what ``x`` is.
+READBACKS: Tuple[Tuple[str, str], ...] = (
+    ("np", "asarray"),
+    ("jax", "device_get"),
+    (None, "block_until_ready"),
+    (None, "item"),
+)
+
+DRAIN_MARKER = "_drain_point"
+
+
+def readback_calls(fn_node: ast.AST) -> List[Tuple[ast.Call, str]]:
+    """All forbidden readback call sites inside one function body."""
+    hits: List[Tuple[ast.Call, str]] = []
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            continue
+        for qual, attr in READBACKS:
+            if func.attr != attr:
+                continue
+            if qual is None or (
+                isinstance(func.value, ast.Name) and func.value.id == qual
+            ):
+                hits.append((node, f"{qual or '<any>'}.{attr}"))
+    return hits
+
+
+def is_drain_marked(fn_node: ast.AST) -> bool:
+    return has_decorator(fn_node, DRAIN_MARKER)
+
+
+class ReadbackOutsideDrainRule(Rule):
+    id = "readback-outside-drain"
+    title = "Synchronous device readback outside an @_drain_point function"
+    scope = ("src/repro/runtime/*.py",)
+    motivation = (
+        "PR 6: one np.asarray on a step output silently re-serializes host "
+        "and device without failing any functional test; readbacks are only "
+        "legal at annotated drain points."
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        findings: List[Finding] = []
+        for owner, fn in iter_functions(sf.tree):
+            if is_drain_marked(fn):
+                continue
+            for call, form in readback_calls(fn):
+                findings.append(
+                    self.finding(
+                        sf,
+                        call,
+                        f"{owner}.{fn.name}: synchronous readback {form} "
+                        "outside @_drain_point (wrap the readback in a "
+                        "drain point or keep values on device)",
+                    )
+                )
+        return findings
+
+
+RULE = register(ReadbackOutsideDrainRule())

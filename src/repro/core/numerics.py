@@ -96,7 +96,7 @@ def make_resonant_qk(
     k1, k2, k3 = jax.random.split(key, 3)
     t = jnp.arange(d, dtype=jnp.float32)
     wave = jnp.sin(2.0 * jnp.pi * t * 4.0 / d)  # 4 periods across the head dim
-    q = amplitude * wave + jax.random.normal(k1, shape) + bias
+    q = amplitude * wave + jax.random.normal(k1, shape, jnp.float32) + bias
     phase = -1.0 if anti else 1.0
-    k_ = phase * amplitude * wave + jax.random.normal(k2, shape) + bias
+    k_ = phase * amplitude * wave + jax.random.normal(k2, shape, jnp.float32) + bias
     return q.astype(jnp.float32), k_.astype(jnp.float32)

@@ -159,5 +159,8 @@ class FaultTolerantLoop:
     @staticmethod
     def _nan_guard(metrics) -> None:
         loss = metrics.get("loss") if isinstance(metrics, dict) else None
+        # The training loop is synchronous by design: the NaN guard reads
+        # the loss each step at the step boundary, which is its drain.
+        # repro: allow[readback-outside-drain] training-side loss guard, not the serving hot path
         if loss is not None and not np.isfinite(np.asarray(loss)):
             raise FloatingPointError(f"non-finite loss {loss}")

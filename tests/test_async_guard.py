@@ -1,186 +1,170 @@
-"""Static-analysis guard for the async serving pipeline (PR 6, PR 7).
+"""Static-analysis guard for the async serving pipeline (PR 6, PR 7, PR 10).
 
 The async engine's whole point is that the per-step plan/dispatch path
 never synchronizes with the device; one innocent-looking ``np.asarray``
 on a step output would silently serialize host and device again without
-failing any functional test.  This guard parses ``runtime/engine.py``
-and fails if a synchronous readback - ``np.asarray``, ``jax.device_get``,
-``.block_until_ready()``, ``.item()`` - appears in ANY ``ServeEngine`` /
-``EngineReplicaGroup`` method that is not explicitly annotated as a
-drain point (the ``@_drain_point`` marker).
+failing any functional test.
 
-PR 7 extends the same discipline to ``runtime/telemetry.py``: telemetry
-is threaded through every step and every lifecycle hook, so a readback
-hiding in a metrics or tracing code path would serialize the pipeline
-from OUTSIDE the engine.  Every function and method in the telemetry
-module is guarded; the ONLY sanctioned readback is the numerics probe's
-own drain (``NumericsProbe.sample``), which runs at retirement
-boundaries where synchronization is already legal.
+PR 10 rebuilt this guard as a thin wrapper over the reusable analyzer:
+the checking engine now lives in ``repro.analysis`` (rule
+``readback-outside-drain``), scoped to ALL of ``src/repro/runtime/`` -
+not just ``engine.py`` + ``telemetry.py`` as the PR-6/PR-7 hand-rolled
+version was.  This file keeps three things the rule itself cannot
+express:
 
-Module-level oracles (``dense_greedy_reference`` et al.) are host-side
-reference implementations, not the serving hot path, and are exempt.
+  * the repo-level assertion that the runtime tree is clean TODAY,
+  * positive controls (a deliberately bad snippet must still fail, so
+    the matcher can never rot into vacuous silence),
+  * the runtime-marker agreement check (the ``@_drain_point`` functions
+    the AST sees really carry the ``__drain_point__`` attribute on the
+    live objects, and the hot paths are NOT quietly allowlisted).
 """
 
-import ast
-import inspect
+import os
+import textwrap
 
-import repro.runtime.engine as engine_mod
-import repro.runtime.telemetry as telemetry_mod
-
-GUARDED_CLASSES = ("ServeEngine", "EngineReplicaGroup")
-
-#: (qualifier, attribute) readback forms.  A ``None`` qualifier matches
-#: any receiver - method calls like ``x.block_until_ready()`` sync no
-#: matter what ``x`` is.
-READBACKS = (
-    ("np", "asarray"),
-    ("jax", "device_get"),
-    (None, "block_until_ready"),
-    (None, "item"),
+from repro.analysis import SourceFile, analyze, repo_root
+from repro.analysis.rules_readback import (
+    RULE as READBACK_RULE,
+    is_drain_marked,
+    readback_calls,
 )
-# NOTE: np.array(...) is deliberately NOT forbidden - the hot path uses it
-# to double-buffer HOST-side numpy state (page tables, token vectors)
-# before crossing to device, which never touches a device value.  The
-# convention the guard rests on: device arrays cross to host ONLY through
-# np.asarray, and host copies ONLY through np.array.
+
+RUNTIME_DIR = os.path.join(repo_root(), "src", "repro", "runtime")
 
 
-def _readback_calls(fn_node):
-    """Names of forbidden readback calls inside one function body."""
-    hits = []
-    for node in ast.walk(fn_node):
-        if not isinstance(node, ast.Call):
-            continue
-        func = node.func
-        if not isinstance(func, ast.Attribute):
-            continue
-        for qual, attr in READBACKS:
-            if func.attr != attr:
-                continue
-            if qual is None or (
-                isinstance(func.value, ast.Name) and func.value.id == qual
-            ):
-                hits.append(f"{qual or '<any>'}.{attr}")
-    return hits
+def _runtime_scan():
+    return analyze(paths=[RUNTIME_DIR], rules=[READBACK_RULE])
 
 
-def _is_drain_marked(fn_node):
-    for deco in fn_node.decorator_list:
-        name = deco.id if isinstance(deco, ast.Name) else getattr(
-            deco, "attr", None
-        )
-        if name == "_drain_point":
-            return True
-    return False
-
-
-def _engine_methods():
-    tree = ast.parse(inspect.getsource(engine_mod))
-    for cls in ast.walk(tree):
-        if not (isinstance(cls, ast.ClassDef)
-                and cls.name in GUARDED_CLASSES):
-            continue
-        for fn in cls.body:
-            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                yield cls.name, fn
-
-
-def _telemetry_functions():
-    """EVERY function in runtime/telemetry.py - module-level and inside
-    any class (tracers, registries, probe, facade); nothing is exempt."""
-    tree = ast.parse(inspect.getsource(telemetry_mod))
-    for node in ast.walk(tree):
-        if isinstance(node, ast.ClassDef):
-            for fn in node.body:
-                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    yield node.name, fn
-        elif isinstance(node, ast.Module):
-            for fn in node.body:
-                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    yield "<module>", fn
-
-
-def _guarded_methods():
-    yield from _engine_methods()
-    yield from _telemetry_functions()
+# ------------------------------------------------------- the repo is clean --
 
 
 def test_no_readback_outside_drain_points():
-    """No engine method outside the annotated drain points may contain a
-    synchronous device readback - the static invariant that keeps the
+    """No runtime function outside the annotated drain points may contain
+    a synchronous device readback - the static invariant that keeps the
     plan/dispatch hot path (step, _run_prefill, _compose_feed, admission,
-    release) overlap-safe."""
-    offenders = []
-    for cls_name, fn in _engine_methods():
-        hits = _readback_calls(fn)
-        if hits and not _is_drain_marked(fn):
-            offenders.append(f"{cls_name}.{fn.name}: {sorted(set(hits))}")
-    assert not offenders, (
+    release) overlap-safe.  Now enforced over EVERY runtime module."""
+    result = _runtime_scan()
+    assert result.findings == [], (
         "synchronous readback outside @_drain_point (wrap the readback in "
-        "a drain point or keep values on device): " + "; ".join(offenders)
+        "a drain point or keep values on device): "
+        + "; ".join(f"{f.path}:{f.line}: {f.message}" for f in result.findings)
     )
 
 
-def test_no_readback_in_telemetry_outside_probe_drain():
-    """Telemetry runs inside every step and lifecycle hook: any readback
-    outside its one sanctioned drain (``NumericsProbe.sample``) would
-    serialize the async pipeline from outside the engine - and would
-    break the bit-neutrality argument's cost half (telemetry may never
-    add synchronization the engine didn't already have)."""
-    offenders = []
-    for cls_name, fn in _telemetry_functions():
-        hits = _readback_calls(fn)
-        if hits and not _is_drain_marked(fn):
-            offenders.append(
-                f"telemetry.{cls_name}.{fn.name}: {sorted(set(hits))}"
-            )
-    assert not offenders, (
-        "synchronous readback in telemetry outside @_drain_point "
-        "(device-derived metrics are only legal at the probe's sampled "
-        "drain): " + "; ".join(offenders)
-    )
+def test_guard_covers_the_whole_runtime_tree():
+    """The PR-6 guard parsed exactly two files; the analyzer rule must
+    see every runtime module (engine, telemetry, scheduler, caches,
+    spec_decode, fault_tolerance, ...)."""
+    result = _runtime_scan()
+    assert result.files_scanned >= 7, result.files_scanned
+
+
+def test_known_suppressions_are_exactly_the_sanctioned_ones():
+    """Inline suppressions in runtime/ are themselves an inventory: only
+    the training-side loss guard (fault_tolerance.py) is sanctioned.  A
+    new suppression showing up here must be argued in review."""
+    result = _runtime_scan()
+    suppressed = {(f.path, f.rule) for f in result.suppressed}
+    assert suppressed == {
+        ("src/repro/runtime/fault_tolerance.py", "readback-outside-drain")
+    }, suppressed
+
+
+# -------------------------------------------------------- positive control --
+
+_BAD_SNIPPET = textwrap.dedent(
+    """\
+    import numpy as np
+
+    class ServeEngine:
+        def step(self):
+            vals = np.asarray(self._tok_dev)   # forbidden: sync readback
+            return vals
+
+        def peek(self, x):
+            return x.item()
+    """
+)
+
+_GOOD_SNIPPET = textwrap.dedent(
+    """\
+    import numpy as np
+
+    class ServeEngine:
+        @_drain_point
+        def _retire_one(self):
+            return np.asarray(self._tok_dev)
+
+        def _dispatch(self, table):
+            host = np.array(table)             # host copy: allowed
+            return host
+    """
+)
 
 
 def test_guard_actually_detects_readbacks():
-    """Positive control: the matcher must flag the legal readback sites
-    (``_retire_one``'s np.asarray in the engine, ``NumericsProbe.sample``'s
-    in telemetry) - otherwise the guards above could rot into vacuous
-    silence."""
-    found = {
-        fn.name: _readback_calls(fn)
-        for cls_name, fn in _engine_methods()
-        if cls_name == "ServeEngine"
-    }
-    assert any("np.asarray" in h for h in found["_retire_one"])
-    assert _is_drain_marked_by_name("_retire_one")
-    assert _is_drain_marked_by_name("drain")
-    tel = {
-        fn.name: (fn, _readback_calls(fn))
-        for cls_name, fn in _telemetry_functions()
-        if cls_name == "NumericsProbe"
-    }
-    fn, hits = tel["sample"]
-    assert any("np.asarray" in h for h in hits)
-    assert _is_drain_marked(fn)
+    """Positive control: a deliberately bad snippet must fail, a
+    drain-marked one must pass, and the np.array host-copy convention
+    must stay legal."""
+    bad = SourceFile.from_source("src/repro/runtime/engine.py", _BAD_SNIPPET)
+    findings = READBACK_RULE.check(bad)
+    assert len(findings) == 2
+    assert {f.line for f in findings} == {5, 9}
+    assert all(f.rule == "readback-outside-drain" for f in findings)
+
+    good = SourceFile.from_source("src/repro/runtime/engine.py", _GOOD_SNIPPET)
+    assert READBACK_RULE.check(good) == []
 
 
-def _is_drain_marked_by_name(name):
-    for cls_name, fn in _engine_methods():
-        if fn.name == name:
-            return _is_drain_marked(fn)
-    raise AssertionError(f"method {name} not found")
+def test_module_level_functions_are_guarded_too():
+    """The PR-6 guard exempted module-level functions; the analyzer rule
+    does not - a readback in a module-level runtime helper is flagged."""
+    src = "import numpy as np\ndef helper(x):\n    return np.asarray(x)\n"
+    sf = SourceFile.from_source("src/repro/runtime/engine.py", src)
+    assert len(READBACK_RULE.check(sf)) == 1
+
+
+def test_legal_sites_are_visible_to_the_matcher():
+    """The matcher must SEE the sanctioned readbacks (``_retire_one``'s
+    np.asarray in the engine, ``NumericsProbe.sample``'s in telemetry) -
+    otherwise the clean scan above could be vacuous."""
+    import ast
+
+    for rel, owner, fn_name in (
+        ("engine.py", "ServeEngine", "_retire_one"),
+        ("telemetry.py", "NumericsProbe", "sample"),
+    ):
+        with open(os.path.join(RUNTIME_DIR, rel), encoding="utf-8") as f:
+            tree = ast.parse(f.read())
+        fns = {
+            (cls.name, fn.name): fn
+            for cls in ast.walk(tree)
+            if isinstance(cls, ast.ClassDef)
+            for fn in cls.body
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        fn = fns[(owner, fn_name)]
+        assert any(
+            form == "np.asarray" for _, form in readback_calls(fn)
+        ), (rel, fn_name)
+        assert is_drain_marked(fn), (rel, fn_name)
+
+
+# -------------------------------------------------- runtime marker parity --
 
 
 def test_runtime_markers_match_source():
-    """The AST view and the live objects agree: methods the guard treats
-    as drain points actually carry the runtime marker attribute."""
+    """The AST view and the live objects agree: functions the rule treats
+    as drain points actually carry the runtime marker attribute, and the
+    hot paths are NOT quietly allowlisted."""
     from repro.runtime.engine import ServeEngine
     from repro.runtime.telemetry import NumericsProbe, Telemetry
 
     assert getattr(ServeEngine._retire_one, "__drain_point__", False)
     assert getattr(ServeEngine.drain, "__drain_point__", False)
     assert getattr(NumericsProbe.sample, "__drain_point__", False)
-    # the hot paths are NOT quietly allowlisted
     for name in ("step", "_run_prefill", "_compose_feed", "_try_admit"):
         assert not getattr(
             getattr(ServeEngine, name), "__drain_point__", False

@@ -22,7 +22,7 @@ def test_bf16_inputs_convert_to_fp16_inside_pasa():
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 3)
     shape = (1, 2, 256, 64)
-    mk = lambda k: (jax.random.normal(k, shape) * 2 + 10).astype(jnp.bfloat16)
+    mk = lambda k: (jax.random.normal(k, shape, jnp.float32) * 2 + 10).astype(jnp.bfloat16)
     q, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
     out = pasa_attention(q, k, v, beta=0.984497, policy=FP16, block_kv=128)
     assert out.dtype == jnp.float16

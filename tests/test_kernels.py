@@ -91,7 +91,7 @@ def test_kernel_overflow_robustness(rng):
     the fp16 flash baseline NaNs."""
     ks = jax.random.split(rng, 3)
     shape = (1, 2, 256, 128)
-    mk = lambda k: jax.random.uniform(k, shape, minval=29.5, maxval=30.5)
+    mk = lambda k: jax.random.uniform(k, shape, jnp.float32, minval=29.5, maxval=30.5)
     q, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
     bad = K.flash_attention(q, k, v, policy=FP16_FP32, **I)
     good = K.pasa_attention(q, k, v, beta=0.984497, policy=FP16, **I)
@@ -117,8 +117,8 @@ def test_decode_kernel(kv_lens, beta, rng):
     kv_len = jnp.asarray(kv_lens, jnp.int32)
     mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
     q = jax.random.normal(ks[0], (b, kvh, g, d), jnp.float32) + 1.0
-    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d)) + 2.0, 0.0)
-    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d)), 0.0)
+    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d), jnp.float32) + 2.0, 0.0)
+    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d), jnp.float32), 0.0)
     got = K.pasa_decode(
         q, kc, vc, kv_len, beta=beta, policy=FP16, block_kv=128, **I
     )

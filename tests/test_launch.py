@@ -172,9 +172,9 @@ def test_ring_pasa_on_mesh(mesh4):
     from repro.core import F64, make_ring_attention, naive_attention
     from repro.core.numerics import rmse
 
-    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 32)) + 1.0
-    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 32)) + 2.0
-    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 32))
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 32), jnp.float32) + 1.0
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 32), jnp.float32) + 2.0
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 32), jnp.float32)
     gold = naive_attention(q, k, v, dtype=jnp.float64)
     fn = make_ring_attention(
         mesh4, "model", beta=0.984497, policy=F64, block_kv=32
@@ -196,7 +196,7 @@ def test_moe_a2a_equals_gspmd_dispatch(mesh4):
         compute_dtype="float32",
     )
     p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
-    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
     ref = moe.moe_ffn_gspmd(x, p, cfg)
     g_ref = jax.grad(lambda p_: jnp.sum(moe.moe_ffn_gspmd(x, p_, cfg) ** 2))(p)
     set_mesh(mesh4)
@@ -251,7 +251,7 @@ def test_expand_kv_attention_matches_grouped(mesh4):
     cfg = get_config("qwen3-4b").reduced()
     cfg = dataclasses.replace(cfg, compute_dtype="float32")
     p = attn_mod.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
     cfg_on = dataclasses.replace(
         cfg, attention=dataclasses.replace(cfg.attention, expand_kv=True)
     )

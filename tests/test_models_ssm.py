@@ -78,7 +78,7 @@ def test_causal_conv_matches_numpy():
 def test_mamba1_decode_matches_forward():
     cfg = _cfg(1)
     p = ssm.init_mamba1(jax.random.PRNGKey(0), cfg, jnp.float32)
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model), jnp.float32)
     y_full, _ = ssm.mamba1_block(x, p, cfg)
     cache = {k: v[0] for k, v in ssm.mamba1_cache(cfg, 2, jnp.float32).items()}
     ys = []
@@ -93,7 +93,7 @@ def test_mamba1_decode_matches_forward():
 def test_mamba2_decode_matches_forward():
     cfg = _cfg(2)
     p = ssm.init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model), jnp.float32)
     y_full, _ = ssm.mamba2_block(x, p, cfg)
     cache = {
         k: v[0] for k, v in ssm.mamba2_cache(cfg, 1, 2, jnp.float32).items()

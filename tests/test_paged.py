@@ -186,8 +186,8 @@ def test_decode_kernel_accepts_non_multiple_cache_len(rng):
     kv_len = jnp.asarray([300, 77], jnp.int32)
     mask = (jnp.arange(s2) < kv_len[:, None])[:, None, :, None]
     q = jax.random.normal(ks[0], (b, kvh, g, d), jnp.float32) + 1.0
-    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d)) + 2.0, 0.0)
-    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d)), 0.0)
+    kc = jnp.where(mask, jax.random.normal(ks[1], (b, kvh, s2, d), jnp.float32) + 2.0, 0.0)
+    vc = jnp.where(mask, jax.random.normal(ks[2], (b, kvh, s2, d), jnp.float32), 0.0)
     got = K.pasa_decode(
         q, kc, vc, kv_len, beta=BETA, policy=FP16, block_kv=128, **I
     )
@@ -499,7 +499,7 @@ def test_engine_admission_is_conservative(tiny_bundle):
 
 
 def test_gather_pages_roundtrip(rng):
-    pool = jax.random.normal(rng, (5, 4, 6))
+    pool = jax.random.normal(rng, (5, 4, 6), jnp.float32)
     table = jnp.asarray([[3, 1, 0], [2, 4, 0]], jnp.int32)
     out = gather_pages(pool, table)
     assert out.shape == (2, 12, 6)

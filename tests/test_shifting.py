@@ -47,7 +47,7 @@ def test_gemm_shift_equals_algebraic_shift():
 def test_shift_reduces_bias_and_amplitude():
     """Figure 5: shifted K has near-zero mean and smaller range."""
     key = jax.random.PRNGKey(1)
-    k = jax.random.normal(key, (1, 1, 512, 128)) * 2.0 + 30.0
+    k = jax.random.normal(key, (1, 1, 512, 128), jnp.float32) * 2.0 + 30.0
     m = shifting.shifting_matrix(128, 128, 0.984497, dtype=jnp.float32)
     ks = shifting.shift_kv_blocks(k, m, 128)
     assert abs(float(ks.mean())) < 0.1

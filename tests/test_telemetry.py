@@ -536,7 +536,7 @@ def test_probe_seq_bias_shift_magnitude():
         "seq_bias", jax.random.PRNGKey(1),
         q_shape=(1, kvh, 4, d), kv_shape=(1, kvh, s, d),
     )
-    k_plain = jax.random.normal(jax.random.PRNGKey(2), (1, kvh, s, d))
+    k_plain = jax.random.normal(jax.random.PRNGKey(2), (1, kvh, s, d), jnp.float32)
     pool_b, pv, _ = _pages_from_k(k_bias)
     pool_p, _, _ = _pages_from_k(k_plain)
     probe = NumericsProbe(every=1, max_pages=8)
@@ -550,7 +550,7 @@ def test_probe_masks_stale_tail_rows():
     """Rows past a page's valid length are recycled-page debris by
     design: poisoning them with Inf must not perturb the reading."""
     kvh, d, s, page = 2, 32, 64, 8
-    k = jax.random.normal(jax.random.PRNGKey(3), (1, kvh, s, d))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, kvh, s, d), jnp.float32)
     pool, pages_valid, _ = _pages_from_k(k)
     clean = NumericsProbe(every=1).sample(
         pool, [(i, 3) for i, _ in pages_valid], n_kv_heads=kvh

@@ -1,6 +1,14 @@
 #!/usr/bin/env bash
 # CI gate (PR 8): the checks a green commit must pass, in one script.
 #
+#   0. Static bit-safety invariant analysis (PR 10): the five
+#      repro.analysis rules (readback-outside-drain, dtype-less-random,
+#      narrow-accumulation, device-side-tenant-leak,
+#      hidden-nondeterminism) with a FAILURE BUDGET OF ZERO against the
+#      committed (empty) baseline.  Runs before pytest because it is
+#      ~100x cheaper and catches the statically-detectable half of the
+#      historical bit-identity regressions before a single test builds
+#      a model.  Rule catalog: src/repro/analysis/README.md.
 #   1. Tier-1 test suite with a per-test wall-clock timeout
 #      (tools/ci_timeout.py) and a pinned KNOWN-FAILURE BUDGET OF ZERO:
 #      every test that collects must pass.  The 16 kernel-tolerance
@@ -28,6 +36,9 @@ cd "$(dirname "$0")/.."
 
 PER_TEST_TIMEOUT="${PER_TEST_TIMEOUT:-2750}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[ci] static bit-safety invariant analysis (failure budget 0)"
+python -m repro.analysis --json > /dev/null
 
 echo "[ci] tier-1 suite (per-test timeout ${PER_TEST_TIMEOUT}s, failure budget 0)"
 python -m pytest -q \

@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Thin entry point for the bit-safety invariant analyzer.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` - this wrapper
+just bootstraps ``sys.path`` so it works from a bare checkout.  See
+src/repro/analysis/README.md for the rule catalog.
+"""
+
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"),
+)
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
